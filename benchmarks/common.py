@@ -1,0 +1,53 @@
+"""Shared benchmark plumbing: scaling knob, timing, CSV output contract.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (repo contract)
+plus a human-readable table, and returns a list of dict rows for run.py.
+
+``SCALE`` (env REPRO_BENCH_SCALE, default 1.0) multiplies training budgets:
+1.0 reproduces every qualitative claim in minutes on CPU; ~50x approaches
+paper-scale budgets on real hardware.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Callable, Dict, List
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.join(REPO, "src") not in sys.path:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+ART = os.path.join(REPO, "artifacts", "bench")
+
+
+def scaled(n: int, lo: int = 1) -> int:
+    return max(int(n * SCALE), lo)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall time per call (seconds); blocks on jax outputs."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_rows(bench: str, rows: List[Dict]) -> str:
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, f"{bench}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    return path

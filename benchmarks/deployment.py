@@ -1,0 +1,112 @@
+"""Paper Table 5 + Figure 6: quantized policy deployment.
+
+The paper deploys navigation policies (3-layer MLPs: 64 / 256 /
+4096-512-1024) on a RasPi-3b and reports int8 speedup (up to 18.8x — mostly
+from fitting in RAM) and 4x memory reduction.
+
+TPU/offline adaptation: we train the same three policies on AirNav (the
+Air-Learning-style env, paper Appendix D), then measure:
+  * success rate fp32 vs int8 (paper's accuracy columns),
+  * parameter-memory footprint fp32 vs int8-packed (exact 4x-ish),
+  * inference latency fp32 vs the int8 path (weights packed int8,
+    int8 GEMM with int32 accumulation — kernels/int8_matmul; on this CPU
+    host the reported number is the XLA-CPU latency; the Pallas kernel is
+    the TPU hot path).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common as C
+
+POLICIES = {          # paper Table 5
+    "policy_i": (64, 64, 64),
+    "policy_ii": (256, 256, 256),
+    "policy_iii": (4096, 512, 1024),
+}
+
+
+def _int8_infer_fn(net, packed_params, n_hidden):
+    """MLP forward where every dense is the int8 GEMM path."""
+    from repro.core import affine
+    from repro.core.ptq import PackedTensor
+    from repro.kernels import ref as kref
+
+    @jax.jit
+    def infer(obs):
+        x = obs
+        for i in range(n_hidden + 1):
+            name = f"fc{i}" if i < n_hidden else "out"
+            layer = packed_params[name]
+            w: PackedTensor = layer["w"]
+            n = w.codes.shape[1]
+            xq, xp = affine.quantize_to_int(x, 8)
+            # per-tensor weight quant: broadcast scalar delta/zero per column
+            y = kref.int8_matmul_ref(
+                xq, w.codes, xp.delta,
+                jnp.broadcast_to(w.delta.reshape(-1), (n,)),
+                xp.zero_point,
+                jnp.broadcast_to(w.zero_point.reshape(-1), (n,)))
+            y = y + layer["b"]
+            x = jax.nn.relu(y) if i < n_hidden else y
+        return jnp.argmax(x, -1)
+
+    return infer
+
+
+def run(iterations: int = 250) -> List[Dict]:
+    from repro.core import ptq
+    from repro.core.qconfig import QuantConfig
+    from repro.rl import loops
+
+    rows = []
+    for name, widths in POLICIES.items():
+        res = loops.train("ppo", "airnav", iterations=C.scaled(iterations),
+                          net_kwargs={"hidden": widths}, seed=0)
+        key = jax.random.PRNGKey(123)
+        fp32_r = loops.eval_policy(res, QuantConfig.none(), key, episodes=16)
+        int8_r = loops.eval_policy(res, QuantConfig.ptq_int(8), key,
+                                   episodes=16)
+
+        # memory footprint (paper Fig 6: 4x)
+        fp32_bytes = ptq.tree_nbytes(res.state.params)
+        packed = ptq.ptq_pack(res.state.params, QuantConfig.ptq_int(8))
+        int8_bytes = ptq.tree_nbytes(packed)
+
+        # latency: single-observation inference (deployment regime)
+        obs = jnp.zeros((1, 9))
+        from repro.core.fake_quant import NullQATContext
+        ctx = NullQATContext()
+
+        @jax.jit
+        def fp32_infer(obs, params=res.state.params):
+            return jnp.argmax(res.net.apply(ctx, params, obs), -1)
+
+        n_hidden = len(widths)
+        int8_infer = _int8_infer_fn(res.net, packed, n_hidden)
+        t_fp32 = C.time_fn(fp32_infer, obs, warmup=2, iters=10)
+        t_int8 = C.time_fn(int8_infer, obs, warmup=2, iters=10)
+
+        row = {"policy": name, "widths": widths,
+               "fp32_reward": fp32_r, "int8_reward": int8_r,
+               "fp32_mbytes": fp32_bytes / 1e6,
+               "int8_mbytes": int8_bytes / 1e6,
+               "mem_reduction": fp32_bytes / int8_bytes,
+               "t_fp32_us": t_fp32 * 1e6, "t_int8_us": t_int8 * 1e6,
+               "speedup": t_fp32 / t_int8}
+        rows.append(row)
+        C.emit(f"deploy/{name}/fp32", t_fp32 * 1e6,
+               f"reward={fp32_r:.0f};mem={fp32_bytes / 1e6:.2f}MB")
+        C.emit(f"deploy/{name}/int8", t_int8 * 1e6,
+               f"reward={int8_r:.0f};mem={int8_bytes / 1e6:.2f}MB"
+               f";mem_reduction={row['mem_reduction']:.2f}x"
+               f";speedup={row['speedup']:.2f}x")
+    C.save_rows("deployment", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,146 @@
+"""Paper Table 4 + Figure 5: mixed/half-precision training speedup.
+
+Trains the paper's Policy A / B / C conv networks (Table 10) with DQN-style
+updates in fp32 vs mixed precision (bf16 compute + fp32 master — the TPU
+analogue of the paper's fp16+loss-scale; fp16 is also measured) and compares
+per-step wall time and convergence sanity.
+
+Paper claim shape: small nets may not speed up (conversion overhead), large
+nets gain (paper: 0.87x / 1.04x / 1.61x for A/B/C). On this CPU container
+the absolute ratios differ, but the trend with model size is the check.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common as C
+
+
+# Paper Table 10 architectures. The default benchmark uses 1/4-width
+# variants (this container is a single CPU core; Policy C at paper width is
+# ~1 TFLOP/step) — the claim under test is the *trend with model size*.
+# Set REPRO_MP_PAPER_SIZES=1 for the exact paper widths.
+import os as _os
+if _os.environ.get("REPRO_MP_PAPER_SIZES", "0") == "1":
+    POLICIES = {
+        "policy_a": ((128, 128, 128), 128),
+        "policy_b": ((512, 512, 512), 512),
+        "policy_c": ((1024, 1024, 1024), 2048),
+    }
+else:
+    POLICIES = {
+        "policy_a": ((32, 32, 32), 32),
+        "policy_b": ((128, 128, 128), 128),
+        "policy_c": ((256, 256, 256), 512),
+    }
+
+
+def _step_fn(net, mp_cfg, batch):
+    from repro.core import mixed_precision as mp
+    from repro.core.fake_quant import NullQATContext
+    from repro.optim.adam import AdamConfig, adam_init, adam_update
+
+    adam_cfg = AdamConfig(lr=1e-4)
+    ctx = NullQATContext()
+    ls = mp.DynamicLossScale.init() if mp_cfg.dynamic_loss_scale else None
+
+    def loss_fn(params):
+        p_c = mp.to_compute(params, mp_cfg)
+        obs = batch["obs"].astype(jnp.dtype(mp_cfg.compute_dtype))
+        q = net.apply(ctx, p_c, obs)
+        q_sel = jnp.take_along_axis(q, batch["action"][:, None], 1)[:, 0]
+        loss = jnp.mean(jnp.square(
+            q_sel.astype(jnp.float32) - batch["target"]))
+        return mp.scale_loss(loss, ls)
+
+    @jax.jit
+    def step(params, opt):
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads = mp.unscale_grads(grads, ls)
+        params, opt, _ = adam_update(grads, opt, params, adam_cfg)
+        unscaled = loss / ls.scale if ls is not None else loss
+        return params, opt, unscaled
+
+    return step, adam_cfg
+
+
+def run(batch: int = 16, grid: int = 10) -> List[Dict]:
+    from repro.core.qconfig import MixedPrecisionConfig
+    from repro.rl.networks import make_network
+
+    rows = []
+    key = jax.random.PRNGKey(0)
+    batch_data = {
+        "obs": jax.random.normal(key, (batch, grid, grid, 1)),
+        "action": jax.random.randint(key, (batch,), 0, 3),
+        "target": jax.random.normal(key, (batch,)),
+    }
+    for name, (filters, fc) in POLICIES.items():
+        net = make_network((grid, grid, 1), 3, conv_filters=filters,
+                           fc_width=fc)
+        times = {}
+        for mp_name, mp_cfg in [("fp32", MixedPrecisionConfig.fp32()),
+                                ("bf16", MixedPrecisionConfig.bf16()),
+                                ("fp16", MixedPrecisionConfig.fp16())]:
+            from repro.optim.adam import AdamConfig, adam_init
+            params = net.init(jax.random.PRNGKey(1))
+            opt = adam_init(params, AdamConfig(lr=1e-4))
+            step, _ = _step_fn(net, mp_cfg, batch_data)
+            t = C.time_fn(lambda: step(params, opt), warmup=1, iters=3)
+            times[mp_name] = t
+            C.emit(f"mixed_precision/{name}/{mp_name}", t * 1e6,
+                   f"step_time={t * 1e3:.1f}ms")
+        speedup_bf16 = times["fp32"] / times["bf16"]
+        speedup_fp16 = times["fp32"] / times["fp16"]
+        rows.append({"policy": name, **{f"t_{k}": v for k, v in
+                                        times.items()},
+                     "speedup_bf16": speedup_bf16,
+                     "speedup_fp16": speedup_fp16})
+        C.emit(f"mixed_precision/{name}/speedup", 0.0,
+               f"bf16={speedup_bf16:.2f}x;fp16={speedup_fp16:.2f}x")
+    C.save_rows("mixed_precision", rows)
+    return rows
+
+
+def convergence_check(steps: int = 150, batch: int = 32, grid: int = 10
+                      ) -> Dict:
+    """Figure 5's claim: mixed precision converges like full precision.
+
+    Fits the Policy-A conv net to a fixed Q-regression target under fp32 /
+    bf16 / fp16(+dynamic loss scale) and compares final losses.
+    """
+    from repro.core.qconfig import MixedPrecisionConfig
+    from repro.optim.adam import AdamConfig, adam_init
+    from repro.rl.networks import make_network
+
+    key = jax.random.PRNGKey(0)
+    batch_data = {
+        "obs": jax.random.normal(key, (batch, grid, grid, 1)),
+        "action": jax.random.randint(key, (batch,), 0, 3),
+        "target": jax.random.normal(jax.random.PRNGKey(5), (batch,)),
+    }
+    net = make_network((grid, grid, 1), 3, conv_filters=(32, 32, 32),
+                       fc_width=64)
+    out = {}
+    for label, mp_cfg in [("fp32", MixedPrecisionConfig.fp32()),
+                          ("bf16", MixedPrecisionConfig.bf16()),
+                          ("fp16", MixedPrecisionConfig.fp16())]:
+        params = net.init(jax.random.PRNGKey(1))
+        opt = adam_init(params, AdamConfig(lr=1e-4))
+        step, _ = _step_fn(net, mp_cfg, batch_data)
+        loss = None
+        for _ in range(C.scaled(steps)):
+            params, opt, loss = step(params, opt)
+        out[label] = float(loss)
+        C.emit(f"mixed_precision/convergence/{label}", 0.0,
+               f"final_loss={float(loss):.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()
+    convergence_check()

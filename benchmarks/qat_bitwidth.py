@@ -1,0 +1,61 @@
+"""Paper Figure 2 + Appendix E: QAT bitwidth sweep + PTQ sweet spot.
+
+For one (algo, env): train QAT policies at 2/4/6/8 bits (with quantization
+delay = half of training) and compare against fp32 and 8-bit PTQ; also sweep
+PTQ 2..8 bits on the fp32 model (Appendix E's sweet-spot curve).
+
+Claims checked:
+  * QAT holds the fp32 baseline down to ~5-6 bits, degrading below.
+  * QAT >= PTQ at matched bitwidths (esp. low bits).
+  * PTQ reward vs bits has a task-dependent sweet spot (not monotone).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+
+from benchmarks import common as C
+
+
+def run(algo: str = "ppo", env: str = "cartpole", iterations: int = 200
+        ) -> List[Dict]:
+    from repro.core.qconfig import QuantConfig
+    from repro.rl import loops
+
+    iters = C.scaled(iterations)
+    fp = loops.train(algo, env, iterations=iters, seed=0)
+    key = jax.random.PRNGKey(77)
+    fp32_r = loops.eval_policy(fp, QuantConfig.none(), key)
+    rows = [{"mode": "fp32", "bits": 32, "reward": fp32_r}]
+    C.emit(f"qat_bw/{algo}/{env}/fp32", 0.0, f"reward={fp32_r:.1f}")
+
+    # PTQ sweep (Appendix E)
+    for bits in (8, 6, 4, 2):
+        r = loops.eval_policy(fp, QuantConfig.ptq_int(bits), key)
+        rows.append({"mode": "ptq", "bits": bits, "reward": r})
+        C.emit(f"qat_bw/{algo}/{env}/ptq{bits}", 0.0, f"reward={r:.1f}")
+
+    # QAT sweep (Fig 2)
+    for bits in (8, 6, 4, 2):
+        res = loops.quarl_qat(algo, env, bits, iterations=iters,
+                              quant_delay_frac=0.5, seed=0)
+        rows.append({"mode": "qat", "bits": bits,
+                     "reward": res.quant_reward, "E_pct": res.error_pct})
+        C.emit(f"qat_bw/{algo}/{env}/qat{bits}", 0.0,
+               f"reward={res.quant_reward:.1f};E={res.error_pct:+.1f}%")
+
+    # headline claims
+    qat8 = next(r for r in rows if r["mode"] == "qat" and r["bits"] == 8)
+    ptq4 = next(r for r in rows if r["mode"] == "ptq" and r["bits"] == 4)
+    qat4 = next(r for r in rows if r["mode"] == "qat" and r["bits"] == 4)
+    C.emit(f"qat_bw/{algo}/{env}/claim_qat8_holds_fp32", 0.0,
+           f"{qat8['reward']:.1f}_vs_{fp32_r:.1f}")
+    C.emit(f"qat_bw/{algo}/{env}/claim_qat4_beats_ptq4", 0.0,
+           f"{qat4['reward']:.1f}_vs_{ptq4['reward']:.1f}")
+    C.save_rows(f"qat_bitwidth_{algo}_{env}", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

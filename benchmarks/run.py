@@ -1,0 +1,78 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. REPRO_BENCH_SCALE (default 1.0)
+multiplies the training budgets; REPRO_BENCH_FAST=1 runs a reduced matrix
+for CI-style runs.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+
+
+def main() -> None:
+    t0 = time.time()
+    print("benchmark,us_per_call,derived")
+    jobs = []
+
+    from benchmarks import (deployment, exploration, mixed_precision,
+                            ptq_rewards, qat_bitwidth, roofline,
+                            weight_distribution)
+
+    if FAST:
+        jobs = [
+            ("table2_ptq", lambda: ptq_rewards.run(
+                matrix=[("ppo", "cartpole", 120), ("ppo", "airnav", 100),
+                        ("a2c", "cartpole", 600), ("dqn", "cartpole", 500),
+                        ("ddpg", "pendulum", 200),
+                        ("ddpg", "mountaincar_continuous", 150)])),
+            ("fig2_qat_bitwidth", lambda: qat_bitwidth.run(
+                "ppo", "cartpole", iterations=120)),
+            ("table3_weight_distribution", lambda: weight_distribution.run(
+                cases=[("dqn", "cartpole", 500), ("dqn", "catch", 60),
+                       ("ppo", "cartpole", 120), ("a2c", "cartpole", 600)])),
+            ("fig1_exploration", lambda: exploration.run(
+                "a2c", "cartpole", iterations=400)),
+            ("table4_mixed_precision", lambda: mixed_precision.run()),
+            ("fig5_mp_convergence",
+             lambda: mixed_precision.convergence_check(steps=60)),
+            ("table5_deployment", lambda: deployment.run(iterations=100)),
+        ]
+    else:
+        jobs = [
+            ("table2_ptq", ptq_rewards.run),
+            ("fig2_qat_bitwidth", qat_bitwidth.run),
+            ("table3_weight_distribution", weight_distribution.run),
+            ("fig1_exploration", exploration.run),
+            ("table4_mixed_precision", mixed_precision.run),
+            ("fig5_mp_convergence", mixed_precision.convergence_check),
+            ("table5_deployment", deployment.run),
+        ]
+    jobs.append(("roofline", roofline.main))
+
+    failures = 0
+    for name, fn in jobs:
+        print(f"\n### {name}")
+        t = time.time()
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0.0,FAILED")
+        print(f"### {name} done in {time.time() - t:.0f}s")
+    print(f"\nall benchmarks done in {time.time() - t0:.0f}s, "
+          f"{failures} failures")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: the QuaRL result in two minutes on CPU.
+
+Trains a PPO CartPole policy, applies the paper's post-training quantization
+(Algorithm 1) at fp16/int8/int4, and prints the reward table — the
+miniature version of paper Table 2.
+
+Run:  PYTHONPATH=src python examples/quickstart.py [--iterations 150]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import jax  # noqa: E402
+
+from repro.core.qconfig import QuantConfig  # noqa: E402
+from repro.rl import loops  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iterations", type=int, default=150)
+    args = ap.parse_args()
+
+    print("training fp32 PPO on CartPole...")
+    res = loops.train("ppo", "cartpole", iterations=args.iterations,
+                      record_every=max(args.iterations // 5, 1))
+    print("  eval rewards over training:", [f"{r:.0f}" for r in res.rewards])
+
+    key = jax.random.PRNGKey(0)
+    print(f"\n{'quantizer':12s} {'reward':>8s} {'E%':>8s}")
+    fp32 = loops.eval_policy(res, QuantConfig.none(), key)
+    print(f"{'fp32':12s} {fp32:8.1f} {'-':>8s}")
+    for q in [QuantConfig.ptq_fp16(), QuantConfig.ptq_int(8),
+              QuantConfig.ptq_int(4)]:
+        r = loops.eval_policy(res, q, key)
+        e = 100.0 * (fp32 - r) / max(abs(fp32), 1e-9)
+        print(f"{q.label():12s} {r:8.1f} {e:+8.1f}")
+    print("\nExpected (paper Sec 4): int8/fp16 within a few % of fp32 "
+          "(sometimes better); int4 degrades.")
+
+
+if __name__ == "__main__":
+    main()

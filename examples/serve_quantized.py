@@ -1,0 +1,96 @@
+"""Serve a small model with batched requests, int8 weights + int8 KV cache.
+
+The paper's deployment case study (Sec. 5) applied to an LM: weights are
+post-training-quantized to int8 (Algorithm 1), the decode KV cache is stored
+as int8 codes + per-token scales (beyond-paper feature), and a batch of
+requests decodes greedily through the same serve_step the dry-run lowers.
+
+  PYTHONPATH=src python examples/serve_quantized.py --batch 4 --new-tokens 24
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import base as cfgs  # noqa: E402
+from repro.core import ptq  # noqa: E402
+from repro.core.qconfig import QuantConfig  # noqa: E402
+from repro.models import transformer  # noqa: E402
+
+
+def generate(cfg, params, tokens, total_len, batch, enc=None):
+    caches = transformer.init_caches(cfg, batch, total_len,
+                                     dtype=jnp.float32)
+
+    @jax.jit
+    def step(params, caches, tok, pos):
+        logits, caches = transformer.decode_step(cfg, params, tok, caches,
+                                                 pos, encoder_out=enc)
+        return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), caches
+
+    out, tok = [], tokens[:, :1]
+    prompt_len = tokens.shape[1]
+    for pos in range(total_len - 1):
+        nxt, caches = step(params, caches, tok, jnp.asarray(pos))
+        if pos + 1 < prompt_len:
+            tok = tokens[:, pos + 1:pos + 2]
+        else:
+            tok = nxt[:, None]
+            out.append(nxt)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = cfgs.get_reduced(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(cfg, key)
+    tokens = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                cfg.vocab)
+    total = args.prompt_len + args.new_tokens
+
+    # fp32 reference
+    t0 = time.time()
+    ref = generate(cfg, params, tokens, total, args.batch)
+    t_ref = time.time() - t0
+
+    # int8 weights (simulated int math) + int8 KV cache
+    qcfg = dataclasses.replace(
+        cfg, quant=dataclasses.replace(QuantConfig.ptq_int(8),
+                                       int8_kv_cache=True))
+    qparams = ptq.ptq_simulate(params, qcfg.quant)
+    packed = ptq.ptq_pack(params, QuantConfig.ptq_int(8))
+    t0 = time.time()
+    out = generate(qcfg, qparams, tokens, total, args.batch)
+    t_q = time.time() - t0
+
+    agree = sum(bool(jnp.all(a == b)) for a, b in zip(ref, out))
+    fp_mb = ptq.tree_nbytes(params) / 1e6
+    q_mb = ptq.tree_nbytes(packed) / 1e6
+    print(f"arch {cfg.name}: {args.batch} requests x {args.new_tokens} new "
+          f"tokens")
+    print(f"  weights: {fp_mb:.2f} MB fp32 -> {q_mb:.2f} MB int8 "
+          f"({fp_mb/q_mb:.2f}x smaller); KV cache int8 (2x smaller)")
+    print(f"  decode wall time: fp32 {t_ref:.2f}s, int8 {t_q:.2f}s (CPU)")
+    print(f"  greedy tokens agree on {agree}/{len(ref)} steps "
+          f"(int8 noise flips some argmaxes — the paper's 'small noise' "
+          f"regime)")
+    print("  int8 sequence 0:", [int(t[0]) for t in out][:12])
+
+
+if __name__ == "__main__":
+    main()

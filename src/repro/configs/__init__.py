@@ -1,0 +1,6 @@
+"""Architecture configs (one module per assigned architecture)."""
+from repro.configs import base
+from repro.configs.base import ArchConfig, InputShape, INPUT_SHAPES, get, get_reduced, names
+
+__all__ = ["base", "ArchConfig", "InputShape", "INPUT_SHAPES", "get",
+           "get_reduced", "names"]

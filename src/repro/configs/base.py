@@ -1,0 +1,183 @@
+"""Architecture + input-shape registry.
+
+Every assigned architecture gets one ``src/repro/configs/<id>.py`` exporting
+``CONFIG`` (the exact assigned dimensions, source cited) and the registry maps
+``--arch <id>`` to it. ``reduced()`` derives the smoke-test variant
+(2 layers, d_model <= 512, <= 4 experts) of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core.qconfig import QuantConfig, MixedPrecisionConfig
+
+# Block kinds usable in a layer pattern.
+ATTN = "attn"            # global self-attention
+ATTN_LOCAL = "attn_local"  # sliding-window self-attention
+MOE = "moe"              # attention + MoE ffn
+MOE_LOCAL = "moe_local"  # sliding-window attention + MoE ffn
+RGLRU = "rglru"          # RG-LRU recurrent block (griffin)
+MLSTM = "mlstm"          # xLSTM matrix-memory block
+SLSTM = "slstm"          # xLSTM scalar-memory block
+CROSS = "cross"          # self-attn + cross-attn to modality embeddings
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    source: str                      # citation for the exact dims
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None   # default d_model // n_heads
+    pattern: Tuple[str, ...] = (ATTN,)   # repeating block-kind unit
+    # MoE
+    n_experts: int = 0
+    moe_top_k: int = 2
+    capacity_factor: float = 1.25
+    # attention flavor
+    window: Optional[int] = None         # sliding-window size for *_local
+    softcap: Optional[float] = None      # gemma2 logit softcap
+    final_softcap: Optional[float] = None
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    norm: str = "rms"                    # rms | layer
+    activation: str = "silu"             # silu (SwiGLU) | gelu (GeGLU)
+    # enc-dec / multimodal frontends (STUB: precomputed embeddings)
+    encoder_layers: int = 0              # whisper audio encoder
+    encoder_seq: int = 0                 # frames/patches provided by the stub
+    cross_attn: bool = False             # consume encoder/vision embeddings
+    # distribution
+    sharding: str = "tp"                 # tp | fsdp
+    remat: bool = True                   # activation checkpoint per block
+    scan_layers: bool = True
+    # training
+    quant: QuantConfig = QuantConfig.none()
+    mp: MixedPrecisionConfig = MixedPrecisionConfig.bf16()
+    optimizer_8bit: bool = False         # beyond-paper: 8-bit Adam moments
+    grad_accum: int = 1
+    # decode
+    long_context_window: Optional[int] = None  # SWA-variant for long_500k
+    supports_long_500k: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def pattern_repeats(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def pattern_remainder(self) -> Tuple[str, ...]:
+        return tuple(self.pattern[: self.n_layers % len(self.pattern)])
+
+    def n_params(self) -> int:
+        """Analytic parameter count (for 6ND model-flops in the roofline)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        hd, nh, nkv = self.hd, self.n_heads, self.n_kv_heads
+        total = v * d * (1 if self.tie_embeddings else 2)
+        kinds = (list(self.pattern) * self.pattern_repeats
+                 + list(self.pattern_remainder))
+        for kind in kinds:
+            attn = d * nh * hd + 2 * d * nkv * hd + nh * hd * d
+            if kind in (ATTN, ATTN_LOCAL):
+                total += attn + 3 * d * f
+            elif kind in (MOE, MOE_LOCAL):
+                total += attn + self.n_experts * 3 * d * f + d * self.n_experts
+            elif kind == RGLRU:
+                total += 3 * d * (2 * d) + 2 * (2 * d)  # griffin block approx
+            elif kind in (MLSTM, SLSTM):
+                total += 8 * d * d
+            elif kind == CROSS:
+                total += 2 * attn + 3 * d * f
+        total += self.encoder_layers * (4 * d * d + 3 * d * f)
+        return total
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top-k of the experts)."""
+        if self.n_experts == 0:
+            return self.n_params()
+        d, f = self.d_model, self.d_ff
+        dense_total = self.n_params()
+        kinds = (list(self.pattern) * self.pattern_repeats
+                 + list(self.pattern_remainder))
+        n_moe = sum(1 for k in kinds if k in (MOE, MOE_LOCAL))
+        inactive = n_moe * (self.n_experts - self.moe_top_k) * 3 * d * f
+        return dense_total - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+_REGISTRY: Dict[str, "ArchEntry"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchEntry:
+    config: ArchConfig
+    reduced: ArchConfig
+
+
+def register(config: ArchConfig, reduced: ArchConfig) -> ArchConfig:
+    _REGISTRY[config.name] = ArchEntry(config, reduced)
+    return config
+
+
+def get(name: str) -> ArchConfig:
+    _ensure_loaded()
+    return _REGISTRY[name].config
+
+
+def get_reduced(name: str) -> ArchConfig:
+    _ensure_loaded()
+    return _REGISTRY[name].reduced
+
+
+def names() -> Sequence[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+_ARCH_MODULES = [
+    "h2o_danube_1_8b", "xlstm_125m", "stablelm_12b", "whisper_tiny",
+    "mixtral_8x7b", "gemma2_9b", "codeqwen1_5_7b", "llama_3_2_vision_90b",
+    "recurrentgemma_2b", "grok_1_314b", "quarl_atari",
+]
+
+_loaded = False
+
+
+def _ensure_loaded():
+    global _loaded
+    if _loaded:
+        return
+    _loaded = True
+    import importlib
+    for mod in _ARCH_MODULES:
+        try:
+            importlib.import_module(f"repro.configs.{mod}")
+        except ModuleNotFoundError:  # pragma: no cover - during bring-up
+            pass

@@ -1,0 +1,28 @@
+"""gemma2-9b — alternating local/global attention with logit soft-capping.
+
+[arXiv:2408.00118] 42L, d_model 3584, 16 heads (GQA kv=8, head_dim 256),
+d_ff 14336, vocab 256000, window 4096 on local layers, attn softcap 50,
+final softcap 30, tied embeddings. long_500k runs natively: local layers
+keep ring caches; the 21 global layers hold the full 500k cache (decode is
+O(S)/step), sharded over the data axis.
+"""
+from repro.configs import base
+from repro.configs.base import ArchConfig, ATTN, ATTN_LOCAL
+
+CONFIG = ArchConfig(
+    name="gemma2-9b", family="dense", source="arXiv:2408.00118",
+    n_layers=42, d_model=3584, n_heads=16, n_kv_heads=8, d_ff=14336,
+    vocab=256000, head_dim=256, pattern=(ATTN_LOCAL, ATTN), window=4096,
+    softcap=50.0, final_softcap=30.0, tie_embeddings=True,
+    sharding="fsdp", supports_long_500k=True,
+    grad_accum=2,  # memory-term fit (EXPERIMENTS.md §Perf)
+)
+
+REDUCED = ArchConfig(
+    name="gemma2-9b-reduced", family="dense", source=CONFIG.source,
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+    vocab=512, head_dim=32, pattern=(ATTN_LOCAL, ATTN), window=32,
+    softcap=50.0, final_softcap=30.0, tie_embeddings=True, sharding="fsdp",
+)
+
+base.register(CONFIG, REDUCED)

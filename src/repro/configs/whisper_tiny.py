@@ -1,0 +1,28 @@
+"""whisper-tiny — encoder-decoder audio transformer (conv frontend STUB).
+
+[arXiv:2212.04356] 4L enc + 4L dec, d_model 384, 6 heads, d_ff 1536,
+vocab 51865. The mel+conv frontend is stubbed: input_specs() provides
+precomputed frame embeddings (B, 1500, 384); the transformer encoder runs
+over them and the decoder cross-attends (per the assignment carve-out).
+LayerNorm + GeLU per the original. vocab 51865 is not divisible by the
+model axis -> vocab stays replicated (see partition_specs).
+"""
+from repro.configs import base
+from repro.configs.base import ArchConfig, CROSS
+
+CONFIG = ArchConfig(
+    name="whisper-tiny", family="audio", source="arXiv:2212.04356",
+    n_layers=4, d_model=384, n_heads=6, n_kv_heads=6, d_ff=1536,
+    vocab=51865, pattern=(CROSS,), norm="layer", activation="gelu",
+    encoder_layers=4, encoder_seq=1500, cross_attn=True, rope_theta=10000.0,
+    sharding="tp", supports_long_500k=False,  # full-attn decoder
+)
+
+REDUCED = ArchConfig(
+    name="whisper-tiny-reduced", family="audio", source=CONFIG.source,
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_ff=256,
+    vocab=512, pattern=(CROSS,), norm="layer", activation="gelu",
+    encoder_layers=2, encoder_seq=16, cross_attn=True, sharding="tp",
+)
+
+base.register(CONFIG, REDUCED)

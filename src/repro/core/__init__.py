@@ -1,0 +1,17 @@
+"""repro.core — the paper's contribution: quantization for RL/LM systems.
+
+Public surface:
+  QuantConfig / MixedPrecisionConfig   configuration
+  affine.*                             paper-faithful uniform affine quantizer
+  fake_quant.*                         QAT: STE + observers + quant delay
+  ptq.*                                post-training quantization of pytrees
+  mixed_precision.*                    bf16/fp16 compute, fp32 master, loss scale
+  metrics.*                            paper's analysis metrics
+"""
+from repro.core.qconfig import QuantConfig, QuantMode, MixedPrecisionConfig
+from repro.core import affine, fake_quant, ptq, mixed_precision, metrics
+
+__all__ = [
+    "QuantConfig", "QuantMode", "MixedPrecisionConfig",
+    "affine", "fake_quant", "ptq", "mixed_precision", "metrics",
+]

@@ -1,0 +1,122 @@
+"""Paper-faithful uniform affine quantization (QuaRL Sec. 3.1).
+
+The paper defines, for an n-bit quantizer over a tensor W:
+
+    delta = (|min(W, 0)| + |max(W, 0)|) / 2**n
+    z     = round(-min(W, 0) / delta)
+    Q(W)  = round(W / delta) + z
+    D(q)  = delta * (q - z)
+
+``min(W,0)``/``max(W,0)`` extend the range to always include zero so that zero
+is exactly representable (required so that e.g. zero-padding and ReLU zeros are
+exact). Quantized codes live in [0, 2**n - 1].
+
+Per-tensor quantization is used for fully connected layers; per-axis
+(output-channel) quantization for convolutions — both per the paper.
+
+Faithfulness note: the paper divides the range by 2**n (not 2**n - 1), so the
+top of the range maps to code 2**n, which clips to 2**n - 1 — edge values can
+lose up to ~1.5*delta (vs 0.5*delta interior). We reproduce this exactly; the
+property tests encode the 1.5*delta bound.
+
+Everything here is pure jnp so it can serve as the oracle for the Pallas
+kernels in ``repro.kernels`` and be fused inside jitted training steps.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AffineParams(NamedTuple):
+    """Quantizer parameters. ``delta`` and ``zero_point`` broadcast against W."""
+    delta: jnp.ndarray       # step size (>0)
+    zero_point: jnp.ndarray  # integer offset (stored as float for jax friendliness)
+    bits: int
+
+
+def _range_including_zero(w: jnp.ndarray, axes: Optional[Sequence[int]]
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(min(W,0), max(W,0)) reduced over ``axes`` (None = all axes)."""
+    wmin = jnp.minimum(jnp.min(w, axis=axes, keepdims=axes is not None), 0.0)
+    wmax = jnp.maximum(jnp.max(w, axis=axes, keepdims=axes is not None), 0.0)
+    return wmin, wmax
+
+
+def affine_params_from_range(wmin: jnp.ndarray, wmax: jnp.ndarray,
+                             bits: int) -> AffineParams:
+    """Paper's delta/z from a (min,max) range. Range is first extended to 0."""
+    wmin = jnp.minimum(wmin, 0.0)
+    wmax = jnp.maximum(wmax, 0.0)
+    n_levels = 2.0 ** bits
+    delta = (jnp.abs(wmin) + jnp.abs(wmax)) / n_levels
+    # Degenerate all-zero tensor: delta == 0. Use 1.0 so Q(0)=z, D(z)=0 exactly.
+    delta = jnp.where(delta == 0.0, 1.0, delta)
+    zero_point = jnp.round(-wmin / delta)
+    return AffineParams(delta=delta, zero_point=zero_point, bits=bits)
+
+
+def compute_affine_params(w: jnp.ndarray, bits: int,
+                          axis: Optional[int] = None) -> AffineParams:
+    """Per-tensor (axis=None) or per-axis (quantization axis kept) params."""
+    if axis is None:
+        wmin, wmax = _range_including_zero(w, None)
+    else:
+        axis = axis % w.ndim
+        reduce_axes = tuple(i for i in range(w.ndim) if i != axis)
+        wmin, wmax = _range_including_zero(w, reduce_axes)
+    return affine_params_from_range(wmin, wmax, bits)
+
+
+def quantize(w: jnp.ndarray, params: AffineParams) -> jnp.ndarray:
+    """W -> integer codes in [0, 2**bits - 1] (returned as float dtype of W)."""
+    q = jnp.round(w / params.delta) + params.zero_point
+    return jnp.clip(q, 0.0, 2.0 ** params.bits - 1.0)
+
+
+def dequantize(q: jnp.ndarray, params: AffineParams) -> jnp.ndarray:
+    return params.delta * (q - params.zero_point)
+
+
+def quantize_dequantize(w: jnp.ndarray, params: AffineParams) -> jnp.ndarray:
+    """The paper's Q followed by D — the "fake quantization" value map."""
+    return dequantize(quantize(w, params), params)
+
+
+def ptq_tensor(w: jnp.ndarray, bits: int, axis: Optional[int] = None
+               ) -> jnp.ndarray:
+    """One-shot post-training quantize-dequantize of a tensor (Algorithm 1)."""
+    return quantize_dequantize(w, compute_affine_params(w, bits, axis))
+
+
+def quantize_to_int(w: jnp.ndarray, bits: int, axis: Optional[int] = None
+                    ) -> Tuple[jnp.ndarray, AffineParams]:
+    """Quantize and pack into the narrowest integer dtype (deployment path)."""
+    params = compute_affine_params(w, bits, axis)
+    q = quantize(w, params)
+    dtype = jnp.int8 if bits <= 8 else jnp.int16
+    # int8 holds [0,255]? No — shift to signed storage: store q - 2**(bits-1).
+    offset = 2.0 ** (bits - 1)
+    q_signed = (q - offset).astype(dtype)
+    shifted = AffineParams(delta=params.delta,
+                           zero_point=params.zero_point - offset,
+                           bits=bits)
+    return q_signed, shifted
+
+
+def dequantize_from_int(q: jnp.ndarray, params: AffineParams,
+                        dtype: jnp.dtype = jnp.float32) -> jnp.ndarray:
+    return (params.delta * (q.astype(dtype) - params.zero_point)).astype(dtype)
+
+
+def fp16_quantize(w: jnp.ndarray) -> jnp.ndarray:
+    """IEEE-754 fp16 round-trip (paper's Q_fp16)."""
+    return w.astype(jnp.float16).astype(w.dtype)
+
+
+def quantization_error(w: jnp.ndarray, bits: int,
+                       axis: Optional[int] = None) -> jnp.ndarray:
+    """Mean absolute quantization error — used by the weight-distribution study."""
+    return jnp.mean(jnp.abs(w - ptq_tensor(w, bits, axis)))

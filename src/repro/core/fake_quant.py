@@ -1,0 +1,230 @@
+"""Fake quantization with the straight-through estimator + range observers.
+
+Implements the paper's QAT machinery (Sec. 3.2 / Algorithm 2):
+
+* ``fake_quant(w, params)`` — quantize-dequantize in the forward pass; identity
+  gradient in the backward pass (straight-through estimator, Hinton 2012).
+* ``Observer`` state — running min/max (optionally EMA-smoothed) monitored
+  during the first ``quant_delay`` updates; afterwards the captured ranges are
+  frozen and used for quantization.
+* ``QuantTensorFn`` — the function a layer applies to its weights/activations;
+  it reads a per-tensor observer slot out of a ``QATCollection`` pytree that is
+  threaded through the model as mutable-state-as-value.
+
+The observer collection is a flat dict ``name -> ObserverState`` living inside
+the train state, so the whole QAT schedule (delay, monitoring, freezing) is a
+pure function of (params, qat_state, step) and jit/pjit-compatible:
+``enabled = step >= quant_delay`` is computed with lax.select so one compiled
+program covers both phases.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import affine
+from repro.core.qconfig import QuantConfig, QuantMode
+
+
+class ObserverState(NamedTuple):
+    """Running range of one tensor. Scalar min/max (per-tensor quantization)."""
+    vmin: jnp.ndarray  # f32 scalar
+    vmax: jnp.ndarray  # f32 scalar
+    initialized: jnp.ndarray  # bool scalar
+
+    @staticmethod
+    def init() -> "ObserverState":
+        return ObserverState(vmin=jnp.zeros((), jnp.float32),
+                             vmax=jnp.zeros((), jnp.float32),
+                             initialized=jnp.zeros((), jnp.bool_))
+
+
+def observe(state: ObserverState, x: jnp.ndarray, ema_decay: float,
+            monitoring: jnp.ndarray) -> ObserverState:
+    """Update running range with tensor ``x`` while ``monitoring`` is True.
+
+    During monitoring the paper's tf.contrib observers track moving min/max; we
+    use an EMA of the batch min/max (first batch initializes directly). Once
+    monitoring ends (step >= quant_delay) the state is frozen (returned as-is).
+    """
+    bmin = jnp.minimum(jnp.min(x), 0.0).astype(jnp.float32)
+    bmax = jnp.maximum(jnp.max(x), 0.0).astype(jnp.float32)
+    d = ema_decay
+    new_min = jnp.where(state.initialized, d * state.vmin + (1 - d) * bmin, bmin)
+    new_max = jnp.where(state.initialized, d * state.vmax + (1 - d) * bmax, bmax)
+    upd = ObserverState(vmin=new_min, vmax=new_max,
+                        initialized=jnp.ones((), jnp.bool_))
+    return jax.tree_util.tree_map(
+        lambda new, old: jnp.where(monitoring, new, old), upd, state)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through estimator
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _ste_quantize_dequantize(w: jnp.ndarray, delta: jnp.ndarray,
+                             zero_point: jnp.ndarray, bits: jnp.ndarray
+                             ) -> jnp.ndarray:
+    q = jnp.round(w / delta) + zero_point
+    q = jnp.clip(q, 0.0, 2.0 ** bits - 1.0)
+    return (delta * (q - zero_point)).astype(w.dtype)
+
+
+def _ste_fwd(w, delta, zero_point, bits):
+    out = _ste_quantize_dequantize(w, delta, zero_point, bits)
+    return out, (delta, zero_point, bits)
+
+
+def _ste_bwd(res, g):
+    # Paper: "the gradient is passed through the quantization function
+    # unchanged" — identity w.r.t. w, no gradient to quantizer params.
+    delta, zero_point, bits = res
+    return (g.astype(g.dtype), jnp.zeros_like(delta),
+            jnp.zeros_like(zero_point), jnp.zeros_like(bits))
+
+
+_ste_quantize_dequantize.defvjp(_ste_fwd, _ste_bwd)
+
+
+def fake_quant(w: jnp.ndarray, vmin: jnp.ndarray, vmax: jnp.ndarray,
+               bits: int) -> jnp.ndarray:
+    """Paper's Q_n^train with STE, using monitored range (vmin, vmax)."""
+    params = affine.affine_params_from_range(vmin, vmax, bits)
+    return _ste_quantize_dequantize(
+        w.astype(jnp.float32),
+        params.delta.astype(jnp.float32),
+        params.zero_point.astype(jnp.float32),
+        jnp.asarray(bits, jnp.float32)).astype(w.dtype)
+
+
+def fake_quant_self_range(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """STE fake quant with the tensor's own instantaneous range.
+
+    Used for weights (the paper recomputes weight ranges from the live weights;
+    the monitored/frozen ranges matter mostly for activations) and for
+    evaluation-time PTQ-with-gradient experiments.
+    """
+    wmin = jnp.minimum(jnp.min(w), 0.0)
+    wmax = jnp.maximum(jnp.max(w), 0.0)
+    return fake_quant(w, wmin, wmax, bits)
+
+
+# ---------------------------------------------------------------------------
+# QAT collection — observers threaded through the model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class QATContext:
+    """Mutable-during-trace context collecting observer reads/writes.
+
+    A model function runs under a ``QATContext``; every quantized tensor site
+    calls ``ctx.activation(name, x)`` / ``ctx.weight(name, w)``. The context
+    reads old observer state from ``collection`` and records updates in
+    ``updates``; the trainer merges them back into the train state.
+
+    ``enabled`` / ``monitoring`` are traced booleans implementing the paper's
+    quantization delay:
+      step <  quant_delay : monitoring=True,  enabled=False  (full precision)
+      step >= quant_delay : monitoring=False, enabled=True   (frozen ranges)
+    """
+    config: QuantConfig
+    collection: Dict[str, ObserverState]
+    step: jnp.ndarray
+    updates: Dict[str, ObserverState] = dataclasses.field(default_factory=dict)
+
+    @property
+    def monitoring(self) -> jnp.ndarray:
+        return self.step < self.config.quant_delay
+
+    @property
+    def enabled(self) -> jnp.ndarray:
+        return self.step >= self.config.quant_delay
+
+    def _slot(self, name: str) -> ObserverState:
+        if name in self.updates:
+            return self.updates[name]
+        return self.collection.get(name, ObserverState.init())
+
+    def weight(self, name: str, w: jnp.ndarray) -> jnp.ndarray:
+        """Fake-quantize a weight tensor (per-tensor, self-range)."""
+        if not self.config.is_qat:
+            return w
+        fq = fake_quant_self_range(w, self.config.bits)
+        return jnp.where(self.enabled, fq, w)
+
+    def activation(self, name: str, x: jnp.ndarray) -> jnp.ndarray:
+        """Observe + fake-quantize an activation tensor (monitored range)."""
+        if not (self.config.is_qat and self.config.quantize_activations):
+            return x
+        st = self._slot(name)
+        st = observe(st, jax.lax.stop_gradient(x), self.config.ema_decay,
+                     self.monitoring)
+        self.updates[name] = st
+        fq = fake_quant(x, st.vmin, st.vmax, self.config.bits)
+        return jnp.where(self.enabled & st.initialized, fq, x)
+
+    def merged_collection(self) -> Dict[str, ObserverState]:
+        out = dict(self.collection)
+        out.update(self.updates)
+        return out
+
+
+class NullQATContext:
+    """No-op context used when quantization is disabled (keeps call sites clean)."""
+    config = QuantConfig.none()
+
+    def weight(self, name: str, w: jnp.ndarray) -> jnp.ndarray:
+        return w
+
+    def activation(self, name: str, x: jnp.ndarray) -> jnp.ndarray:
+        return x
+
+    def merged_collection(self) -> Dict[str, ObserverState]:
+        return {}
+
+
+def make_context(config: QuantConfig,
+                 collection: Optional[Dict[str, ObserverState]],
+                 step) -> QATContext | NullQATContext:
+    if not config.is_qat:
+        return NullQATContext()
+    return QATContext(config=config, collection=collection or {},
+                      step=jnp.asarray(step))
+
+
+class NameRecorder:
+    """Trace-time context that records every activation-site name.
+
+    Used to pre-build the observer collection before the first jitted
+    update — scan carries need a fixed pytree structure, so all observer
+    slots must exist up front.
+    """
+
+    def __init__(self, config: QuantConfig):
+        self.config = config
+        self.names: set = set()
+
+    def weight(self, name: str, w):
+        return w
+
+    def activation(self, name: str, x):
+        self.names.add(name)
+        return x
+
+    def merged_collection(self) -> Dict[str, ObserverState]:
+        return {}
+
+    def collection(self) -> Dict[str, ObserverState]:
+        return {name: ObserverState.init() for name in sorted(self.names)}
+
+
+def discover_observers(config: QuantConfig, trace_fn) -> Dict[str,
+                                                              ObserverState]:
+    """Run ``trace_fn(recorder_ctx)`` under eval_shape; return fresh slots."""
+    rec = NameRecorder(config)
+    jax.eval_shape(lambda: (trace_fn(rec), ())[1])
+    return rec.collection()

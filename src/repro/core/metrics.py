@@ -1,0 +1,71 @@
+"""Analysis metrics used by the paper's studies.
+
+* Weight-distribution statistics (Fig. 3/4: distribution *width* predicts
+  post-training-quantization error).
+* Action-distribution variance (Fig. 1: exploration proxy under QAT).
+* Relative reward error E = (fp32_reward - quant_reward) / |fp32_reward|
+  (Tables 2, 5-8; negative error = quantized model outperformed fp32).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import affine
+
+PyTree = Any
+
+
+def weight_distribution_stats(params: PyTree) -> Dict[str, float]:
+    """Width statistics of the concatenated weight distribution."""
+    leaves = [np.asarray(x).ravel() for x in jax.tree_util.tree_leaves(params)
+              if hasattr(x, "ndim") and getattr(x, "ndim", 0) >= 2
+              and jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)]
+    if not leaves:
+        return {"range": 0.0, "std": 0.0, "min": 0.0, "max": 0.0, "p999": 0.0}
+    w = np.concatenate(leaves)
+    return {
+        "range": float(w.max() - w.min()),
+        "std": float(w.std()),
+        "min": float(w.min()),
+        "max": float(w.max()),
+        "p999": float(np.quantile(np.abs(w), 0.999)),
+    }
+
+
+def mean_int8_weight_error(params: PyTree, bits: int = 8) -> float:
+    """Mean abs affine-quantization error across weight tensors (Fig. 3)."""
+    errs = []
+    for x in jax.tree_util.tree_leaves(params):
+        if hasattr(x, "ndim") and getattr(x, "ndim", 0) >= 2 and \
+                jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
+            errs.append(float(affine.quantization_error(jnp.asarray(x), bits)))
+    return float(np.mean(errs)) if errs else 0.0
+
+
+def relative_error(fp32_reward: float, quant_reward: float) -> float:
+    """Paper's E_% — positive means the quantized policy is worse."""
+    denom = abs(fp32_reward) if fp32_reward != 0 else 1.0
+    return 100.0 * (fp32_reward - quant_reward) / denom
+
+
+def action_distribution_variance(logits: jnp.ndarray) -> jnp.ndarray:
+    """Variance of the softmax action distribution (exploration proxy, Fig. 1).
+
+    Lower variance over actions == flatter distribution == more exploration,
+    per the paper's argument.
+    """
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.var(probs, axis=-1).mean()
+
+
+def ema(values, decay: float = 0.95):
+    """Paper smooths action-variance curves with factor .95."""
+    out, acc = [], None
+    for v in values:
+        acc = v if acc is None else decay * acc + (1 - decay) * v
+        out.append(acc)
+    return out

@@ -1,0 +1,81 @@
+"""Mixed/half-precision training (QuaRL Sec. 5 case study; Micikevicius 2017).
+
+Master weights stay fp32; the forward/backward pass runs in a compute dtype
+(bf16 on TPU; fp16 with loss scaling for paper fidelity). ``DynamicLossScale``
+implements the standard doubling/halving schedule: halve on non-finite grads
+and skip the update, double every ``growth_interval`` clean steps.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qconfig import MixedPrecisionConfig
+
+PyTree = Any
+
+
+def cast_floating(tree: PyTree, dtype) -> PyTree:
+    def one(x):
+        if isinstance(x, (jnp.ndarray, jax.Array)) and jnp.issubdtype(
+                x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(one, tree)
+
+
+def to_compute(params: PyTree, mp: MixedPrecisionConfig) -> PyTree:
+    if not mp.enabled:
+        return params
+    return cast_floating(params, jnp.dtype(mp.compute_dtype))
+
+
+class DynamicLossScale(NamedTuple):
+    scale: jnp.ndarray          # f32 scalar
+    good_steps: jnp.ndarray     # i32 scalar
+
+    @staticmethod
+    def init(initial: float = 2.0 ** 15) -> "DynamicLossScale":
+        return DynamicLossScale(jnp.asarray(initial, jnp.float32),
+                                jnp.zeros((), jnp.int32))
+
+
+def all_finite(tree: PyTree) -> jnp.ndarray:
+    leaves = [jnp.all(jnp.isfinite(x)) for x in jax.tree_util.tree_leaves(tree)
+              if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)]
+    if not leaves:
+        return jnp.ones((), jnp.bool_)
+    return jnp.stack(leaves).all()
+
+
+def scale_loss(loss: jnp.ndarray, ls: DynamicLossScale | None) -> jnp.ndarray:
+    return loss if ls is None else loss * ls.scale.astype(loss.dtype)
+
+
+def unscale_grads(grads: PyTree, ls: DynamicLossScale | None) -> PyTree:
+    if ls is None:
+        return grads
+    inv = (1.0 / ls.scale)
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * inv).astype(g.dtype), grads)
+
+
+def update_loss_scale(ls: DynamicLossScale, grads_finite: jnp.ndarray,
+                      growth_interval: int = 2000,
+                      factor: float = 2.0,
+                      min_scale: float = 1.0) -> DynamicLossScale:
+    grew = ls.good_steps + 1 >= growth_interval
+    new_scale = jnp.where(
+        grads_finite,
+        jnp.where(grew, ls.scale * factor, ls.scale),
+        jnp.maximum(ls.scale / factor, min_scale))
+    new_good = jnp.where(grads_finite & ~grew, ls.good_steps + 1, 0)
+    return DynamicLossScale(new_scale, new_good)
+
+
+def select_tree(pred: jnp.ndarray, on_true: PyTree, on_false: PyTree) -> PyTree:
+    """Elementwise lax.select over matching pytrees (skip-update-on-NaN)."""
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(pred, a, b), on_true, on_false)

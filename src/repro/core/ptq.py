@@ -1,0 +1,119 @@
+"""Post-training quantization over parameter pytrees (QuaRL Algorithm 1).
+
+Two forms are provided:
+
+* ``ptq_simulate(params, config)`` — quantize-dequantize every weight matrix in
+  place (values change, dtypes don't). This is what the paper evaluates: the
+  policy is run in float math on quantization-error-injected weights.
+* ``ptq_pack(params, config)`` / ``ptq_unpack`` — the deployment form: weights
+  stored as int8 (+ per-tensor/per-axis scales), 4x smaller than fp32. The
+  int8 matmul kernel in ``repro.kernels`` consumes these directly.
+
+Which leaves quantize: any float array with ndim >= 2 is treated as a weight
+(dense kernels, conv kernels, embeddings); biases/norm scales (ndim <= 1) stay
+full precision, matching the paper's per-layer weight quantization. Conv
+kernels (ndim == 4) get per-axis quantization over the output-channel axis.
+A ``predicate(path, leaf)`` hook lets callers exclude e.g. MoE routers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import affine
+from repro.core.qconfig import QuantConfig, QuantMode
+
+PyTree = Any
+Predicate = Callable[[Tuple[Any, ...], jnp.ndarray], bool]
+
+
+def _is_weight(path: Tuple[Any, ...], leaf: Any) -> bool:
+    return (isinstance(leaf, (jnp.ndarray, jax.Array))
+            and jnp.issubdtype(leaf.dtype, jnp.floating)
+            and leaf.ndim >= 2)
+
+
+def _axis_for(leaf: jnp.ndarray, config: QuantConfig) -> Optional[int]:
+    # Per-axis (output-channel) quantization for conv kernels (HWIO -> axis -1),
+    # per-tensor for everything else, per the paper.
+    if config.per_axis_conv and leaf.ndim == 4:
+        return leaf.ndim - 1
+    return None
+
+
+def ptq_simulate(params: PyTree, config: QuantConfig,
+                 predicate: Predicate = _is_weight) -> PyTree:
+    """Quantize-dequantize all weights (Algorithm 1's Q applied to M)."""
+    if not config.is_ptq:
+        return params
+
+    def one(path, leaf):
+        if not predicate(path, leaf):
+            return leaf
+        if config.mode == QuantMode.PTQ_FP16:
+            return affine.fp16_quantize(leaf)
+        return affine.ptq_tensor(leaf, config.bits, _axis_for(leaf, config))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+class PackedTensor(NamedTuple):
+    """An int-packed weight: codes + affine params (deployment format)."""
+    codes: jnp.ndarray        # int8/int16
+    delta: jnp.ndarray
+    zero_point: jnp.ndarray
+    bits: int
+
+    def dequantize(self, dtype=jnp.float32) -> jnp.ndarray:
+        p = affine.AffineParams(self.delta, self.zero_point, self.bits)
+        return affine.dequantize_from_int(self.codes, p, dtype)
+
+    @property
+    def nbytes(self) -> int:
+        return (self.codes.size * self.codes.dtype.itemsize
+                + self.delta.size * 4 + self.zero_point.size * 4)
+
+
+jax.tree_util.register_pytree_node(
+    PackedTensor,
+    lambda p: ((p.codes, p.delta, p.zero_point), p.bits),
+    lambda bits, xs: PackedTensor(xs[0], xs[1], xs[2], bits))
+
+
+def ptq_pack(params: PyTree, config: QuantConfig,
+             predicate: Predicate = _is_weight) -> PyTree:
+    """Pack weights into int storage; non-weights pass through unchanged."""
+    assert config.mode == QuantMode.PTQ_INT, "packing is for int PTQ"
+
+    def one(path, leaf):
+        if not predicate(path, leaf):
+            return leaf
+        codes, p = affine.quantize_to_int(leaf, config.bits,
+                                          _axis_for(leaf, config))
+        return PackedTensor(codes, p.delta, p.zero_point, config.bits)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def ptq_unpack(packed: PyTree, dtype=jnp.float32) -> PyTree:
+    def one(leaf):
+        if isinstance(leaf, PackedTensor):
+            return leaf.dequantize(dtype)
+        return leaf
+    return jax.tree_util.tree_map(
+        one, packed, is_leaf=lambda x: isinstance(x, PackedTensor))
+
+
+def tree_nbytes(params: PyTree) -> int:
+    """Parameter-memory footprint (paper's 4x memory-reduction claim)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, PackedTensor)):
+        if isinstance(leaf, PackedTensor):
+            total += leaf.nbytes
+        else:
+            total += leaf.size * leaf.dtype.itemsize
+    return total

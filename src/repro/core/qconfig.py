@@ -1,0 +1,157 @@
+"""Quantization configuration objects shared across the framework.
+
+The vocabulary follows the paper (QuaRL):
+
+* ``none``      — full precision (fp32 or the mixed-precision compute dtype).
+* ``ptq_fp16``  — post-training quantization to IEEE fp16 (Sec. 3.1).
+* ``ptq_int<n>``— post-training uniform affine quantization to ``n`` bits.
+* ``qat<n>``    — quantization-aware training at ``n`` bits with the
+  straight-through estimator and a quantization delay (Sec. 3.2).
+
+``QuantConfig`` is a frozen dataclass so it can live inside jitted closures and
+model configs hashed by jax.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+
+class QuantMode(enum.Enum):
+    NONE = "none"
+    PTQ_FP16 = "ptq_fp16"
+    PTQ_INT = "ptq_int"
+    QAT = "qat"
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return self.value
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Configuration for the paper's quantizers.
+
+    Attributes:
+      mode: which quantization regime is active.
+      bits: integer bitwidth for PTQ_INT / QAT (paper sweeps 2..8).
+      quant_delay: number of *training updates* run in full precision while the
+        min/max observers monitor ranges (paper: ``quant_delay`` in
+        tf.contrib.quantize; 500k env steps for Atari DQN). After the delay the
+        monitored ranges freeze and fake quantization turns on.
+      ema_decay: decay for the exponential-moving-average min/max observers used
+        during the monitoring phase.
+      quantize_activations: QAT quantizes activations as well as weights
+        (paper Sec. 3.2); PTQ quantizes weights only (Sec. 3.1).
+      per_axis_conv: per-output-channel quantization for convolution kernels
+        (paper: "per-axis" for conv, per-tensor for fully connected).
+      quantize_router: whether MoE router / gating layers are quantized
+        (default False: small, numerically sensitive).
+      int8_kv_cache: beyond-paper — store decode KV cache as int8 + scales.
+    """
+
+    mode: QuantMode = QuantMode.NONE
+    bits: int = 8
+    quant_delay: int = 0
+    ema_decay: float = 0.999
+    quantize_activations: bool = True
+    per_axis_conv: bool = True
+    quantize_router: bool = False
+    int8_kv_cache: bool = False
+
+    # ---- constructors -----------------------------------------------------
+    @staticmethod
+    def none() -> "QuantConfig":
+        return QuantConfig(mode=QuantMode.NONE)
+
+    @staticmethod
+    def ptq_fp16() -> "QuantConfig":
+        return QuantConfig(mode=QuantMode.PTQ_FP16, quantize_activations=False)
+
+    @staticmethod
+    def ptq_int(bits: int = 8) -> "QuantConfig":
+        return QuantConfig(mode=QuantMode.PTQ_INT, bits=bits,
+                           quantize_activations=False)
+
+    @staticmethod
+    def qat(bits: int = 8, quant_delay: int = 0,
+            quantize_activations: bool = True) -> "QuantConfig":
+        return QuantConfig(mode=QuantMode.QAT, bits=bits,
+                           quant_delay=quant_delay,
+                           quantize_activations=quantize_activations)
+
+    @staticmethod
+    def parse(spec: str) -> "QuantConfig":
+        """Parse a CLI spec: none | ptq_fp16 | ptq_int8 | ptq_int4 | qat8 | qat4:delay=1000."""
+        spec = spec.strip().lower()
+        if spec in ("none", "fp32", "full"):
+            return QuantConfig.none()
+        if spec in ("ptq_fp16", "fp16"):
+            return QuantConfig.ptq_fp16()
+        if spec.startswith("ptq_int"):
+            return QuantConfig.ptq_int(int(spec[len("ptq_int"):]))
+        if spec.startswith("qat"):
+            body = spec[len("qat"):]
+            delay = 0
+            if ":" in body:
+                body, opts = body.split(":", 1)
+                for kv in opts.split(","):
+                    k, v = kv.split("=")
+                    if k == "delay":
+                        delay = int(v)
+            return QuantConfig.qat(int(body), quant_delay=delay)
+        raise ValueError(f"unknown quant spec: {spec!r}")
+
+    # ---- predicates --------------------------------------------------------
+    @property
+    def is_qat(self) -> bool:
+        return self.mode == QuantMode.QAT
+
+    @property
+    def is_ptq(self) -> bool:
+        return self.mode in (QuantMode.PTQ_FP16, QuantMode.PTQ_INT)
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != QuantMode.NONE
+
+    def label(self) -> str:
+        if self.mode == QuantMode.NONE:
+            return "fp32"
+        if self.mode == QuantMode.PTQ_FP16:
+            return "ptq_fp16"
+        if self.mode == QuantMode.PTQ_INT:
+            return f"ptq_int{self.bits}"
+        return f"qat{self.bits}"
+
+
+@dataclasses.dataclass(frozen=True)
+class MixedPrecisionConfig:
+    """Mixed/half-precision training policy (paper Sec. 5, Micikevicius et al.).
+
+    ``compute_dtype`` is used for activations/matmuls, ``param_dtype`` is the
+    master-weight dtype, loss scaling guards fp16 gradient underflow (bf16 does
+    not need it; it is kept for paper fidelity with fp16).
+    """
+
+    compute_dtype: str = "float32"   # "bfloat16" | "float16" | "float32"
+    param_dtype: str = "float32"
+    loss_scale: Optional[float] = None     # static scale; None = no scaling
+    dynamic_loss_scale: bool = False       # dynamic scaling overrides static
+
+    @property
+    def enabled(self) -> bool:
+        return self.compute_dtype != self.param_dtype
+
+    @staticmethod
+    def fp32() -> "MixedPrecisionConfig":
+        return MixedPrecisionConfig()
+
+    @staticmethod
+    def bf16() -> "MixedPrecisionConfig":
+        return MixedPrecisionConfig(compute_dtype="bfloat16")
+
+    @staticmethod
+    def fp16() -> "MixedPrecisionConfig":
+        return MixedPrecisionConfig(compute_dtype="float16",
+                                    dynamic_loss_scale=True)

@@ -1,0 +1,5 @@
+"""Data pipeline: synthetic token streams + sharded host->device batching."""
+from repro.data.synthetic import SyntheticLMDataset, make_lm_batch
+from repro.data.pipeline import ShardedBatcher
+
+__all__ = ["SyntheticLMDataset", "make_lm_batch", "ShardedBatcher"]

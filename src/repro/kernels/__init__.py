@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the framework compute hot spots.
+
+Layout per kernel: ``<name>.py`` holds the ``pl.pallas_call`` + BlockSpec
+implementation, ``ops.py`` the jit dispatching wrapper, ``ref.py`` the
+pure-jnp oracle the tests assert against.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: blockwise online-softmax (flash) attention.
+
+Needed by the prefill_32k / long_500k shapes: dense S×T score materialization
+at 32k is ~2 GB per head — far beyond the ~16 MB v5e VMEM — so attention is
+computed in (block_q × block_kv) tiles with the streaming softmax recurrence,
+keeping the working set (q tile, k/v tile, accumulator, m/l statistics) in
+VMEM. Supports causal masking, sliding windows (h2o-danube / mixtral /
+gemma2-local / recurrentgemma-local) and gemma2's tanh logit soft-capping.
+
+Grid: (num_q_blocks, num_kv_blocks), kv innermost; the (m, l, acc) softmax
+state lives in VMEM scratch across kv iterations. Softmax statistics are fp32
+regardless of io dtype. Block sizes default to (256, 512): with d_head=128,
+q-tile 256×128 f32 (128 KiB) + kv tiles 512×128×2 (512 KiB) + acc (128 KiB)
+comfortably fit VMEM while keeping the MXU shapes multiples of (8, 128).
+
+One (seq, head_dim) problem per call; the ops.py wrapper vmaps over
+batch × heads and handles GQA head-group broadcasting.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  softcap: Optional[float], seq_q: int, seq_kv: int,
+                  block_q: int, block_kv: int, n_kv: int):
+    qi = pl.program_id(0)
+    kj = pl.program_id(1)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)             # (bq, d)
+    k = k_ref[...].astype(jnp.float32)             # (bkv, d)
+    v = v_ref[...].astype(jnp.float32)             # (bkv, d)
+
+    # Zero padded kv-tail rows (pallas pads OOB reads with an unspecified
+    # value — NaN in interpret mode — and 0 * NaN would poison the output).
+    kv_valid = (kj * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_kv, 1), 0)) < seq_kv
+    k = jnp.where(kv_valid, k, 0.0)
+    v = jnp.where(kv_valid, v, 0.0)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    # Absolute positions; query positions are aligned to the END of the kv
+    # axis (seq_kv - seq_q offset) so the same kernel serves decode.
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0) + (seq_kv - seq_q)
+    k_pos = kj * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+    mask = k_pos < seq_kv  # guard padding of the last kv block
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                             # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                          # (bq, bkv)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)             # fully-masked rows -> 0
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           *, causal: bool = True,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           scale: Optional[float] = None,
+                           block_q: int = 256, block_kv: int = 512,
+                           interpret: bool = False) -> jnp.ndarray:
+    """Single-head attention: q (S, D), k/v (T, D) -> (S, D)."""
+    seq_q, d = q.shape
+    seq_kv = k.shape[0]
+    scale = float(scale if scale is not None else 1.0 / (d ** 0.5))
+    bq = min(block_q, seq_q)
+    bkv = min(block_kv, seq_kv)
+    n_q = pl.cdiv(seq_q, bq)
+    n_kv = pl.cdiv(seq_kv, bkv)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, seq_q=seq_q, seq_kv=seq_kv,
+        block_q=bq, block_kv=bkv, n_kv=n_kv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bkv, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bkv, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((seq_q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # m — running max
+            pltpu.VMEM((bq, 1), jnp.float32),    # l — running denominator
+            pltpu.VMEM((bq, d), jnp.float32),    # acc — unnormalized output
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,96 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op dispatches between the Pallas hot path (TPU target; ``interpret=True``
+execution on CPU for validation) and the pure-jnp oracle in ``ref.py`` (used
+inside pjit programs during the CPU dry-run, where XLA fuses it fine and the
+kernel is not the object of study). Selection:
+
+    backend="pallas"     pallas_call, compiled (TPU)
+    backend="interpret"  pallas_call, interpret mode (CPU correctness)
+    backend="ref"        pure-jnp oracle
+    backend="auto"       pallas on TPU, ref elsewhere
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.fake_quant import fake_quant_pallas
+from repro.kernels.int8_matmul import int8_matmul_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def _resolve(backend: str) -> str:
+    if backend != "auto":
+        return backend
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+# ---------------------------------------------------------------------------
+# fake_quant
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("bits", "backend"))
+def fake_quant(x: jnp.ndarray, bits: int = 8, *, backend: str = "auto"
+               ) -> jnp.ndarray:
+    """Fused per-tensor quantize-dequantize of an arbitrary-rank tensor."""
+    b = _resolve(backend)
+    if b == "ref":
+        return ref.fake_quant_ref(x, bits)
+    vmin = jnp.minimum(jnp.min(x), 0.0).astype(jnp.float32)
+    vmax = jnp.maximum(jnp.max(x), 0.0).astype(jnp.float32)
+    x2 = x.reshape(-1, x.shape[-1]) if x.ndim != 2 else x
+    out = fake_quant_pallas(x2, vmin, vmax, bits,
+                            interpret=(b == "interpret"))
+    return out.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# int8 matmul
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "backend"))
+def int8_matmul(x_q, w_q, x_scale, x_zero, w_scale, w_zero,
+                out_dtype=jnp.float32, *, backend: str = "auto"):
+    """(M,K)i8 @ (K,N)i8 -> (M,N)f with affine dequantization."""
+    b = _resolve(backend)
+    if b == "ref":
+        return ref.int8_matmul_ref(x_q, w_q, x_scale, w_scale, x_zero, w_zero,
+                                   out_dtype)
+    return int8_matmul_pallas(x_q, w_q, x_scale, x_zero, w_scale, w_zero,
+                              out_dtype=out_dtype,
+                              interpret=(b == "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "backend"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    backend: str = "auto"):
+    """Multi-head attention.
+
+    q: (..., S, D); k/v: (..., T, D) — leading dims are batch/head and are
+    vmapped over. GQA sharing is handled by the caller (repeat/reshape of kv).
+    """
+    b = _resolve(backend)
+    if b == "ref":
+        fn = functools.partial(ref.mha_ref, causal=causal, window=window,
+                               softcap=softcap, scale=scale)
+    else:
+        fn = functools.partial(flash_attention_pallas, causal=causal,
+                               window=window, softcap=softcap, scale=scale,
+                               interpret=(b == "interpret"))
+    flat_fn = fn
+    for _ in range(q.ndim - 2):
+        flat_fn = jax.vmap(flat_fn)
+    return flat_fn(q, k, v)

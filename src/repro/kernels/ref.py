@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernel tests assert against
+(``np.testing.assert_allclose(kernel(x), ref(x))`` over shape/dtype sweeps),
+and double as the CPU/compile-path implementations used by the models when the
+Pallas hot path is disabled (e.g. during the multi-pod dry-run, which lowers
+for 512 host devices).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import affine
+
+
+# ---------------------------------------------------------------------------
+# fake_quant — fused quantize-dequantize (paper's Q_n / D maps)
+# ---------------------------------------------------------------------------
+
+def fake_quant_ref(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Per-tensor affine quantize-dequantize with the paper's formula."""
+    return affine.ptq_tensor(x, bits)
+
+
+def fake_quant_with_range_ref(x: jnp.ndarray, vmin: jnp.ndarray,
+                              vmax: jnp.ndarray, bits: int) -> jnp.ndarray:
+    p = affine.affine_params_from_range(vmin, vmax, bits)
+    return affine.quantize_dequantize(x, p)
+
+
+# ---------------------------------------------------------------------------
+# int8_matmul — W8A8 GEMM with int32 accumulation + affine dequant
+# ---------------------------------------------------------------------------
+
+def int8_matmul_ref(x_q: jnp.ndarray, w_q: jnp.ndarray,
+                    x_scale: jnp.ndarray, w_scale: jnp.ndarray,
+                    x_zero: jnp.ndarray, w_zero: jnp.ndarray,
+                    out_dtype=jnp.float32) -> jnp.ndarray:
+    """Dequantized product of int8 operands.
+
+    x_q: (M, K) int8 codes with scalar (per-tensor) x_scale / x_zero.
+    w_q: (K, N) int8 codes with per-column (per-output-channel) w_scale /
+         w_zero of shape (N,) — the paper's per-axis scheme.
+
+    result = (x_scale * (x_q - x_zero)) @ (w_scale * (w_q - w_zero))
+           = x_scale * w_scale * [ x_q@w_q - x_zero*sum_k(w_q)
+                                   - w_zero*sum_k(x_q) + K*x_zero*w_zero ]
+    computed in int32 to mirror the MXU integer path.
+    """
+    k = x_q.shape[-1]
+    acc = jnp.matmul(x_q.astype(jnp.int32), w_q.astype(jnp.int32))
+    sum_w = jnp.sum(w_q.astype(jnp.int32), axis=0)          # (N,)
+    sum_x = jnp.sum(x_q.astype(jnp.int32), axis=-1, keepdims=True)  # (M,1)
+    corr = (acc
+            - x_zero.astype(jnp.int32) * sum_w[None, :]
+            - w_zero.astype(jnp.int32)[None, :] * sum_x
+            + k * x_zero.astype(jnp.int32) * w_zero.astype(jnp.int32)[None, :])
+    return (x_scale * w_scale[None, :] * corr.astype(jnp.float32)
+            ).astype(out_dtype)
+
+
+def quantized_dense_ref(x: jnp.ndarray, w_q: jnp.ndarray,
+                        w_scale: jnp.ndarray, w_zero: jnp.ndarray,
+                        out_dtype=jnp.float32) -> jnp.ndarray:
+    """Weight-only int8 dense (activations fp): x @ dequant(w)."""
+    w = (w_scale[None, :] * (w_q.astype(jnp.float32) - w_zero[None, :]))
+    return jnp.matmul(x.astype(jnp.float32), w).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention — blockwise online-softmax attention
+# ---------------------------------------------------------------------------
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+            *, causal: bool = True, window: Optional[int] = None,
+            softcap: Optional[float] = None,
+            scale: Optional[float] = None) -> jnp.ndarray:
+    """Dense reference attention.
+
+    q: (S, D), k/v: (T, D); single head (tests vmap over heads/batch).
+    window: sliding-window size (attend to keys in (i-window, i]).
+    softcap: gemma2-style tanh logit soft-capping.
+    """
+    s, d = q.shape
+    t = k.shape[0]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(q.dtype)
+    logits = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_pos = jnp.arange(s)[:, None] + (t - s)   # align ends (decode-friendly)
+    k_pos = jnp.arange(t)[None, :]
+    mask = k_pos <= q_pos if causal else jnp.ones((s, t), bool)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    return (probs @ v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# int8_cache_attention — decode attention over a quantized KV cache
+# ---------------------------------------------------------------------------
+
+def int8_cache_decode_ref(q, k_codes, k_scale, v_codes, v_scale, pos,
+                          window=None):
+    """q (G, Dh); codes (T, Dh) int8 + (T,1) scales; one decode position."""
+    k = k_codes.astype(jnp.float32) * k_scale
+    v = v_codes.astype(jnp.float32) * v_scale
+    t = k.shape[0]
+    s = (q.astype(jnp.float32) @ k.T) * (q.shape[-1] ** -0.5)
+    idx = jnp.arange(t)[None, :]
+    valid = idx <= pos
+    if window is not None:
+        valid = valid & (idx > pos - window)
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return (p @ v).astype(q.dtype)

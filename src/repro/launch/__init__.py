@@ -1,0 +1,1 @@
+"""Launchers: mesh construction, pjit step builders, dry-run, train, serve."""

@@ -1,0 +1,117 @@
+"""Multi-pod dry-run: lower + compile every (arch × input shape × mesh).
+
+MUST be the very first lines — before any other import (jax locks the device
+count on first init):
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+# ---------------------------------------------------------------------------
+import argparse        # noqa: E402
+import json            # noqa: E402
+import re              # noqa: E402
+import sys             # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+
+import jax             # noqa: E402
+
+from repro.configs import base as cfgs          # noqa: E402
+from repro.launch import mesh as mesh_lib       # noqa: E402
+from repro.launch import steps as steps_lib     # noqa: E402
+from repro.launch.hlo_analysis import collective_stats, summarize_memory  # noqa: E402
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            out_dir: str) -> dict:
+    cfg = cfgs.get(arch)
+    shape = cfgs.INPUT_SHAPES[shape_name]
+    cfg, variant = steps_lib.resolve_arch_for_shape(cfg, shape)
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        lowered, kind = steps_lib.lower_step(cfg, shape, mesh,
+                                             multi_pod=multi_pod)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+        memory = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        # Post-SPMD HLO: collectives are explicit here (pre-partitioning
+        # stablehlo has none); trip-count-weighted per hlo_analysis.py.
+        coll = collective_stats(compiled.as_text())
+
+    mem = summarize_memory(memory)
+    n_dev = 512 if multi_pod else 256
+    record = {
+        "arch": arch, "shape": shape_name, "kind": kind, "variant": variant,
+        "multi_pod": multi_pod, "devices": n_dev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "collective_bytes": coll["total"],
+        "collective_breakdown": coll,
+        "memory": mem,
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+        "tokens": shape.tokens if kind != "decode" else shape.global_batch,
+    }
+    print(f"[dryrun] {arch} x {shape_name} ({'2-pod' if multi_pod else '1-pod'}"
+          f", {kind}, {variant}): lower {t_lower:.0f}s compile "
+          f"{t_compile:.0f}s")
+    print(f"  memory_analysis: {mem}")
+    print(f"  cost_analysis: flops={record['flops']:.3e} "
+          f"bytes={record['bytes_accessed']:.3e} "
+          f"collective_bytes={coll['total']:.3e}")
+
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{'2pod' if multi_pod else '1pod'}"
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="arch name or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="input shape name or 'all'")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2x16x16 (512-chip) mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    args = ap.parse_args()
+
+    archs = cfgs.names() if args.arch == "all" else [args.arch]
+    shapes = list(cfgs.INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_one(arch, shape, multi_pod=mp, out_dir=args.out)
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"[dryrun] FAIL {arch} x {shape} "
+                          f"({'2pod' if mp else '1pod'}): {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        return 1
+    print("\nAll dry-runs compiled successfully.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

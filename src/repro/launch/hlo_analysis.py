@@ -1,0 +1,167 @@
+"""Post-SPMD HLO analysis: trip-count-aware collective byte counting.
+
+Why this exists: ``compiled.cost_analysis()`` exposes FLOPs/bytes but not
+collective traffic, and XLA's analysis counts a ``while`` body ONCE rather
+than once per iteration — under ``lax.scan``-over-layers that undercounts by
+the layer count. We therefore parse ``compiled.as_text()`` (post-partitioning
+HLO, where all-gather/all-reduce/... are explicit ops):
+
+1. split the module into named computations,
+2. find every ``while`` op and its condition/body computations; recover the
+   static trip count from the ``s32[] constant(N)`` the condition compares
+   against,
+3. propagate execution multipliers down the call graph (entry = 1, a while
+   body inherits parent_multiplier x trip_count),
+4. sum result-operand bytes of every collective op weighted by its
+   computation's multiplier.
+
+The same caveat applies to FLOPs/bytes — the roofline uses analytic model
+FLOPs (benchmarks/flops.py) as the compute term and reports raw
+cost_analysis numbers alongside (EXPERIMENTS.md documents this).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# "f32[4,512,768]{2,1,0} all-reduce(" — possibly tuple results "(f32[..], ..)"
+_COLL_OP_RE = re.compile(
+    r"=\s*(\(?[a-z0-9_]+\[[0-9,]*\][^=]*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+# Computation definition: a line like "%name (params...) -> type {". Params
+# and return types contain nested parens AND layout braces ("{3,2,1,0}"), so
+# just anchor on: line starts with the name, ends with "{".
+_COMP_HEADER_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$", re.M)
+_WHILE_RE = re.compile(
+    r"while\(%[\w.\-]+\),\s*condition=%([\w.\-]+),\s*body=%([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _tensor_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _shape_bytes(sig: str) -> int:
+    """Sum over all tensors in a (possibly tuple) result signature."""
+    return sum(_tensor_bytes(d, dims) for d, dims in _SHAPE_RE.findall(sig))
+
+
+def split_computations(hlo_text: str) -> Dict[str, str]:
+    """computation name -> body text (brace-matched from the header)."""
+    comps: Dict[str, str] = {}
+    for m in _COMP_HEADER_RE.finditer(hlo_text):
+        name = m.group(1)
+        brace = hlo_text.rfind("{", m.start(), m.end())  # header's own "{"
+        if brace < 0:
+            continue
+        depth, i = 1, brace + 1
+        while depth and i < len(hlo_text):
+            c = hlo_text[i]
+            depth += c == "{"
+            depth -= c == "}"
+            i += 1
+        comps[name] = hlo_text[brace:i]
+    return comps
+
+
+def computation_multipliers(hlo_text: str) -> Dict[str, float]:
+    """Execution-count multiplier per computation (1 outside loops)."""
+    comps = split_computations(hlo_text)
+    entry = None
+    m = re.search(r"ENTRY %?([\w.\-]+)", hlo_text)
+    if m:
+        entry = m.group(1)
+
+    # while edges: parent_comp -> (body_comp, trip)
+    edges: Dict[str, List[Tuple[str, float]]] = {}
+    for name, body in comps.items():
+        for w in _WHILE_RE.finditer(body):
+            cond, wbody = w.group(1), w.group(2)
+            consts = [int(c) for c in _CONST_RE.findall(comps.get(cond, ""))]
+            trip = float(max(consts)) if consts else 1.0
+            edges.setdefault(name, []).append((wbody, trip))
+            # the condition itself runs trip+1 times; negligible, skipped
+
+    mult: Dict[str, float] = {name: 1.0 for name in comps}
+    # propagate breadth-first from the entry; computations not reached by
+    # while-edges keep multiplier 1 (fusions are accounted at their call site
+    # because collectives never live inside fusion computations).
+    order = [entry] if entry in comps else list(comps)
+    seen = set(order)
+    while order:
+        cur = order.pop(0)
+        for child, trip in edges.get(cur, []):
+            new = mult.get(cur, 1.0) * trip
+            if new > mult.get(child, 0.0) or child not in seen:
+                mult[child] = new
+                seen.add(child)
+                order.append(child)
+    return mult
+
+
+def collective_stats(hlo_text: str) -> Dict[str, float]:
+    """Trip-count-weighted collective bytes, total and per collective kind."""
+    comps = split_computations(hlo_text)
+    mult = computation_multipliers(hlo_text)
+    out: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    total = 0.0
+    for name, body in comps.items():
+        m = mult.get(name, 1.0)
+        for op in _COLL_OP_RE.finditer(body):
+            sig, kind = op.group(1), op.group(2)
+            b = _shape_bytes(sig) * m
+            out[kind] += b
+            total += b
+    out["total"] = total
+    return out
+
+
+def collective_bytes(hlo_text: str) -> float:
+    return collective_stats(hlo_text)["total"]
+
+
+def while_trip_counts(hlo_text: str) -> List[float]:
+    comps = split_computations(hlo_text)
+    trips = []
+    for body in comps.values():
+        for w in _WHILE_RE.finditer(body):
+            consts = [int(c) for c in _CONST_RE.findall(
+                comps.get(w.group(1), ""))]
+            trips.append(float(max(consts)) if consts else 1.0)
+    return trips
+
+
+def summarize_memory(memory_analysis) -> Dict[str, float]:
+    """Pick the useful fields out of compiled.memory_analysis()."""
+    fields = ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes")
+    out = {}
+    for f in fields:
+        v = getattr(memory_analysis, f, None)
+        if v is not None:
+            out[f] = float(v)
+    if out.get("argument_size_in_bytes") is not None:
+        out["total_nonalias_bytes"] = (
+            out.get("argument_size_in_bytes", 0.0)
+            + out.get("output_size_in_bytes", 0.0)
+            + out.get("temp_size_in_bytes", 0.0)
+            - out.get("alias_size_in_bytes", 0.0))
+    return out

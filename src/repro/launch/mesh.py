@@ -1,0 +1,35 @@
+"""Production mesh definitions (TPU v5e pods).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — device counts are locked on first jax init, and only dryrun.py (which
+sets XLA_FLAGS before any import) should see 512 fake host devices.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip) — used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link (~4 links/chip on v5e)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = jax.device_count()
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def data_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def n_chips(multi_pod: bool) -> int:
+    return 512 if multi_pod else 256

@@ -1,0 +1,347 @@
+"""pjit-able train / prefill / serve steps + their input specs and shardings.
+
+This is the glue between the model substrate and the production mesh:
+
+* ``input_specs(cfg, shape)``       — ShapeDtypeStruct stand-ins for every
+                                      input of the step (no allocation).
+* ``input_shardings(...)``          — matching PartitionSpec trees.
+* ``make_train_step(cfg)``          — loss -> grads -> Adam update, with
+                                      mixed precision and optional QAT state.
+* ``make_prefill_step(cfg)``        — full-sequence forward (last logits).
+* ``make_serve_step(cfg)``          — one decode token through KV caches.
+
+Activation sharding policy (see DESIGN.md §6): batch over the data axes;
+sequence over 'model' between blocks for train/prefill (sequence
+parallelism — bounds the lax.scan carry memory at 40-100 layers); decode
+activations batch-only.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs import base as cfgs
+from repro.core import mixed_precision as mp_lib
+from repro.models import transformer
+from repro.optim import adam as adam_lib
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct only — never allocates)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: cfgs.ArchConfig, shape: cfgs.InputShape
+                ) -> Dict[str, Any]:
+    """Model inputs for the given input shape, as ShapeDtypeStructs."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = {"tokens": tok((b, s), jnp.int32),
+                 "labels": tok((b, s), jnp.int32)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": tok((b, s), jnp.int32)}
+    else:  # decode
+        specs = {"tokens": tok((b, 1), jnp.int32)}
+    if cfg.cross_attn or cfg.encoder_layers:
+        dtype = jnp.dtype(cfg.mp.compute_dtype)
+        specs["encoder_out"] = tok((b, cfg.encoder_seq, cfg.d_model), dtype)
+    return specs
+
+
+def _tree_sds(tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def param_sds(cfg: cfgs.ArchConfig, *, dtype=None) -> PyTree:
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation).
+
+    Training carries fp32 (or cfg.mp.param_dtype) master weights; serving /
+    prefill carries compute-dtype (bf16) weights — inference has no master
+    copy (fp32 weights doubled decode residency, §Perf C4).
+    """
+    dtype = dtype or jnp.dtype(cfg.mp.param_dtype)
+    return jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0),
+                                        dtype=dtype))
+
+
+def opt_sds(cfg: cfgs.ArchConfig, adam_cfg: adam_lib.AdamConfig) -> PyTree:
+    params = param_sds(cfg)
+    return jax.eval_shape(lambda p: adam_lib.adam_init(p, adam_cfg), params)
+
+
+def cache_sds(cfg: cfgs.ArchConfig, batch: int, seq_len: int) -> PyTree:
+    return jax.eval_shape(
+        lambda: transformer.init_caches(cfg, batch, seq_len))
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+# ---------------------------------------------------------------------------
+
+def batch_shardings(cfg: cfgs.ArchConfig, shape: cfgs.InputShape,
+                    mesh: Mesh, multi_pod: bool) -> PyTree:
+    data = ("pod", "data") if multi_pod else ("data",)
+    dp = 32 if multi_pod else 16
+    b = shape.global_batch
+    # NB: the axis tuple is ONE PartitionSpec entry (batch dim sharded over
+    # both pod and data), not multiple entries.
+    bspec = data if b % dp == 0 else None
+
+    def ns(*spec):
+        return NamedSharding(mesh, PartitionSpec(*spec))
+
+    specs = {"tokens": ns(bspec, None)}
+    if shape.kind == "train":
+        specs["labels"] = ns(bspec, None)
+    if cfg.cross_attn or cfg.encoder_layers:
+        specs["encoder_out"] = ns(bspec, None, None)
+    return specs
+
+
+def param_shardings(cfg: cfgs.ArchConfig, mesh: Mesh,
+                    multi_pod: bool) -> PyTree:
+    pspecs = transformer.partition_specs(cfg, multi_pod=multi_pod)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def opt_shardings(cfg: cfgs.ArchConfig, adam_cfg: adam_lib.AdamConfig,
+                  mesh: Mesh, multi_pod: bool) -> Any:
+    """AdamState shardings. fp32 moments mirror params; 8-bit state shards
+    its flat code/scale vectors over the data axes when divisible."""
+    pspecs = transformer.partition_specs(cfg, multi_pod=multi_pod)
+    p_ns = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
+    if not adam_cfg.eightbit:
+        return adam_lib.AdamState(
+            step=NamedSharding(mesh, PartitionSpec()), m=p_ns, v=p_ns)
+
+    # Shape-preserving 8-bit moments: codes inherit the exact parameter spec;
+    # scales inherit it minus the last axis (their last dim is 1/256th of the
+    # param's and usually not divisible by the mesh axis — they are tiny).
+    params = param_sds(cfg)
+
+    def one(p_leaf, pspec: PartitionSpec):
+        sspec = PartitionSpec(*pspec[:-1], None) if len(pspec) else pspec
+        return adam_lib.BlockQuantized(
+            codes=NamedSharding(mesh, pspec),
+            scales=NamedSharding(mesh, sspec), shape=p_leaf.shape)
+
+    moments = jax.tree_util.tree_map(
+        one, params, pspecs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return adam_lib.AdamState(step=NamedSharding(mesh, PartitionSpec()),
+                              m=moments, v=moments)
+
+
+def cache_shardings(cfg: cfgs.ArchConfig, shape: cfgs.InputShape,
+                    mesh: Mesh, multi_pod: bool) -> PyTree:
+    """KV caches: batch over data (seq over data when batch=1), head_dim
+    over 'model' when divisible (flash-decoding-style split)."""
+    data = ("pod", "data") if multi_pod else ("data",)
+    dp = 32 if multi_pod else 16
+    b = shape.global_batch
+    batch_ok = b % dp == 0
+    template = cache_sds(cfg, b, shape.seq_len)
+
+    def one(leaf):
+        # KVCache k/v[/scales]: (L, B, T, KV, Dh) or (L, B, T, KV, 1).
+        # The context dim T shards over 'model' (flash-decoding style): the
+        # q·k contraction reduces over T so each model shard scores its own
+        # context slice and only the (B,H,1,T)-scores ever cross the ICI.
+        # Sharding Dh instead forces a full-cache all-gather per step
+        # (measured 45 GB/step on gemma2-9b decode_32k; §Perf C3).
+        if leaf.ndim == 5:
+            L, B, T, KV, Dh = leaf.shape
+            spec = [None, None, None, None, None]
+            if batch_ok:
+                spec[1] = data
+            elif T % dp == 0:
+                spec[2] = data
+            if T % 16 == 0 and spec[2] is None:
+                spec[2] = "model"
+            elif Dh % 16 == 0 and Dh > 1:
+                spec[4] = "model"
+            return NamedSharding(mesh, PartitionSpec(*spec))
+        # Recurrent state (L, B, ...) / positions (L, T)
+        if leaf.ndim >= 2 and batch_ok and leaf.shape[1] == b:
+            return NamedSharding(mesh,
+                                 PartitionSpec(None, data,
+                                               *([None] * (leaf.ndim - 2))))
+        return NamedSharding(mesh, PartitionSpec(*([None] * leaf.ndim)))
+
+    return jax.tree_util.tree_map(one, template)
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: cfgs.ArchConfig,
+                    adam_cfg: Optional[adam_lib.AdamConfig] = None,
+                    multi_pod: bool = False):
+    adam_cfg = adam_cfg or adam_lib.AdamConfig(eightbit=cfg.optimizer_8bit)
+    grad_pspecs = transformer.partition_specs(cfg, multi_pod=multi_pod)
+
+    def _constrain_grads(grads):
+        # Pin gradient shardings to the parameter layout. Without this the
+        # scan-transpose accumulators for stacked layer grads can end up
+        # replicated (observed: ~300 GB/device for grok's stacked MoE grads).
+        from repro.models import common as _common
+        return jax.tree_util.tree_map(
+            lambda g, s: _common.with_constraint(g, s), grads, grad_pspecs)
+
+    def train_step(params, opt_state, batch, qat_collection):
+        step = opt_state.step
+
+        def loss_of(p):
+            p_c = mp_lib.to_compute(p, cfg.mp)
+            return transformer.loss_fn(
+                cfg, p_c, batch, qat_collection=qat_collection, step=step,
+                multi_pod=multi_pod)
+
+        if cfg.grad_accum > 1:
+            a = cfg.grad_accum
+
+            def micro(batch_i):
+                def lf(p):
+                    p_c = mp_lib.to_compute(p, cfg.mp)
+                    return transformer.loss_fn(
+                        cfg, p_c, batch_i, qat_collection=qat_collection,
+                        step=step, multi_pod=multi_pod)
+                return jax.value_and_grad(lf, has_aux=True)(params)
+
+            def split(x):
+                return x.reshape((a, x.shape[0] // a) + x.shape[1:])
+            micro_batches = jax.tree_util.tree_map(split, batch)
+
+            def acc_fn(carry, batch_i):
+                (loss_a, metrics_a), grads_a = carry
+                (loss_i, metrics_i), grads_i = micro(batch_i)
+                grads = jax.tree_util.tree_map(jnp.add, grads_a, grads_i)
+                return ((loss_a + loss_i, metrics_i), grads), None
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            init = ((jnp.zeros(()),
+                     {"ce_loss": jnp.zeros(()), "aux_loss": jnp.zeros(()),
+                      "qat_collection": qat_collection}), zero_g)
+            ((loss, metrics), grads), _ = jax.lax.scan(
+                acc_fn, init, micro_batches)
+            loss = loss / a
+            grads = jax.tree_util.tree_map(lambda g: g / a, grads)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params)
+
+        grads = _constrain_grads(grads)
+        new_params, new_opt, stats = adam_lib.adam_update(
+            grads, opt_state, params, adam_cfg)
+        out_metrics = {"loss": loss, "ce_loss": metrics["ce_loss"],
+                       "aux_loss": metrics["aux_loss"], **stats}
+        return new_params, new_opt, metrics["qat_collection"], out_metrics
+
+    return train_step, adam_cfg
+
+
+def make_prefill_step(cfg: cfgs.ArchConfig, multi_pod: bool = False):
+    def prefill_step(params, batch):
+        p_c = mp_lib.to_compute(params, cfg.mp)
+        return transformer.prefill(cfg, p_c, batch["tokens"],
+                                   encoder_out=batch.get("encoder_out"),
+                                   multi_pod=multi_pod)
+    return prefill_step
+
+
+def make_serve_step(cfg: cfgs.ArchConfig, multi_pod: bool = False):
+    def serve_step(params, caches, batch, pos):
+        p_c = mp_lib.to_compute(params, cfg.mp)
+        logits, new_caches = transformer.decode_step(
+            cfg, p_c, batch["tokens"], caches, pos,
+            encoder_out=batch.get("encoder_out"), multi_pod=multi_pod)
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_token, new_caches
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Lowering helper (shared by dryrun and the real launchers)
+# ---------------------------------------------------------------------------
+
+def lower_step(cfg: cfgs.ArchConfig, shape: cfgs.InputShape, mesh: Mesh,
+               *, multi_pod: bool = False,
+               adam_cfg: Optional[adam_lib.AdamConfig] = None):
+    """Build + .lower() the right step for (arch, input shape) on ``mesh``.
+
+    Returns (lowered, kind). Uses ShapeDtypeStructs exclusively.
+    """
+    replicated = NamedSharding(mesh, PartitionSpec())
+    batch_sds = input_specs(cfg, shape)
+    batch_sh = batch_shardings(cfg, shape, mesh, multi_pod)
+    infer_dtype = (jnp.dtype(cfg.mp.compute_dtype)
+                   if shape.kind != "train" else None)
+    p_sds = param_sds(cfg, dtype=infer_dtype)
+    p_sh = param_shardings(cfg, mesh, multi_pod)
+
+    if shape.kind == "train":
+        train_step, adam_cfg = make_train_step(cfg, adam_cfg,
+                                               multi_pod=multi_pod)
+        o_sds = opt_sds(cfg, adam_cfg)
+        o_sh = opt_shardings(cfg, adam_cfg, mesh, multi_pod)
+        qat_coll = (transformer.init_qat_collection(cfg)
+                    if cfg.quant.is_qat else {})
+        qat_sds = _tree_sds(qat_coll)
+        qat_sh = jax.tree_util.tree_map(lambda _: replicated, qat_sds)
+        jitted = jax.jit(train_step,
+                         in_shardings=(p_sh, o_sh, batch_sh, qat_sh),
+                         out_shardings=(p_sh, o_sh, qat_sh, None),
+                         donate_argnums=(0, 1, 3))
+        return jitted.lower(p_sds, o_sds, batch_sds, qat_sds), "train"
+
+    if shape.kind == "prefill":
+        prefill_step = make_prefill_step(cfg, multi_pod=multi_pod)
+        jitted = jax.jit(prefill_step, in_shardings=(p_sh, batch_sh))
+        return jitted.lower(p_sds, batch_sds), "prefill"
+
+    # decode
+    serve_step = make_serve_step(cfg, multi_pod=multi_pod)
+    c_sds = cache_sds(cfg, shape.global_batch, shape.seq_len)
+    c_sh = cache_shardings(cfg, shape, mesh, multi_pod)
+    jitted = jax.jit(serve_step,
+                     in_shardings=(p_sh, c_sh, batch_sh, replicated),
+                     out_shardings=(None, c_sh),
+                     donate_argnums=(1,))
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    return jitted.lower(p_sds, c_sds, batch_sds, pos_sds), "decode"
+
+
+def resolve_arch_for_shape(cfg: cfgs.ArchConfig, shape: cfgs.InputShape
+                           ) -> Tuple[cfgs.ArchConfig, str]:
+    """Shape-specific config policy.
+
+    * decode shapes serve with TP param sharding — FSDP would re-all-gather
+      the full weights every decoded token (measured: 53.5 GB/step on
+      gemma2-9b decode_32k; §Perf C2). Weights fit per-device under TP for
+      every assigned arch except grok/llama-90b, which keep FSDP (documented).
+    * long_500k on pure full-attention archs runs the SWA *variant*
+      (window 4096) per the assignment.
+    """
+    import dataclasses
+    variant = "native"
+    if shape.name == "long_500k" and not cfg.supports_long_500k:
+        cfg = dataclasses.replace(cfg, long_context_window=4096)
+        variant = "swa-variant"
+    if shape.kind == "decode" and cfg.sharding == "fsdp" \
+            and cfg.n_params() * 2 / 16 < 12e9:  # bf16 weights fit under TP
+        cfg = dataclasses.replace(cfg, sharding="tp")
+    return cfg, variant

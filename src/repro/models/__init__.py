@@ -1,0 +1,4 @@
+"""Model substrate: composable transformer/SSM/MoE stacks in pure JAX."""
+from repro.models import attention, blocks, common, moe, recurrent, transformer
+
+__all__ = ["attention", "blocks", "common", "moe", "recurrent", "transformer"]

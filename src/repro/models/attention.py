@@ -1,0 +1,337 @@
+"""Attention layers: GQA with RoPE, sliding windows, logit soft-capping,
+cross-attention, memory-efficient chunked softmax, and decode KV caches
+(fp or int8-quantized — the paper's technique applied to serving state).
+
+Implementation notes
+--------------------
+* GQA is computed with grouped einsums — kv heads are never materialized at
+  q-head multiplicity.
+* ``chunked_attention`` is the pure-JAX flash equivalent used inside pjit
+  programs (the Pallas kernel in repro.kernels is the TPU hot path; both match
+  ``kernels.ref.mha_ref``): outer ``lax.map`` over query chunks with
+  ``jax.checkpoint`` so the backward pass recomputes rows instead of storing
+  S×T score matrices; inner ``lax.scan`` over kv chunks carries the online
+  softmax state (m, l, acc).
+* Decode caches for sliding-window layers are ring buffers of size
+  ``window`` — a 500k-token context costs only O(window) memory on SWA layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import affine
+from repro.models import common
+from repro.models.common import P, dense_spec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def attention_spec(d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   *, cross: bool = False) -> Dict[str, Any]:
+    spec = {
+        "q": dense_spec(d_model, n_heads * head_dim, "embed", "heads"),
+        "k": dense_spec(d_model, n_kv * head_dim, "embed", "kv"),
+        "v": dense_spec(d_model, n_kv * head_dim, "embed", "kv"),
+        "o": dense_spec(n_heads * head_dim, d_model, "heads", "embed"),
+    }
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Core softmax attention (grouped heads)
+# ---------------------------------------------------------------------------
+
+def _logits(q, k, scale, softcap):
+    # q: (B, Sq, KV, G, Dh)  k: (B, Skv, KV, Dh) -> (B, KV, G, Sq, Skv)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def _mask(sq: int, skv: int, q_offset, *, causal: bool,
+          window: Optional[int], kv_positions: Optional[jnp.ndarray] = None):
+    """(sq, skv) boolean mask. q absolute position = q_offset + arange(sq)."""
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = (kv_positions if kv_positions is not None
+             else jnp.arange(skv))[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    if kv_positions is not None:
+        mask &= k_pos >= 0  # ring-buffer slots not yet written
+    return mask
+
+
+def dense_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    q_offset: int | jnp.ndarray = 0,
+                    kv_positions: Optional[jnp.ndarray] = None,
+                    scale: Optional[float] = None) -> jnp.ndarray:
+    """Materialized-scores attention (small seq / decode).
+
+    q: (B, Sq, KV, G, Dh); k/v: (B, Skv, KV, Dh) -> (B, Sq, KV, G, Dh)
+    """
+    b, sq, nkv, g, dh = q.shape
+    skv = k.shape[1]
+    scale = scale if scale is not None else dh ** -0.5
+    s = _logits(q, k, scale, softcap)
+    mask = _mask(sq, skv, q_offset, causal=causal, window=window,
+                 kv_positions=kv_positions)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      window: Optional[int] = None,
+                      softcap: Optional[float] = None,
+                      q_chunk: int = 1024, kv_chunk: int = 1024,
+                      scale: Optional[float] = None) -> jnp.ndarray:
+    """Flash-equivalent attention in pure JAX (online softmax over kv chunks).
+
+    Memory: O(q_chunk × kv_chunk) scores instead of O(S×T); backward
+    recomputes each query-row block (jax.checkpoint).
+
+    Distribution: the q-chunk axis is *vmapped* (not lax.scan'd) and
+    sharding-constrained over the 'model' mesh axis — each device computes
+    attention only for its own query chunks (sequence-parallel attention),
+    while k/v are constrained batch-sharded/seq-replicated so the inner kv
+    scan is collective-free. (A sequential map over q chunks forces GSPMD to
+    all-gather the full k/v *inside* the loop: observed 2.2 TB of gathers per
+    step for codeqwen prefill_32k — see EXPERIMENTS.md §Perf.)
+    """
+    from jax.sharding import PartitionSpec as PS
+
+    b, sq, nkv, g, dh = q.shape
+    skv = k.shape[1]
+    scale_ = scale if scale is not None else dh ** -0.5
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    assert sq % q_chunk == 0 and skv % kv_chunk == 0, (sq, q_chunk, skv,
+                                                       kv_chunk)
+    n_q, n_kv = sq // q_chunk, skv // kv_chunk
+    q_offset_base = skv - sq  # align query block ends to kv end
+
+    # k/v: batch-sharded, seq-replicated — gathered ONCE per layer.
+    k = common.with_constraint(k, PS("data", None, None, None))
+    v = common.with_constraint(v, PS("data", None, None, None))
+    k_blocks = jnp.moveaxis(k.reshape(b, n_kv, kv_chunk, nkv, dh), 1, 0)
+    v_blocks = jnp.moveaxis(v.reshape(b, n_kv, kv_chunk, nkv, dh), 1, 0)
+
+    @jax.checkpoint
+    def q_row(qi, q_blk):
+        # q_blk: (b, q_chunk, nkv, g, dh)
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kj, k_blk, v_blk = inp
+            s = _logits(q_blk, k_blk, scale_, softcap)  # (b,kv,g,qc,kc)
+            mask = _mask_dyn(q_chunk, kv_chunk,
+                             qi * q_chunk + q_offset_base, kj * kv_chunk,
+                             causal=causal, window=window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_cur = jnp.max(s, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m, m_cur)
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = alpha * acc + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, nkv, g, q_chunk, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, nkv, g, q_chunk, 1), jnp.float32)
+        a0 = jnp.zeros((b, nkv, g, q_chunk, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(n_kv), k_blocks, v_blocks))
+        l = jnp.where(l == 0.0, 1.0, l)
+        out = (acc / l)                               # (b,kv,g,qc,dh)
+        return jnp.transpose(out, (0, 3, 1, 2, 4)).astype(q.dtype)
+
+    q_rows = jnp.moveaxis(q.reshape(b, n_q, q_chunk, nkv, g, dh), 1, 0)
+    if n_q % 16 == 0:
+        q_rows = common.with_constraint(
+            q_rows, PS("model", "data", None, None, None, None))
+    out = jax.vmap(q_row)(jnp.arange(n_q), q_rows)
+    if n_q % 16 == 0:
+        out = common.with_constraint(
+            out, PS("model", "data", None, None, None, None))
+    return jnp.moveaxis(out, 0, 1).reshape(b, sq, nkv, g, dh)
+
+
+def _mask_dyn(sq: int, skv: int, q_start, kv_start, *, causal: bool,
+              window: Optional[int]):
+    q_pos = q_start + jnp.arange(sq)[:, None]
+    k_pos = kv_start + jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# KV cache (fp / int8 ring-buffer)
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    """Decode cache for one attention layer.
+
+    Slot layout is a ring: slot i holds the most recent position p with
+    p % size == i; when ``size == full context`` this degenerates to the
+    plain slot-i-holds-position-i layout, so one code path serves both
+    full-context and sliding-window layers. ``positions`` tracks the absolute
+    position per slot (-1 = never written) and doubles as the validity mask.
+    """
+    k: jnp.ndarray               # (B, T, KV, Dh)  fp  OR int8 codes
+    v: jnp.ndarray
+    k_scale: Optional[jnp.ndarray]   # (B, T, KV, 1) per-token-per-head scales
+    v_scale: Optional[jnp.ndarray]
+    positions: jnp.ndarray       # (T,) absolute position per slot
+
+    @property
+    def size(self) -> int:
+        return self.k.shape[1]
+
+
+def init_cache(batch: int, size: int, n_kv: int, head_dim: int,
+               *, int8: bool, dtype=jnp.bfloat16) -> KVCache:
+    if int8:
+        k = jnp.zeros((batch, size, n_kv, head_dim), jnp.int8)
+        v = jnp.zeros((batch, size, n_kv, head_dim), jnp.int8)
+        ks = jnp.zeros((batch, size, n_kv, 1), jnp.float32)
+        vs = jnp.zeros((batch, size, n_kv, 1), jnp.float32)
+    else:
+        k = jnp.zeros((batch, size, n_kv, head_dim), dtype)
+        v = jnp.zeros((batch, size, n_kv, head_dim), dtype)
+        ks = vs = None
+    return KVCache(k, v, ks, vs,
+                   positions=jnp.full((size,), -1, jnp.int32))
+
+
+def _quantize_token(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 per (batch, head) quantization of one token's k/v."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.where(amax == 0, 1.0, amax / 127.0)
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                     ).astype(jnp.int8)
+    return codes, scale
+
+
+def cache_update(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                 pos: jnp.ndarray) -> KVCache:
+    """Write one token (B, 1, KV, Dh) at absolute position ``pos``."""
+    pos = jnp.asarray(pos, jnp.int32)
+    slot = pos % cache.size
+    if cache.k_scale is not None:
+        k_codes, k_scale = _quantize_token(k_new)
+        v_codes, v_scale = _quantize_token(v_new)
+        k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_codes, slot, 1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_codes, slot, 1)
+        ks = jax.lax.dynamic_update_slice_in_dim(cache.k_scale, k_scale, slot, 1)
+        vs = jax.lax.dynamic_update_slice_in_dim(cache.v_scale, v_scale, slot, 1)
+    else:
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k_new.astype(cache.k.dtype), slot, 1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v_new.astype(cache.v.dtype), slot, 1)
+        ks, vs = None, None
+    positions = jax.lax.dynamic_update_slice_in_dim(
+        cache.positions, pos[None].astype(jnp.int32), slot, 0)
+    return KVCache(k, v, ks, vs, positions)
+
+
+def cache_kv(cache: KVCache, dtype) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Materialize cache contents in compute dtype (dequantizing int8)."""
+    if cache.k_scale is not None:
+        k = (cache.k.astype(jnp.float32) * cache.k_scale).astype(dtype)
+        v = (cache.v.astype(jnp.float32) * cache.v_scale).astype(dtype)
+        return k, v
+    return cache.k.astype(dtype), cache.v.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention layer (projections + rope + attention [+ cache])
+# ---------------------------------------------------------------------------
+
+def attention_layer(ctx, params, x: jnp.ndarray, *, n_heads: int, n_kv: int,
+                    head_dim: int, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    rope_theta: Optional[float] = 10000.0,
+                    positions: Optional[jnp.ndarray] = None,
+                    cache: Optional[KVCache] = None,
+                    pos: Optional[jnp.ndarray] = None,
+                    kv_source: Optional[jnp.ndarray] = None,
+                    q_chunk: int = 1024, kv_chunk: int = 1024,
+                    name: str = "attn") -> Tuple[jnp.ndarray, Optional[KVCache]]:
+    """GQA attention over x (B, S, D).
+
+    Training/prefill: cache is None; uses chunked attention for long S.
+    Decode: S == 1, cache given, ``pos`` is the absolute position.
+    Cross-attention: ``kv_source`` (B, T, D) supplies k/v; causal=False.
+    """
+    b, s, d = x.shape
+    g = n_heads // n_kv
+    kv_in = kv_source if kv_source is not None else x
+
+    q = common.dense(ctx, f"{name}/q", params["q"], x, quant_act=False)
+    k = common.dense(ctx, f"{name}/k", params["k"], kv_in, quant_act=False)
+    v = common.dense(ctx, f"{name}/v", params["v"], kv_in, quant_act=False)
+    q = ctx.activation(f"{name}/q_out", q)
+    k = ctx.activation(f"{name}/k_out", k)
+    v = ctx.activation(f"{name}/v_out", v)
+
+    q = q.reshape(b, s, n_kv, g, head_dim)
+    k = k.reshape(b, kv_in.shape[1], n_kv, head_dim)
+    v = v.reshape(b, kv_in.shape[1], n_kv, head_dim)
+
+    if rope_theta is not None and kv_source is None:
+        if positions is None:
+            positions = (jnp.arange(s)[None, :] if pos is None
+                         else (pos + jnp.zeros((b, s), jnp.int32)))
+        q = common.apply_rope(q.reshape(b, s, n_kv * g, head_dim), positions,
+                              rope_theta).reshape(b, s, n_kv, g, head_dim)
+        k = common.apply_rope(k, positions, rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        assert s == 1, "decode step handles one token"
+        new_cache = cache_update(cache, k, v, pos)
+        k_all, v_all = cache_kv(new_cache, x.dtype)
+        out = dense_attention(
+            q, k_all, v_all, causal=True, window=window, softcap=softcap,
+            q_offset=pos, kv_positions=new_cache.positions)
+    elif kv_source is not None:
+        out = dense_attention(q, k, v, causal=False, softcap=softcap)
+    else:
+        # q-chunk sized so the chunk count is a multiple of the model axis
+        # (16) — the vmapped q loop then shards cleanly (seq-parallel attn).
+        qc = min(max(s // 16, 128), q_chunk)
+        if s <= 2048 or s % qc or k.shape[1] % kv_chunk:
+            out = dense_attention(q, k, v, causal=causal, window=window,
+                                  softcap=softcap)
+        else:
+            out = chunked_attention(q, k, v, causal=causal, window=window,
+                                    softcap=softcap, q_chunk=qc,
+                                    kv_chunk=kv_chunk)
+
+    out = out.reshape(b, s, n_heads * head_dim)
+    out = common.dense(ctx, f"{name}/o", params["o"], out)
+    return out, new_cache

@@ -1,0 +1,186 @@
+"""Decoder blocks: one spec/apply pair per block kind in the layer pattern.
+
+Every block is pre-norm residual. ``apply_block`` returns
+``(x, new_cache, aux)`` where ``new_cache`` is the block's decode state
+(KVCache for attention kinds, recurrent state for SSM kinds, None when not
+decoding) and ``aux`` the MoE load-balance loss contribution.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfgs
+from repro.models import attention, common, moe as moe_lib, recurrent
+from repro.models.common import P, dense_spec
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU / GeGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_spec(d_model: int, d_ff: int) -> Dict[str, Any]:
+    return {
+        "wi": dense_spec(d_model, d_ff, "embed", "mlp"),
+        "wg": dense_spec(d_model, d_ff, "embed", "mlp"),
+        "wo": dense_spec(d_ff, d_model, "mlp", "embed"),
+    }
+
+
+def mlp(ctx, params, x: jnp.ndarray, activation: str = "silu",
+        name: str = "mlp") -> jnp.ndarray:
+    h = common.dense(ctx, f"{name}/wi", params["wi"], x, quant_act=False)
+    g = common.dense(ctx, f"{name}/wg", params["wg"], x, quant_act=False)
+    act = jax.nn.silu(g) if activation == "silu" else jax.nn.gelu(g)
+    h = ctx.activation(f"{name}/h", h * act)
+    return common.dense(ctx, f"{name}/wo", params["wo"], h)
+
+
+# ---------------------------------------------------------------------------
+# Block spec/apply dispatch
+# ---------------------------------------------------------------------------
+
+def _norm_spec(cfg: cfgs.ArchConfig):
+    return (common.rms_norm_spec(cfg.d_model) if cfg.norm == "rms"
+            else common.layer_norm_spec(cfg.d_model))
+
+
+def _norm(cfg, params, x):
+    return (common.rms_norm(params, x) if cfg.norm == "rms"
+            else common.layer_norm(params, x))
+
+
+def block_spec(kind: str, cfg: cfgs.ArchConfig) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    spec: Dict[str, Any] = {"norm1": _norm_spec(cfg)}
+    if kind in (cfgs.ATTN, cfgs.ATTN_LOCAL, cfgs.MOE, cfgs.MOE_LOCAL,
+                cfgs.CROSS):
+        spec["attn"] = attention.attention_spec(d, cfg.n_heads,
+                                                cfg.n_kv_heads, cfg.hd)
+        spec["norm2"] = _norm_spec(cfg)
+        if kind == cfgs.CROSS:
+            spec["cross"] = attention.attention_spec(d, cfg.n_heads,
+                                                     cfg.n_kv_heads, cfg.hd)
+            spec["norm_cross"] = _norm_spec(cfg)
+        if kind in (cfgs.MOE, cfgs.MOE_LOCAL):
+            spec["moe"] = moe_lib.moe_spec(d, f, cfg.n_experts)
+        else:
+            spec["mlp"] = mlp_spec(d, f)
+    elif kind == cfgs.RGLRU:
+        spec["rglru"] = recurrent.rglru_spec(d)
+        spec["norm2"] = _norm_spec(cfg)
+        spec["mlp"] = mlp_spec(d, f)
+    elif kind == cfgs.MLSTM:
+        spec["mlstm"] = recurrent.mlstm_spec(d, cfg.n_heads, cfg.hd)
+    elif kind == cfgs.SLSTM:
+        spec["slstm"] = recurrent.slstm_spec(d, cfg.n_heads, cfg.hd)
+    else:
+        raise ValueError(kind)
+    return spec
+
+
+def init_block_cache(kind: str, cfg: cfgs.ArchConfig, batch: int,
+                     seq_len: int, *, int8: bool,
+                     encoder_out: Optional[jnp.ndarray] = None,
+                     dtype=jnp.bfloat16) -> Any:
+    """Decode-state structure for one block."""
+    window = cfg.long_context_window or cfg.window
+    if kind in (cfgs.ATTN, cfgs.MOE, cfgs.CROSS):
+        w = cfg.long_context_window
+        size = min(seq_len, w) if w else seq_len
+        return {"kv": attention.init_cache(batch, size, cfg.n_kv_heads,
+                                           cfg.hd, int8=int8, dtype=dtype)}
+    if kind in (cfgs.ATTN_LOCAL, cfgs.MOE_LOCAL):
+        size = min(seq_len, window or seq_len)
+        return {"kv": attention.init_cache(batch, size, cfg.n_kv_heads,
+                                           cfg.hd, int8=int8, dtype=dtype)}
+    if kind == cfgs.RGLRU:
+        d = cfg.d_model
+        return {"h": jnp.zeros((batch, d), jnp.float32),
+                "conv": jnp.zeros((batch, recurrent.CONV_WIDTH - 1, d), dtype)}
+    if kind == cfgs.MLSTM:
+        return {"c": jnp.zeros((batch, cfg.n_heads, cfg.hd, cfg.hd),
+                               jnp.float32),
+                "n": jnp.zeros((batch, cfg.n_heads, cfg.hd), jnp.float32),
+                "m": jnp.zeros((batch, cfg.n_heads), jnp.float32)}
+    if kind == cfgs.SLSTM:
+        return {"c": jnp.zeros((batch, cfg.n_heads, cfg.hd), jnp.float32),
+                "n": jnp.zeros((batch, cfg.n_heads), jnp.float32),
+                "m": jnp.zeros((batch, cfg.n_heads), jnp.float32)}
+    raise ValueError(kind)
+
+
+def apply_block(kind: str, cfg: cfgs.ArchConfig, ctx, params,
+                x: jnp.ndarray, *,
+                cache: Optional[Any] = None,
+                pos: Optional[jnp.ndarray] = None,
+                encoder_out: Optional[jnp.ndarray] = None,
+                name: str = "blk") -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = None
+    local = kind in (cfgs.ATTN_LOCAL, cfgs.MOE_LOCAL)
+    window = cfg.window if local else cfg.long_context_window
+    # long_context_window turns full-attention layers into SWA *variants*
+    # for the long_500k shape (see DESIGN.md §Arch-applicability).
+
+    if kind in (cfgs.ATTN, cfgs.ATTN_LOCAL, cfgs.MOE, cfgs.MOE_LOCAL,
+                cfgs.CROSS):
+        h = _norm(cfg, params["norm1"], x)
+        h, kv_cache = attention.attention_layer(
+            ctx, params["attn"], h, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, head_dim=cfg.hd, causal=True,
+            window=window, softcap=cfg.softcap, rope_theta=cfg.rope_theta,
+            cache=None if cache is None else cache["kv"], pos=pos,
+            name=f"{name}/attn")
+        x = x + h
+        if kind == cfgs.CROSS:
+            h = _norm(cfg, params["norm_cross"], x)
+            h, _ = attention.attention_layer(
+                ctx, params["cross"], h, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.hd, causal=False,
+                rope_theta=None, kv_source=encoder_out,
+                name=f"{name}/cross")
+            x = x + h
+        h = _norm(cfg, params["norm2"], x)
+        if kind in (cfgs.MOE, cfgs.MOE_LOCAL):
+            h, aux = moe_lib.moe_ffn(
+                ctx, params["moe"], h, n_experts=cfg.n_experts,
+                top_k=cfg.moe_top_k, capacity_factor=cfg.capacity_factor,
+                activation=cfg.activation,
+                quantize_router=cfg.quant.quantize_router,
+                name=f"{name}/moe")
+        else:
+            h = mlp(ctx, params["mlp"], h, cfg.activation, name=f"{name}/mlp")
+        x = x + h
+        new_cache = None if cache is None else {"kv": kv_cache}
+
+    elif kind == cfgs.RGLRU:
+        h = _norm(cfg, params["norm1"], x)
+        h, rec_state = recurrent.rglru_block(ctx, params["rglru"], h,
+                                             state=cache, name=f"{name}/rglru")
+        x = x + h
+        h = _norm(cfg, params["norm2"], x)
+        x = x + mlp(ctx, params["mlp"], h, cfg.activation, name=f"{name}/mlp")
+        new_cache = rec_state
+
+    elif kind == cfgs.MLSTM:
+        h = _norm(cfg, params["norm1"], x)
+        h, rec_state = recurrent.mlstm_block(
+            ctx, params["mlstm"], h, n_heads=cfg.n_heads, head_dim=cfg.hd,
+            state=cache, name=f"{name}/mlstm")
+        x = x + h
+        new_cache = rec_state
+
+    elif kind == cfgs.SLSTM:
+        h = _norm(cfg, params["norm1"], x)
+        h, rec_state = recurrent.slstm_block(
+            ctx, params["slstm"], h, n_heads=cfg.n_heads, head_dim=cfg.hd,
+            state=cache, name=f"{name}/slstm")
+        x = x + h
+        new_cache = rec_state
+    else:
+        raise ValueError(kind)
+
+    return x, new_cache, aux

@@ -1,0 +1,187 @@
+"""Module substrate: params-as-pytrees with logical-axis sharding metadata.
+
+No flax/haiku offline — we use a small spec-first module system:
+
+* A model describes its parameters as a pytree of ``P`` leaves
+  (shape + initializer + *logical axes*).
+* ``init_params`` materializes the tree; ``partition_specs`` maps logical axes
+  to mesh axes through a sharding-policy rule table (``tp`` / ``fsdp``), which
+  is what pjit's ``in_shardings`` consumes.
+* Layers are plain functions ``(params, x, ctx) -> y``; the QAT context from
+  ``repro.core.fake_quant`` is threaded through every matmul site.
+
+Logical axes used across the framework:
+  "vocab", "embed", "heads", "kv", "head_dim", "mlp", "expert",
+  "layers" (stacked scan axis, never sharded), "conv_*", null (None).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Spec of one parameter tensor."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: Optional[float] = None  # None = fan-in 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def init_params(key: jax.Array, specs: PyTree, dtype=jnp.float32) -> PyTree:
+    """Materialize a spec tree into arrays. Deterministic per-leaf keys."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def one(spec: P, k):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        if spec.init == "embed":
+            return (jax.random.normal(k, spec.shape) * 0.02).astype(dtype)
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        scale = spec.scale if spec.scale is not None else 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(k, spec.shape) * scale).astype(dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(s, k) for s, k in zip(leaves, keys)])
+
+
+# ---------------------------------------------------------------------------
+# Sharding policies: logical axis -> mesh axis
+# ---------------------------------------------------------------------------
+
+def sharding_rules(policy: str, *, multi_pod: bool = False,
+                   divisible: Callable[[str], bool] = lambda a: True
+                   ) -> Dict[str, Any]:
+    """Rule table for a policy.
+
+    ``tp``   — tensor parallel only: model-dim axes over 'model'.
+    ``fsdp`` — tp + parameters additionally sharded over the data axis
+               ("embed" dim) so optimizer state scales with 1/(data*model).
+    ``divisible(axis)`` lets a config veto sharding of an axis whose size
+    does not divide the mesh (e.g. whisper's 6 heads or vocab 51865).
+    """
+    data = ("pod", "data") if multi_pod else "data"
+    rules = {
+        "vocab": "model",
+        "heads": "model",
+        "kv": "model",
+        "mlp": "model",
+        "moe_mlp": "model",
+        "expert": None,
+        "embed": data if policy == "fsdp" else None,
+        "head_dim": None,
+        "layers": None,
+        None: None,
+    }
+    return {k: (v if (k is None or divisible(k)) else None)
+            for k, v in rules.items()}
+
+
+def partition_specs(specs: PyTree, rules: Dict[str, Any]) -> PyTree:
+    """Spec tree -> PartitionSpec tree for pjit in_shardings."""
+    def one(spec: P) -> PartitionSpec:
+        return PartitionSpec(*(rules.get(a, None) for a in spec.axes))
+    return jax.tree_util.tree_map(one, specs, is_leaf=_is_spec)
+
+
+def stack_specs(specs: PyTree, n: int) -> PyTree:
+    """Prepend a scanned 'layers' axis of size n to every leaf spec."""
+    def one(spec: P) -> P:
+        return P((n,) + spec.shape, ("layers",) + spec.axes,
+                 spec.init, spec.scale)
+    return jax.tree_util.tree_map(one, specs, is_leaf=_is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers (functional; QAT ctx threaded)
+# ---------------------------------------------------------------------------
+
+def dense(ctx, name: str, params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+          *, quant_act: bool = True) -> jnp.ndarray:
+    """x @ W (+ b) with QAT weight/activation fake-quantization hooks."""
+    w = ctx.weight(f"{name}/w", params["w"])
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    if quant_act:
+        y = ctx.activation(f"{name}/out", y)
+    return y
+
+
+def dense_spec(d_in: int, d_out: int, in_axis: Optional[str],
+               out_axis: Optional[str], *, bias: bool = False,
+               scale: Optional[float] = None) -> Dict[str, P]:
+    spec = {"w": P((d_in, d_out), (in_axis, out_axis), scale=scale)}
+    if bias:
+        spec["b"] = P((d_out,), (out_axis,), init="zeros")
+    return spec
+
+
+def rms_norm(params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def rms_norm_spec(d: int) -> Dict[str, P]:
+    return {"scale": P((d,), ("embed",), init="zeros")}
+
+
+def layer_norm(params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(x.dtype)
+
+
+def layer_norm_spec(d: int) -> Dict[str, P]:
+    return {"scale": P((d,), ("embed",), init="ones"),
+            "bias": P((d,), ("embed",), init="zeros")}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    angles = angles[..., None, :]                              # head axis
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def with_constraint(x: jnp.ndarray, spec: PartitionSpec) -> jnp.ndarray:
+    """Sharding constraint that is a no-op outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x

@@ -1,0 +1,128 @@
+"""Mixture-of-Experts feed-forward (mixtral-8x7b, grok-1: 8 experts, top-2).
+
+GShard-style capacity-based dispatch so every shape is static under pjit:
+
+  router logits (fp32, never quantized by default — small and sensitive)
+  -> top-k expert choice + normalized weights
+  -> position-in-expert via cumsum; tokens beyond ``capacity`` are dropped
+  -> dispatch einsum to (experts, capacity, d) slots
+  -> per-expert SwiGLU FFN (expert weights stacked on a leading axis; the
+     d_ff dimension is tensor-parallel over the 'model' mesh axis)
+  -> combine einsum back with routing weights.
+
+The auxiliary load-balance loss (Switch/Mixtral form: E * Σ_e f_e · p_e) is
+returned so the trainer can add it to the task loss.
+
+Tokens are processed in groups (seq chunks) to bound the dispatch one-hot
+tensor at (groups, group_size, experts * capacity) — the classic GShard
+grouping trade-off.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import P, dense_spec
+
+
+def moe_spec(d_model: int, d_ff: int, n_experts: int) -> Dict[str, Any]:
+    return {
+        "router": dense_spec(d_model, n_experts, "embed", None),
+        "wi": {"w": P((n_experts, d_model, d_ff),
+                      ("expert", "embed", "moe_mlp"))},
+        "wg": {"w": P((n_experts, d_model, d_ff),
+                      ("expert", "embed", "moe_mlp"))},
+        "wo": {"w": P((n_experts, d_ff, d_model),
+                      ("expert", "moe_mlp", "embed"))},
+    }
+
+
+def moe_ffn(ctx, params, x: jnp.ndarray, *, n_experts: int, top_k: int,
+            capacity_factor: float = 1.25, group_size: int = 512,
+            activation: str = "silu", quantize_router: bool = False,
+            name: str = "moe") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    b, s, d = x.shape
+    tokens = b * s
+    group_size = min(group_size, tokens)
+    assert tokens % group_size == 0, (tokens, group_size)
+    n_groups = tokens // group_size
+    capacity = int(capacity_factor * top_k * group_size / n_experts)
+    capacity = max(capacity, top_k)
+
+    # Groups follow the batch sharding: constrain x to batch-only (undoes the
+    # inter-block sequence-parallel layout so the (b,s)->(g,s_g) reshape is a
+    # local reshape, not an involuntary full rematerialization).
+    from jax.sharding import PartitionSpec as _PS
+    x = common.with_constraint(x, _PS("data", None, None))
+    xg = x.reshape(n_groups, group_size, d)
+    xg = common.with_constraint(xg, _PS("data", None, None))
+
+    # Router in fp32 (optionally quantized — off by default, see DESIGN.md).
+    rw = params["router"]["w"]
+    if quantize_router:
+        rw = ctx.weight(f"{name}/router", rw)
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        rw.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (g, s, e)
+
+    # top-k choice; weights renormalized over the chosen experts (Mixtral).
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)        # (g, s, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # one-hot (g, s, k, e); position of each token within its expert queue
+    onehot = jax.nn.one_hot(expert_idx, n_experts, dtype=jnp.float32)
+    pos_in_expert = (jnp.cumsum(onehot.reshape(n_groups, group_size * top_k,
+                                               n_experts), axis=1)
+                     .reshape(n_groups, group_size, top_k, n_experts) - 1.0)
+    keep = (pos_in_expert < capacity) * onehot                 # drop overflow
+    pos = jnp.sum(pos_in_expert * keep, axis=-1)               # (g, s, k)
+
+    # combine[g, s, e, c] = gate weight if token s went to slot (e, c)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), capacity,
+                            dtype=jnp.float32)                 # (g,s,k,c)
+    combine = jnp.einsum("gsk,gske,gskc->gsec", gate_vals, keep, pos_oh)
+    from jax.sharding import PartitionSpec as _PS
+    combine = common.with_constraint(combine, _PS("data", None, None, None))
+    dispatch = (combine > 0.0).astype(x.dtype)                 # (g,s,e,c)
+
+    # load-balance auxiliary loss: E * sum_e fraction_e * prob_e
+    frac = jnp.mean(jnp.sum(onehot[:, :, 0, :], axis=1)
+                    / group_size, axis=0)                      # top-1 fraction
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = n_experts * jnp.sum(frac * mean_prob)
+
+    # dispatch -> expert FFN -> combine. Expert-buffer activations are
+    # explicitly sharded: token groups over the data axes, the expert hidden
+    # dim over 'model' (matching the tensor-parallel expert weights) —
+    # without these the (e, g, c, d) buffers replicate across 'model'.
+    from jax.sharding import PartitionSpec as PS
+    data = "data"
+    tok_spec = PS(None, data, None, None)
+    hid_spec = PS(None, data, None, "model")
+
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch, xg)            # (e,g,c,d)
+    # NB: xe/ye deliberately carry NO sharding constraint — the f-contraction
+    # produces partial sums over 'model', and the combine einsum is linear in
+    # d, so GSPMD can defer the all-reduce to the (g,s,d) output (2.5x less
+    # volume than reducing the (e,g,c,d) expert buffer; §Perf iteration A1).
+    wi = ctx.weight(f"{name}/wi", params["wi"]["w"]).astype(x.dtype)
+    wg = ctx.weight(f"{name}/wg", params["wg"]["w"]).astype(x.dtype)
+    wo = ctx.weight(f"{name}/wo", params["wo"]["w"]).astype(x.dtype)
+    h = jnp.einsum("egcd,edf->egcf", xe, wi)
+    gate = jnp.einsum("egcd,edf->egcf", xe, wg)
+    act = jax.nn.silu(gate) if activation == "silu" else jax.nn.gelu(gate)
+    h = ctx.activation(f"{name}/h", h * act)
+    h = common.with_constraint(h, hid_spec)
+    # (§Perf A2, REFUTED: combining over capacity before the wo contraction
+    # — einsum('gsec,egcf->gsef') then ('gsef,efd->gsd') — shrinks the
+    # all-reduce but recomputes wo over s instead of the c=cf·k·s/e capacity
+    # slots: 3.2x more matmul FLOPs. Reverted; see EXPERIMENTS.md §Perf.)
+    ye = jnp.einsum("egcf,efd->egcd", h, wo)                   # (e,g,c,d)
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), ye)
+    y = common.with_constraint(y, _PS("data", None, None))
+    return y.reshape(b, s, d), aux.astype(jnp.float32)

@@ -1,0 +1,272 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin) and xLSTM (mLSTM/sLSTM).
+
+TPU adaptation notes (see DESIGN.md):
+* RG-LRU trains with ``jax.lax.associative_scan`` over the sequence — the
+  linear recurrence h_t = a_t ⊙ h_{t-1} + b_t is associative, so the scan is
+  O(log S) depth and maps onto the VPU; decode is a single-step update.
+* mLSTM/sLSTM use exponentially-gated nonlinear recurrences; training runs a
+  chunked ``lax.scan`` (outer scan over chunks, inner rematerialized) so the
+  backward pass stores carries only at chunk boundaries instead of every
+  timestep — the scan-level analogue of flash attention's recompute.
+* Recurrent *state* stays fp32 even under QAT: quantizing carried state
+  compounds error across timesteps (documented deviation; projections and
+  activations are quantized normally).
+
+State layout (decode "cache" for these layers):
+  rglru: {"h": (B, Dr), "conv": (B, W-1, Dr)}
+  mlstm: {"c": (B, H, Dh, Dh), "n": (B, H, Dh), "m": (B, H)}
+  slstm: {"c": (B, H, Dh), "n": (B, H), "m": (B, H), "h": (B, H, Dh)}
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import P, dense_spec
+
+CONV_WIDTH = 4
+
+
+def scan_chunked(step_fn, carry, xs, chunk: int):
+    """lax.scan with jax.checkpoint'd chunks (memory-bounded backward)."""
+    length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    if length <= chunk or length % chunk != 0:
+        return jax.lax.scan(step_fn, carry, xs)
+
+    n_chunks = length // chunk
+    xs_chunked = jax.tree_util.tree_map(
+        lambda x: x.reshape((n_chunks, chunk) + x.shape[1:]), xs)
+
+    @jax.checkpoint
+    def chunk_fn(carry, xc):
+        return jax.lax.scan(step_fn, carry, xc)
+
+    carry, ys = jax.lax.scan(chunk_fn, carry, xs_chunked)
+    ys = jax.tree_util.tree_map(
+        lambda y: y.reshape((length,) + y.shape[2:]), ys)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal temporal conv (griffin's conv1d, width 4)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(params, x: jnp.ndarray,
+                  state: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """x: (B, S, C); state: (B, W-1, C) previous inputs for decode."""
+    w = params["w"].astype(x.dtype)          # (W, C)
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+        new_state = None if x.shape[1] < width - 1 else xp[:, -(width - 1):]
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = xp[:, -(width - 1):]
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    return out + params["b"].astype(x.dtype), new_state
+
+
+def conv1d_spec(channels: int) -> Dict[str, P]:
+    return {"w": P((CONV_WIDTH, channels), (None, "mlp"), scale=0.5),
+            "b": P((channels,), ("mlp",), init="zeros")}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Real-Gated Linear Recurrent Unit) — arXiv:2402.19427
+# ---------------------------------------------------------------------------
+
+def rglru_spec(d_model: int) -> Dict[str, Any]:
+    dr = d_model  # lru width == d_model in recurrentgemma-2b
+    return {
+        "wx": dense_spec(d_model, dr, "embed", "mlp"),
+        "wg": dense_spec(d_model, dr, "embed", "mlp"),
+        "conv": conv1d_spec(dr),
+        "gate_a": dense_spec(dr, dr, "mlp", None),
+        "gate_x": dense_spec(dr, dr, "mlp", None),
+        "log_lambda": P((dr,), ("mlp",), init="normal", scale=0.5),
+        "wo": dense_spec(dr, d_model, "mlp", "embed"),
+    }
+
+
+_C = 8.0  # griffin's recurrence sharpness constant
+
+
+def _rglru_coeffs(ctx, params, x, name):
+    """Per-timestep (a, b) of the linear recurrence h = a*h + b."""
+    r = jax.nn.sigmoid(common.dense(ctx, f"{name}/gate_a", params["gate_a"],
+                                    x, quant_act=False).astype(jnp.float32))
+    i = jax.nn.sigmoid(common.dense(ctx, f"{name}/gate_x", params["gate_x"],
+                                    x, quant_act=False).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["log_lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) \
+        * (i * x.astype(jnp.float32))
+    return a, b
+
+
+def rglru_block(ctx, params, x: jnp.ndarray,
+                state: Optional[Dict[str, jnp.ndarray]] = None,
+                name: str = "rglru"
+                ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Griffin recurrent block: Wo(GeLU(Wg x) ⊙ RGLRU(conv1d(Wx x)))."""
+    gate = jax.nn.gelu(common.dense(ctx, f"{name}/wg", params["wg"], x))
+    xr = common.dense(ctx, f"{name}/wx", params["wx"], x, quant_act=False)
+    xr, conv_state = causal_conv1d(params["conv"], xr,
+                                   None if state is None else state["conv"])
+    xr = ctx.activation(f"{name}/conv_out", xr)
+
+    a, b = _rglru_coeffs(ctx, params, xr, name)
+
+    if state is None:
+        # Training/prefill: associative scan over the sequence axis.
+        def combine(lhs, rhs):
+            a1, b1 = lhs
+            a2, b2 = rhs
+            return a1 * a2, a2 * b1 + b2
+        a_s, b_s = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h = b_s  # h_t with h_0 = 0 ⇒ h_t == accumulated b
+        new_state = None if x.shape[1] == 0 else {
+            "h": h[:, -1], "conv": conv_state}
+    else:
+        h = a * state["h"][:, None].astype(jnp.float32) + b
+        new_state = {"h": h[:, -1], "conv": conv_state}
+
+    h = ctx.activation(f"{name}/h", h.astype(x.dtype))
+    out = common.dense(ctx, f"{name}/wo", params["wo"], h * gate)
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# xLSTM — arXiv:2405.04517
+# ---------------------------------------------------------------------------
+
+def mlstm_spec(d_model: int, n_heads: int, head_dim: int) -> Dict[str, Any]:
+    d_inner = n_heads * head_dim
+    return {
+        "wq": dense_spec(d_model, d_inner, "embed", "heads"),
+        "wk": dense_spec(d_model, d_inner, "embed", "heads"),
+        "wv": dense_spec(d_model, d_inner, "embed", "heads"),
+        "wi": dense_spec(d_model, n_heads, "embed", None, bias=True),
+        "wf": dense_spec(d_model, n_heads, "embed", None, bias=True),
+        "wg": dense_spec(d_model, d_inner, "embed", "heads"),
+        "wo": dense_spec(d_inner, d_model, "heads", "embed"),
+    }
+
+
+def _mlstm_gates(ctx, params, x, name):
+    i_pre = common.dense(ctx, f"{name}/wi", params["wi"], x, quant_act=False)
+    f_pre = common.dense(ctx, f"{name}/wf", params["wf"], x, quant_act=False)
+    return i_pre.astype(jnp.float32), f_pre.astype(jnp.float32)
+
+
+def _mlstm_step(carry, inp):
+    """Stabilized mLSTM recurrence (paper eq. 19-27). One timestep."""
+    c, n, m = carry                      # (B,H,Dh,Dh), (B,H,Dh), (B,H)
+    q, k, v, i_pre, f_pre = inp          # (B,H,Dh) x3, (B,H) x2
+    log_f = -jax.nn.softplus(-f_pre)     # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c_new = (f_g[..., None, None] * c
+             + i_g[..., None, None] * v[..., :, None] * k[..., None, :])
+    n_new = f_g[..., None] * n + i_g[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q)),
+                        jnp.exp(-m_new))
+    h = jnp.einsum("bhde,bhe->bhd", c_new, q) / denom[..., None]
+    return (c_new, n_new, m_new), h
+
+
+def mlstm_block(ctx, params, x: jnp.ndarray, *, n_heads: int, head_dim: int,
+                state: Optional[Dict[str, jnp.ndarray]] = None,
+                chunk: int = 128, name: str = "mlstm"
+                ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    b, s, d = x.shape
+    to_heads = lambda t: t.reshape(b, s, n_heads, head_dim).astype(jnp.float32)
+    q = to_heads(common.dense(ctx, f"{name}/wq", params["wq"], x)) \
+        * head_dim ** -0.5
+    k = to_heads(common.dense(ctx, f"{name}/wk", params["wk"], x)) \
+        * head_dim ** -0.5
+    v = to_heads(common.dense(ctx, f"{name}/wv", params["wv"], x))
+    i_pre, f_pre = _mlstm_gates(ctx, params, x, name)
+
+    if state is None:
+        c0 = jnp.zeros((b, n_heads, head_dim, head_dim), jnp.float32)
+        n0 = jnp.zeros((b, n_heads, head_dim), jnp.float32)
+        m0 = jnp.zeros((b, n_heads), jnp.float32)
+    else:
+        c0, n0, m0 = state["c"], state["n"], state["m"]
+
+    xs = jax.tree_util.tree_map(
+        lambda t: jnp.moveaxis(t, 1, 0), (q, k, v, i_pre, f_pre))
+    (c, n, m), hs = scan_chunked(_mlstm_step, (c0, n0, m0), xs, chunk)
+    h = jnp.moveaxis(hs, 0, 1)                     # (B,S,H,Dh)
+    new_state = {"c": c, "n": n, "m": m}
+
+    gate = jax.nn.silu(common.dense(ctx, f"{name}/wg", params["wg"], x))
+    h = ctx.activation(f"{name}/h", h.reshape(b, s, n_heads * head_dim)
+                       .astype(x.dtype))
+    out = common.dense(ctx, f"{name}/wo", params["wo"], h * gate)
+    return out, new_state
+
+
+def slstm_spec(d_model: int, n_heads: int, head_dim: int) -> Dict[str, Any]:
+    d_inner = n_heads * head_dim
+    return {
+        "wz": dense_spec(d_model, d_inner, "embed", "heads"),
+        "wi": dense_spec(d_model, n_heads, "embed", None, bias=True),
+        "wf": dense_spec(d_model, n_heads, "embed", None, bias=True),
+        "wo_gate": dense_spec(d_model, d_inner, "embed", "heads"),
+        "wo": dense_spec(d_inner, d_model, "heads", "embed"),
+    }
+
+
+def _slstm_step(carry, inp):
+    c, n, m = carry                       # (B,H,Dh), (B,H), (B,H)
+    z, i_pre, f_pre = inp                 # (B,H,Dh), (B,H), (B,H)
+    log_f = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c_new = f_g[..., None] * c + i_g[..., None] * jnp.tanh(z)
+    n_new = f_g * n + i_g
+    h = c_new / jnp.maximum(n_new, 1.0)[..., None]
+    return (c_new, n_new, m_new), h
+
+
+def slstm_block(ctx, params, x: jnp.ndarray, *, n_heads: int, head_dim: int,
+                state: Optional[Dict[str, jnp.ndarray]] = None,
+                chunk: int = 128, name: str = "slstm"
+                ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    b, s, d = x.shape
+    z = common.dense(ctx, f"{name}/wz", params["wz"], x) \
+        .reshape(b, s, n_heads, head_dim).astype(jnp.float32)
+    i_pre = common.dense(ctx, f"{name}/wi", params["wi"], x,
+                         quant_act=False).astype(jnp.float32)
+    f_pre = common.dense(ctx, f"{name}/wf", params["wf"], x,
+                         quant_act=False).astype(jnp.float32)
+
+    if state is None:
+        c0 = jnp.zeros((b, n_heads, head_dim), jnp.float32)
+        n0 = jnp.zeros((b, n_heads), jnp.float32)
+        m0 = jnp.zeros((b, n_heads), jnp.float32)
+    else:
+        c0, n0, m0 = state["c"], state["n"], state["m"]
+
+    xs = jax.tree_util.tree_map(
+        lambda t: jnp.moveaxis(t, 1, 0), (z, i_pre, f_pre))
+    (c, n, m), hs = scan_chunked(_slstm_step, (c0, n0, m0), xs, chunk)
+    h = jnp.moveaxis(hs, 0, 1)
+    new_state = {"c": c, "n": n, "m": m}
+
+    gate = jax.nn.silu(common.dense(ctx, f"{name}/wo_gate", params["wo_gate"],
+                                    x))
+    h = ctx.activation(f"{name}/h", h.reshape(b, s, n_heads * head_dim)
+                       .astype(x.dtype))
+    out = common.dense(ctx, f"{name}/wo", params["wo"], h * gate)
+    return out, new_state

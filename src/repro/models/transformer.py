@@ -1,0 +1,410 @@
+"""The full language model: embed -> scanned block pattern -> norm -> head.
+
+Layer stacking
+--------------
+``cfg.pattern`` is the repeating unit of block kinds (e.g. gemma2's
+``(attn_local, attn)``, llama-3.2-vision's ``(attn, attn, attn, attn,
+cross)``). Parameters for all repeats are stacked on a leading "layers" axis
+and applied with ``lax.scan`` — one HLO body regardless of depth, which keeps
+compile time and code size bounded for 40-100 layer configs. A remainder
+(``n_layers % len(pattern)``) is applied unrolled.
+
+QAT observers inside the scan are carried through the scan state (one
+observer slot per site name, shared across repeats — see DESIGN.md; the
+RL-study networks are unscanned and get exact per-layer observers).
+
+Modes
+-----
+* ``forward(...)``                      — logits for a full sequence (train).
+* ``loss_fn(...)``                      — seq-chunked cross-entropy (+ MoE aux).
+* ``prefill(...)``                      — hidden pass returning last-token
+                                          logits (prefill_32k dry-run shape).
+* ``decode_step(...)``                  — one token through per-layer caches.
+* ``init_caches(...)``                  — decode state for a context length.
+
+Encoder (whisper) / vision (llama-3.2-vision) frontends are STUBS per the
+assignment: ``encoder_out`` arrives as precomputed frame/patch embeddings;
+whisper additionally runs its transformer *encoder* stack over them.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.configs import base as cfgs
+from repro.core import fake_quant
+from repro.core.qconfig import QuantConfig
+from repro.models import attention, blocks, common
+from repro.models.common import P
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def _unit_spec(cfg: cfgs.ArchConfig) -> Dict[str, Any]:
+    return {f"b{i}_{kind}": blocks.block_spec(kind, cfg)
+            for i, kind in enumerate(cfg.pattern)}
+
+
+def param_specs(cfg: cfgs.ArchConfig) -> Dict[str, Any]:
+    spec: Dict[str, Any] = {
+        "embed": {"w": P((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                         init="embed")},
+        "final_norm": (common.rms_norm_spec(cfg.d_model) if cfg.norm == "rms"
+                       else common.layer_norm_spec(cfg.d_model)),
+        "layers": common.stack_specs(_unit_spec(cfg), cfg.pattern_repeats),
+    }
+    if cfg.pattern_remainder:
+        spec["remainder"] = {
+            f"r{i}_{kind}": blocks.block_spec(kind, cfg)
+            for i, kind in enumerate(cfg.pattern_remainder)}
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = {"w": P((cfg.d_model, cfg.vocab),
+                                  ("embed", "vocab"))}
+    if cfg.encoder_layers:
+        spec["encoder"] = common.stack_specs(
+            {"b0_attn": blocks.block_spec(cfgs.ATTN, cfg)},
+            cfg.encoder_layers)
+        spec["encoder_norm"] = (common.rms_norm_spec(cfg.d_model)
+                                if cfg.norm == "rms"
+                                else common.layer_norm_spec(cfg.d_model))
+    return spec
+
+
+def init_params(cfg: cfgs.ArchConfig, key: jax.Array,
+                dtype=jnp.float32) -> PyTree:
+    return common.init_params(key, param_specs(cfg), dtype)
+
+
+def partition_specs(cfg: cfgs.ArchConfig, *, multi_pod: bool = False) -> PyTree:
+    mesh_div = 32 if multi_pod else 16  # data-axis size for fsdp 'embed'
+
+    def divisible(axis: str) -> bool:
+        model = 16
+        if axis == "vocab":
+            return cfg.vocab % model == 0
+        if axis == "heads":
+            return (cfg.n_heads * cfg.hd) % model == 0
+        if axis == "kv":
+            return (cfg.n_kv_heads * cfg.hd) % model == 0
+        if axis in ("mlp", "moe_mlp"):
+            return cfg.d_ff % model == 0 if cfg.d_ff else False
+        if axis == "embed":
+            return cfg.d_model % mesh_div == 0
+        return True
+
+    rules = common.sharding_rules(cfg.sharding, multi_pod=multi_pod,
+                                  divisible=divisible)
+    return common.partition_specs(param_specs(cfg), rules)
+
+
+# ---------------------------------------------------------------------------
+# QAT observer collection discovery
+# ---------------------------------------------------------------------------
+
+class _NameRecorder:
+    """Trace-time context that records every activation site name."""
+
+    def __init__(self, config: QuantConfig):
+        self.config = config
+        self.names: set[str] = set()
+
+    def weight(self, name: str, w):
+        return w
+
+    def activation(self, name: str, x):
+        self.names.add(name)
+        return x
+
+    def merged_collection(self):
+        return {}
+
+
+def qat_site_names(cfg: cfgs.ArchConfig, *, scan_sites: bool = True
+                   ) -> Tuple[set, set]:
+    """Discover activation-observer site names (inside vs outside the scan)."""
+    rec_in, rec_out = _NameRecorder(cfg.quant), _NameRecorder(cfg.quant)
+
+    def run():
+        params = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32),
+            param_specs(cfg), is_leaf=lambda x: isinstance(x, P))
+        tokens = jnp.zeros((1, max(len(cfg.pattern), 2)), jnp.int32)
+        enc = (jnp.zeros((1, 4, cfg.d_model), jnp.float32)
+               if (cfg.cross_attn or cfg.encoder_layers) else None)
+        forward(cfg, params, tokens, ctx_in=rec_in, ctx_out=rec_out,
+                encoder_out=enc)
+        return ()
+
+    jax.eval_shape(run)
+    return rec_in.names, rec_out.names
+
+
+def init_qat_collection(cfg: cfgs.ArchConfig) -> Dict[str, Any]:
+    inside, outside = qat_site_names(cfg)
+    return {name: fake_quant.ObserverState.init()
+            for name in sorted(inside | outside)}
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _batch_constraint(x: jnp.ndarray, multi_pod: bool) -> jnp.ndarray:
+    """Activation sharding between blocks: batch over the data axes, and —
+    sequence parallelism — the seq dim over 'model' when divisible. This
+    bounds the lax.scan carry (and remat residuals) at 40-100 layers: the
+    (B, S, D) carry is fully sharded instead of model-axis-replicated."""
+    axes = ("pod", "data") if multi_pod else "data"
+    seq = "model" if (x.ndim == 3 and x.shape[1] % 16 == 0
+                      and x.shape[1] > 1) else None
+    return common.with_constraint(
+        x, PartitionSpec(axes, seq, *([None] * (x.ndim - 2))))
+
+
+def _embed(cfg, ctx, params, tokens):
+    w = params["embed"]["w"]
+    x = jnp.take(w, tokens, axis=0)
+    if cfg.tie_embeddings:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    return ctx.activation("embed/out", x)
+
+
+def _head(cfg, ctx, params, x):
+    if cfg.tie_embeddings:
+        w = ctx.weight("lm_head/w", params["embed"]["w"])
+        logits = jnp.einsum("...d,vd->...v", x, w.astype(x.dtype))
+    else:
+        w = ctx.weight("lm_head/w", params["lm_head"]["w"])
+        logits = jnp.einsum("...d,dv->...v", x, w.astype(x.dtype))
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(
+            logits.astype(jnp.float32) / cfg.final_softcap)
+    return logits
+
+
+def _make_ctx(cfg, collection, step):
+    return fake_quant.make_context(cfg.quant, collection, step)
+
+
+def _run_encoder(cfg, params, ctx, encoder_out):
+    """Whisper: run the transformer encoder over stub frame embeddings."""
+    if not cfg.encoder_layers:
+        return encoder_out
+
+    def enc_unit(x, layer_params):
+        h = common.rms_norm(layer_params["b0_attn"]["norm1"], x) \
+            if cfg.norm == "rms" else \
+            common.layer_norm(layer_params["b0_attn"]["norm1"], x)
+        h, _ = attention.attention_layer(
+            ctx, layer_params["b0_attn"]["attn"], h, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, head_dim=cfg.hd, causal=False,
+            rope_theta=cfg.rope_theta, name="enc/attn")
+        x = x + h
+        h = common.rms_norm(layer_params["b0_attn"]["norm2"], x) \
+            if cfg.norm == "rms" else \
+            common.layer_norm(layer_params["b0_attn"]["norm2"], x)
+        x = x + blocks.mlp(ctx, layer_params["b0_attn"]["mlp"], h,
+                           cfg.activation, name="enc/mlp")
+        return x, None
+
+    x, _ = jax.lax.scan(lambda c, p: enc_unit(c, p), encoder_out,
+                        params["encoder"])
+    norm = (common.rms_norm if cfg.norm == "rms" else common.layer_norm)
+    return norm(params["encoder_norm"], x)
+
+
+def forward(cfg: cfgs.ArchConfig, params: PyTree, tokens: jnp.ndarray, *,
+            qat_collection: Optional[Dict] = None, step=0,
+            encoder_out: Optional[jnp.ndarray] = None,
+            multi_pod: bool = False,
+            ctx_in=None, ctx_out=None,
+            return_hidden: bool = False
+            ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict]:
+    """Full-sequence forward. Returns (logits_or_hidden, aux_loss, new_qat).
+
+    ``ctx_in``/``ctx_out`` override the QAT contexts (used by name discovery);
+    ``ctx_in`` is used inside the scanned units, ``ctx_out`` outside.
+    """
+    collection = qat_collection or {}
+    inside_coll = {k: v for k, v in collection.items() if k.startswith("unit/")}
+    outside_coll = {k: v for k, v in collection.items()
+                    if not k.startswith("unit/")}
+    ctx_out = ctx_out or _make_ctx(cfg, outside_coll, step)
+
+    x = _embed(cfg, ctx_out, params, tokens)
+    x = _batch_constraint(x, multi_pod)
+    if encoder_out is not None:
+        encoder_out = _run_encoder(cfg, params, ctx_out, encoder_out)
+
+    def unit_fn(carry, layer_params):
+        x, obs, aux = carry
+        ctx = ctx_in or _make_ctx(cfg, obs, step)
+        for i, kind in enumerate(cfg.pattern):
+            x, _, a = blocks.apply_block(
+                kind, cfg, ctx, layer_params[f"b{i}_{kind}"], x,
+                encoder_out=encoder_out, name=f"unit/b{i}")
+            aux = aux + a
+        x = _batch_constraint(x, multi_pod)
+        new_obs = obs if ctx_in is not None else ctx.merged_collection()
+        return (x, new_obs, aux), None
+
+    if cfg.remat:
+        unit_fn = jax.checkpoint(unit_fn)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.scan_layers:
+        (x, inside_coll, aux), _ = jax.lax.scan(
+            unit_fn, (x, inside_coll, aux0), params["layers"])
+    else:
+        carry = (x, inside_coll, aux0)
+        for li in range(cfg.pattern_repeats):
+            unit = jax.tree_util.tree_map(lambda p: p[li], params["layers"])
+            carry, _ = unit_fn(carry, unit)
+        x, inside_coll, aux = carry
+
+    for i, kind in enumerate(cfg.pattern_remainder):
+        ctx_r = ctx_in or _make_ctx(cfg, inside_coll, step)
+        x, _, a = blocks.apply_block(
+            kind, cfg, ctx_r, params["remainder"][f"r{i}_{kind}"], x,
+            encoder_out=encoder_out, name=f"unit/b{i}")
+        if ctx_in is None:
+            inside_coll = ctx_r.merged_collection()
+        aux = aux + a
+
+    norm = (common.rms_norm if cfg.norm == "rms" else common.layer_norm)
+    x = norm(params["final_norm"], x)
+    if return_hidden:
+        out = x
+    else:
+        out = _head(cfg, ctx_out, params, x)
+    new_coll = {**ctx_out.merged_collection(), **inside_coll}
+    return out, aux, new_coll
+
+
+# ---------------------------------------------------------------------------
+# Loss (sequence-chunked cross entropy)
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: cfgs.ArchConfig, params: PyTree, batch: Dict[str, jnp.ndarray],
+            *, qat_collection=None, step=0, multi_pod: bool = False,
+            ce_chunk: int = 256, aux_weight: float = 0.01
+            ) -> Tuple[jnp.ndarray, Dict]:
+    """Causal-LM loss. ``batch`` = {"tokens": (B,S) int32, "labels": (B,S)}.
+
+    The lm-head matmul + log-softmax is computed in sequence chunks under
+    jax.checkpoint so the (B, S, vocab) logits tensor never materializes —
+    required for the 256k-vocab configs at 4k×256 tokens.
+    """
+    tokens, labels = batch["tokens"], batch["labels"]
+    encoder_out = batch.get("encoder_out")
+    hidden, aux, new_coll = forward(
+        cfg, params, tokens, qat_collection=qat_collection, step=step,
+        encoder_out=encoder_out, multi_pod=multi_pod, return_hidden=True)
+
+    ctx = _make_ctx(cfg, {k: v for k, v in (qat_collection or {}).items()
+                          if not k.startswith("unit/")}, step)
+
+    b, s, d = hidden.shape
+    ce_chunk = min(ce_chunk, s)
+    n_chunks = s // ce_chunk if s % ce_chunk == 0 else 1
+    if s % ce_chunk != 0:
+        ce_chunk = s
+
+    @jax.checkpoint
+    def chunk_loss(h_chunk, y_chunk):
+        logits = _head(cfg, ctx, params, h_chunk).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y_chunk[..., None],
+                                   axis=-1)[..., 0]
+        return jnp.sum(logz - gold)
+
+    h_chunks = jnp.moveaxis(hidden.reshape(b, n_chunks, ce_chunk, d), 1, 0)
+    y_chunks = jnp.moveaxis(labels.reshape(b, n_chunks, ce_chunk), 1, 0)
+    total = jax.lax.map(lambda hy: chunk_loss(*hy), (h_chunks, y_chunks))
+    loss = jnp.sum(total) / (b * s)
+    metrics = {"ce_loss": loss, "aux_loss": aux,
+               "qat_collection": new_coll}
+    return loss + aux_weight * aux, metrics
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: cfgs.ArchConfig, params: PyTree, tokens: jnp.ndarray, *,
+            encoder_out: Optional[jnp.ndarray] = None,
+            multi_pod: bool = False) -> jnp.ndarray:
+    """Prompt pass returning last-token logits (inference-prefill shape)."""
+    hidden, _, _ = forward(cfg, params, tokens, encoder_out=encoder_out,
+                           multi_pod=multi_pod, return_hidden=True)
+    ctx = _make_ctx(cfg, {}, 0)
+    return _head(cfg, ctx, params, hidden[:, -1:])
+
+
+def init_caches(cfg: cfgs.ArchConfig, batch: int, seq_len: int, *,
+                int8: Optional[bool] = None, dtype=jnp.bfloat16) -> PyTree:
+    """Decode-state pytree: stacked over pattern repeats + remainder list."""
+    int8 = cfg.quant.int8_kv_cache if int8 is None else int8
+
+    def unit_cache():
+        return {f"b{i}_{kind}": blocks.init_block_cache(
+                    kind, cfg, batch, seq_len, int8=int8, dtype=dtype)
+                for i, kind in enumerate(cfg.pattern)}
+
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs),
+        *[unit_cache() for _ in range(cfg.pattern_repeats)]) \
+        if cfg.pattern_repeats > 1 else jax.tree_util.tree_map(
+            lambda x: x[None], unit_cache())
+    remainder = [blocks.init_block_cache(kind, cfg, batch, seq_len,
+                                         int8=int8, dtype=dtype)
+                 for kind in cfg.pattern_remainder]
+    return {"stacked": stacked, "remainder": remainder}
+
+
+def decode_step(cfg: cfgs.ArchConfig, params: PyTree, tokens: jnp.ndarray,
+                caches: PyTree, pos: jnp.ndarray, *,
+                encoder_out: Optional[jnp.ndarray] = None,
+                multi_pod: bool = False
+                ) -> Tuple[jnp.ndarray, PyTree]:
+    """One decode token: tokens (B, 1), pos scalar -> (logits, new caches)."""
+    ctx = _make_ctx(cfg, {}, 0)
+    x = _embed(cfg, ctx, params, tokens)
+    x = _batch_constraint(x, multi_pod)
+    if encoder_out is not None:
+        encoder_out = _run_encoder(cfg, params, ctx, encoder_out)
+
+    def unit_fn(x, scanned):
+        layer_params, layer_cache = scanned
+        new_cache = {}
+        for i, kind in enumerate(cfg.pattern):
+            key = f"b{i}_{kind}"
+            x, nc, _ = blocks.apply_block(
+                kind, cfg, ctx, layer_params[key], x,
+                cache=layer_cache[key], pos=pos, encoder_out=encoder_out,
+                name=f"unit/b{i}")
+            new_cache[key] = nc
+        return x, new_cache
+
+    x, new_stacked = jax.lax.scan(unit_fn, x,
+                                  (params["layers"], caches["stacked"]))
+    new_remainder = []
+    for i, kind in enumerate(cfg.pattern_remainder):
+        x, nc, _ = blocks.apply_block(
+            kind, cfg, ctx, params["remainder"][f"r{i}_{kind}"], x,
+            cache=caches["remainder"][i], pos=pos, encoder_out=encoder_out,
+            name=f"unit/b{i}")
+        new_remainder.append(nc)
+
+    norm = (common.rms_norm if cfg.norm == "rms" else common.layer_norm)
+    x = norm(params["final_norm"], x)
+    logits = _head(cfg, ctx, params, x)
+    return logits, {"stacked": new_stacked, "remainder": new_remainder}

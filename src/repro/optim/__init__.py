@@ -1,0 +1,10 @@
+"""Optimizers (handwritten — no optax offline)."""
+from repro.optim.adam import (AdamConfig, AdamState, adam_init, adam_update,
+                              block_quantize, block_dequantize,
+                              BlockQuantized, clip_by_global_norm,
+                              global_norm)
+from repro.optim import schedule, sgd
+
+__all__ = ["AdamConfig", "AdamState", "adam_init", "adam_update",
+           "block_quantize", "block_dequantize", "BlockQuantized",
+           "clip_by_global_norm", "global_norm", "schedule", "sgd"]

@@ -1,0 +1,201 @@
+"""Adam/AdamW with optional 8-bit (block-wise affine-quantized) moments.
+
+No optax offline — handwritten, functional, pjit-friendly.
+
+8-bit moments (beyond-paper, DESIGN.md §3): the paper's memory argument
+(int8 fits where fp32 swaps) applied to optimizer state. Each moment tensor
+is stored as int8 codes + one fp32 scale per 256-value block (bitsandbytes-
+style block-wise affine quantization, using the paper's affine quantizer per
+block). This cuts Adam state from 8 bytes/param to ~2.06 bytes/param, which
+is what lets grok-1-314b fit a single v5e pod (see EXPERIMENTS.md §Dry-run).
+
+The moments are dequantized, updated, and requantized inside the step —
+transient fp32, persistent int8.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+BLOCK = 256
+
+
+# ---------------------------------------------------------------------------
+# Block-wise quantized tensor
+# ---------------------------------------------------------------------------
+
+class BlockQuantized(NamedTuple):
+    """Shape-preserving block-quantized tensor.
+
+    ``codes`` has the SAME shape as the original tensor (int8), blocks run
+    along the last axis; ``scales`` is ``shape[:-1] + (last // block,)``.
+    Keeping the parameter's shape means codes/scales inherit the parameter's
+    PartitionSpec and the dequant/update/requant pipeline is fully local —
+    a flat layout forces GSPMD into involuntary full rematerialization
+    (observed: 412 GB replicated moment buffers on grok-1-314b).
+    """
+    codes: jnp.ndarray   # int8, same shape as the source tensor
+    scales: jnp.ndarray  # f32, shape[:-1] + (n_blocks_last,)
+    shape: Tuple[int, ...]  # static (pytree aux)
+
+
+def _block_size(last_dim: int) -> int:
+    return BLOCK if last_dim % BLOCK == 0 else last_dim
+
+
+def block_quantize(x: jnp.ndarray) -> BlockQuantized:
+    """Symmetric per-block int8 quantization along the last axis."""
+    x = x.astype(jnp.float32)
+    last = x.shape[-1] if x.ndim else 1
+    xb = x.reshape(x.shape[:-1] + (-1, _block_size(last))) if x.ndim else \
+        x.reshape(1, 1)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scales = jnp.where(amax == 0, 1.0, amax / 127.0)
+    codes = jnp.clip(jnp.round(xb / scales), -127, 127).astype(jnp.int8)
+    return BlockQuantized(codes.reshape(x.shape),
+                          scales[..., 0], x.shape)
+
+
+def block_dequantize(q: BlockQuantized, dtype=jnp.float32) -> jnp.ndarray:
+    last = q.shape[-1] if len(q.shape) else 1
+    cb = q.codes.reshape(q.codes.shape[:-1] + (-1, _block_size(last))) \
+        if len(q.shape) else q.codes.reshape(1, 1)
+    out = cb.astype(jnp.float32) * q.scales[..., None]
+    return out.reshape(q.shape).astype(dtype)
+
+
+jax.tree_util.register_pytree_node(
+    BlockQuantized,
+    lambda q: ((q.codes, q.scales), q.shape),
+    lambda shape, xs: BlockQuantized(xs[0], xs[1], shape))
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: Optional[float] = 1.0
+    eightbit: bool = False       # block-quantized moments
+    schedule: Optional[Any] = None  # callable step -> lr multiplier
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    m: PyTree
+    v: PyTree
+
+
+def _maybe_quant(tree: PyTree, eightbit: bool) -> PyTree:
+    if not eightbit:
+        return tree
+    return jax.tree_util.tree_map(block_quantize, tree)
+
+
+def _maybe_dequant(tree: PyTree, eightbit: bool) -> PyTree:
+    if not eightbit:
+        return tree
+    return jax.tree_util.tree_map(
+        block_dequantize, tree,
+        is_leaf=lambda x: isinstance(x, BlockQuantized))
+
+
+def adam_init(params: PyTree, config: AdamConfig) -> AdamState:
+    def zeros():
+        # distinct arrays for m and v — sharing them breaks buffer donation
+        # ("attempt to donate the same buffer twice")
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamState(step=jnp.zeros((), jnp.int32),
+                     m=_maybe_quant(zeros(), config.eightbit),
+                     v=_maybe_quant(zeros(), config.eightbit))
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float
+                        ) -> Tuple[PyTree, jnp.ndarray]:
+    norm = global_norm(grads)
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * factor).astype(g.dtype), grads
+    ), norm
+
+
+def adam_update(grads: PyTree, state: AdamState, params: PyTree,
+                config: AdamConfig) -> Tuple[PyTree, AdamState, dict]:
+    """Returns (new_params, new_state, stats). Params/m/v stay fp32."""
+    stats = {}
+    if config.grad_clip is not None:
+        grads, gnorm = clip_by_global_norm(grads, config.grad_clip)
+        stats["grad_norm"] = gnorm
+
+    step = state.step + 1
+    lr = config.lr
+    if config.schedule is not None:
+        lr = lr * config.schedule(step)
+    b1, b2 = config.b1, config.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def leaf_update(p, m_q, v_q, g):
+        mm = block_dequantize(m_q) if config.eightbit else m_q
+        vv = block_dequantize(v_q) if config.eightbit else v_q
+        g32 = g.astype(jnp.float32)
+        mm = b1 * mm + (1 - b1) * g32
+        vv = b2 * vv + (1 - b2) * jnp.square(g32)
+        delta = (mm / bc1) / (jnp.sqrt(vv / bc2) + config.eps)
+        if config.weight_decay:
+            delta = delta + config.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        new_m = block_quantize(mm) if config.eightbit else mm
+        new_v = block_quantize(vv) if config.eightbit else vv
+        return new_p, new_m, new_v
+
+    # Serialize the per-leaf updates with optimization barriers: each leaf's
+    # fp32 dequant/update/requant transients (several x param-size for the
+    # stacked MoE weights) then never overlap in buffer liveness. Observed on
+    # grok-1-314b: ~27 GB -> ~1 leaf's working set (§Perf A5).
+    p_leaves, treedef = jax.tree_util.tree_flatten(params)
+    m_leaves = treedef.flatten_up_to(state.m)
+    v_leaves = treedef.flatten_up_to(state.v)
+    g_leaves = treedef.flatten_up_to(grads)
+    new_p, new_m, new_v = [], [], []
+    token = jnp.zeros((), jnp.float32)
+    for p, m_q, v_q, g in zip(p_leaves, m_leaves, v_leaves, g_leaves):
+        (p, m_q, v_q, g), token = jax.lax.optimization_barrier(
+            ((p, m_q, v_q, g), token))
+        np_, nm, nv = leaf_update(p, m_q, v_q, g)
+        (np_, nm, nv), token = jax.lax.optimization_barrier(
+            ((np_, nm, nv), token))
+        new_p.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+
+    new_params = jax.tree_util.tree_unflatten(treedef, new_p)
+    new_state = AdamState(step=step,
+                          m=jax.tree_util.tree_unflatten(treedef, new_m),
+                          v=jax.tree_util.tree_unflatten(treedef, new_v))
+    return new_params, new_state, stats
+
+
+# Sharding of the optimizer state under pjit: the launcher leaves the
+# optimizer-state argument's in_sharding unspecified, so GSPMD propagates it
+# from the parameter shardings (m/v interact with params elementwise; 8-bit
+# codes/scales are flat and inherit a compatible layout). This avoids
+# hand-maintaining a parallel PartitionSpec tree for quantized state.

@@ -1,0 +1,37 @@
+"""Learning-rate schedules (multipliers applied to the base lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant():
+    return lambda step: jnp.ones((), jnp.float32)
+
+
+def linear_warmup(warmup_steps: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        return jnp.minimum(1.0, s / max(warmup_steps, 1))
+    return fn
+
+
+def warmup_cosine(warmup_steps: int, total_steps: int,
+                  final_fraction: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, s / max(warmup_steps, 1))
+        frac = jnp.clip((s - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_fraction + (1 - final_fraction) * 0.5 \
+            * (1 + jnp.cos(jnp.pi * frac))
+        return warm * cos
+    return fn
+
+
+def linear_epsilon(start: float, end: float, fraction_steps: int):
+    """Epsilon-greedy exploration decay (paper's DQN hyperparameters)."""
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / max(fraction_steps, 1),
+                        0.0, 1.0)
+        return start + frac * (end - start)
+    return fn

@@ -1,0 +1,53 @@
+"""SGD (+momentum) — used by the RL study's small policies."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    lr: float = 1e-2
+    momentum: float = 0.0
+    nesterov: bool = False
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    velocity: Optional[PyTree]
+
+
+def sgd_init(params: PyTree, config: SGDConfig) -> SGDState:
+    vel = None
+    if config.momentum:
+        vel = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return SGDState(step=jnp.zeros((), jnp.int32), velocity=vel)
+
+
+def sgd_update(grads: PyTree, state: SGDState, params: PyTree,
+               config: SGDConfig) -> Tuple[PyTree, SGDState]:
+    if config.momentum:
+        vel = jax.tree_util.tree_map(
+            lambda v, g: config.momentum * v + g.astype(jnp.float32),
+            state.velocity, grads)
+        if config.nesterov:
+            upd = jax.tree_util.tree_map(
+                lambda v, g: config.momentum * v + g.astype(jnp.float32),
+                vel, grads)
+        else:
+            upd = vel
+        new_params = jax.tree_util.tree_map(
+            lambda p, u: (p.astype(jnp.float32) - config.lr * u
+                          ).astype(p.dtype), params, upd)
+        return new_params, SGDState(state.step + 1, vel)
+    new_params = jax.tree_util.tree_map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - config.lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+    return new_params, SGDState(state.step + 1, None)

@@ -1,0 +1,103 @@
+"""Advantage Actor-Critic (synchronous A2C, Mnih et al. 2016)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qconfig import QuantConfig
+from repro.optim.adam import AdamConfig, adam_init, adam_update
+from repro.rl import common
+from repro.rl.env import Env, batched_env, rollout
+from repro.rl.networks import Network
+
+
+@dataclasses.dataclass(frozen=True)
+class A2CConfig:
+    lr: float = 7e-4
+    gamma: float = 0.99
+    n_envs: int = 16
+    n_steps: int = 8
+    value_coef: float = 0.5
+    entropy_coef: float = 0.01
+    quant: QuantConfig = QuantConfig.none()
+
+
+def init(key, env: Env, net: Network, cfg: A2CConfig):
+    params = net.init(key)
+    opt = adam_init(params, AdamConfig(lr=cfg.lr))
+    return common.TrainState(params=params, opt=opt, observers={},
+                             step=jnp.zeros((), jnp.int32), extras=())
+
+
+def make_iteration(env: Env, net: Network, cfg: A2CConfig):
+    """net outputs (n_actions + 1): logits + value head."""
+    benv = batched_env(env, cfg.n_envs)
+    adam_cfg = AdamConfig(lr=cfg.lr)
+    n_act = env.spec.n_actions
+
+    def heads(params, obs, observers, step):
+        ctx = common.make_ctx(cfg.quant, observers, step)
+        out = net.apply(ctx, params, obs)
+        return out[..., :n_act], out[..., n_act], ctx.merged_collection()
+
+    @jax.jit
+    def iteration(state: common.TrainState, env_state, obs, key):
+        k_roll, k_learn = jax.random.split(key)
+
+        def policy(params, obs, k):
+            logits, value, _ = heads(params, obs, state.observers,
+                                     state.step)
+            action = jax.random.categorical(k, logits)
+            return action.astype(jnp.int32), logits
+
+        env_state, last_obs, traj = rollout(
+            benv, policy, state.params, env_state, obs, k_roll, cfg.n_steps)
+
+        def loss_fn(params):
+            logits, values, new_coll = heads(
+                params, traj.obs, state.observers, state.step)  # (T, B, ...)
+            _, last_value, _ = heads(params, last_obs, state.observers,
+                                     state.step)
+
+            def disc(carry, step_t):
+                reward, done = step_t
+                carry = reward + cfg.gamma * carry * (1 - done)
+                return carry, carry
+            _, returns = jax.lax.scan(
+                disc, jax.lax.stop_gradient(last_value),
+                (traj.reward, traj.done), reverse=True)
+            adv = jax.lax.stop_gradient(returns) - values
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            logp_a = jnp.take_along_axis(
+                logp, traj.action[..., None], axis=-1)[..., 0]
+            p = jax.nn.softmax(logits, axis=-1)
+            entropy = -jnp.sum(p * logp, axis=-1).mean()
+            pg_loss = -(jax.lax.stop_gradient(adv) * logp_a).mean()
+            v_loss = jnp.square(adv).mean()
+            loss = pg_loss + cfg.value_coef * v_loss \
+                - cfg.entropy_coef * entropy
+            return loss, (new_coll, entropy, logits)
+
+        (loss, (new_coll, entropy, logits)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params)
+        new_params, new_opt, _ = adam_update(grads, state.opt, state.params,
+                                             adam_cfg)
+        state = common.TrainState(new_params, new_opt, new_coll,
+                                  state.step + 1, ())
+        obs_out = last_obs
+        metrics = {"loss": loss, "entropy": entropy,
+                   "reward": jnp.sum(traj.reward) / jnp.maximum(
+                       jnp.sum(traj.done), 1.0),
+                   "action_dist_variance": jnp.var(
+                       jax.nn.softmax(logits, axis=-1), axis=-1).mean()}
+        return state, env_state, obs_out, metrics
+
+    def act_fn(params, obs, observers=None, step=1 << 30):
+        ctx = common.make_ctx(cfg.quant, observers or {}, step)
+        out = net.apply(ctx, params, obs)
+        return jnp.argmax(out[..., :n_act], axis=-1).astype(jnp.int32)
+
+    return iteration, act_fn, benv

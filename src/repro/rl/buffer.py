@@ -1,0 +1,53 @@
+"""Replay buffer (uniform) — fixed-size circular arrays, fully jittable."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Transition(NamedTuple):
+    obs: jnp.ndarray
+    action: jnp.ndarray
+    reward: jnp.ndarray
+    done: jnp.ndarray
+    next_obs: jnp.ndarray
+
+
+class ReplayState(NamedTuple):
+    data: Transition          # leading dim = capacity
+    index: jnp.ndarray        # next write slot
+    size: jnp.ndarray         # valid entries
+
+
+def replay_init(capacity: int, obs_shape, action_shape=(),
+                action_dtype=jnp.int32) -> ReplayState:
+    data = Transition(
+        obs=jnp.zeros((capacity,) + tuple(obs_shape), jnp.float32),
+        action=jnp.zeros((capacity,) + tuple(action_shape), action_dtype),
+        reward=jnp.zeros((capacity,), jnp.float32),
+        done=jnp.zeros((capacity,), jnp.float32),
+        next_obs=jnp.zeros((capacity,) + tuple(obs_shape), jnp.float32))
+    return ReplayState(data, jnp.zeros((), jnp.int32),
+                       jnp.zeros((), jnp.int32))
+
+
+def replay_add_batch(state: ReplayState, batch: Transition) -> ReplayState:
+    """Add a batch (N, ...) of transitions at the circular cursor."""
+    capacity = state.data.reward.shape[0]
+    n = batch.reward.shape[0]
+    idx = (state.index + jnp.arange(n)) % capacity
+
+    data = jax.tree_util.tree_map(
+        lambda buf, x: buf.at[idx].set(x), state.data, batch)
+    return ReplayState(data, (state.index + n) % capacity,
+                       jnp.minimum(state.size + n, capacity))
+
+
+def replay_sample(state: ReplayState, key: jax.Array, batch_size: int
+                  ) -> Transition:
+    capacity = state.data.reward.shape[0]
+    maxval = jnp.maximum(state.size, 1)
+    idx = jax.random.randint(key, (batch_size,), 0, maxval)
+    return jax.tree_util.tree_map(lambda buf: buf[idx], state.data)

@@ -1,0 +1,86 @@
+"""Shared RL plumbing: train-state, QAT context wiring, eval helpers."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fake_quant, metrics as metrics_lib, ptq
+from repro.core.qconfig import QuantConfig
+from repro.optim.adam import AdamConfig, AdamState, adam_init, adam_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamState
+    observers: Dict[str, fake_quant.ObserverState]
+    step: jnp.ndarray
+    extras: Any = ()       # algo-specific (target params, noise scale, ...)
+
+
+def make_ctx(quant: QuantConfig, observers, step):
+    return fake_quant.make_context(quant, observers, step)
+
+
+class PrefixCtx:
+    """Namespaces a QAT context (e.g. DDPG actor vs critic observer sites)."""
+
+    def __init__(self, ctx, prefix: str):
+        self._ctx = ctx
+        self._prefix = prefix
+
+    @property
+    def config(self):
+        return self._ctx.config
+
+    @property
+    def enabled(self):
+        return getattr(self._ctx, "enabled", True)
+
+    def weight(self, name, w):
+        return self._ctx.weight(self._prefix + name, w)
+
+    def activation(self, name, x):
+        return self._ctx.activation(self._prefix + name, x)
+
+    def merged_collection(self):
+        return self._ctx.merged_collection()
+
+
+def eval_params(params: Any, quant: QuantConfig) -> Any:
+    """Apply Algorithm 1/2's evaluation-time quantization to the params.
+
+    PTQ: quantize-dequantize the trained weights.
+    QAT: the same fake-quant map with the final (frozen) weight ranges —
+    evaluation runs the quantized policy, matching the paper's Eval(Q(M)).
+    """
+    if quant.is_ptq:
+        return ptq.ptq_simulate(params, quant)
+    if quant.is_qat:
+        def one(path, leaf):
+            if (hasattr(leaf, "ndim") and leaf.ndim >= 2
+                    and jnp.issubdtype(leaf.dtype, jnp.floating)):
+                from repro.core import affine
+                return affine.ptq_tensor(leaf, quant.bits,
+                                         axis=leaf.ndim - 1
+                                         if leaf.ndim == 4 else None)
+            return leaf
+        return jax.tree_util.tree_map_with_path(one, params)
+    return params
+
+
+def linear_epsilon(step, start: float, end: float, decay_steps: int):
+    frac = jnp.clip(step.astype(jnp.float32) / max(decay_steps, 1), 0.0, 1.0)
+    return start + frac * (end - start)
+
+
+def soft_update(target, online, tau: float):
+    return jax.tree_util.tree_map(
+        lambda t, o: (1 - tau) * t + tau * o, target, online)
+
+
+def huber(x, delta: float = 1.0):
+    a = jnp.abs(x)
+    return jnp.where(a <= delta, 0.5 * x * x, delta * (a - 0.5 * delta))

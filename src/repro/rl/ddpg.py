@@ -1,0 +1,176 @@
+"""DDPG (Lillicrap et al. 2015): deterministic actor-critic, replay,
+soft target updates, Gaussian exploration noise (modern replacement for the
+original OU noise — documented deviation)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qconfig import QuantConfig
+from repro.optim.adam import AdamConfig, AdamState, adam_init, adam_update
+from repro.rl import buffer as rb
+from repro.rl import common
+from repro.rl.env import Env, batched_env, rollout
+from repro.rl.networks import Network
+
+
+@dataclasses.dataclass(frozen=True)
+class DDPGConfig:
+    actor_lr: float = 1e-3
+    critic_lr: float = 1e-3
+    gamma: float = 0.99
+    tau: float = 0.01
+    buffer_size: int = 50_000
+    batch_size: int = 128
+    n_envs: int = 8
+    rollout_steps: int = 8
+    updates_per_iter: int = 8
+    noise_sigma: float = 0.2
+    warmup: int = 1000
+    quant: QuantConfig = QuantConfig.none()
+
+
+class DDPGExtras(NamedTuple):
+    critic_params: Any
+    target_actor: Any
+    target_critic: Any
+    critic_opt: AdamState
+    replay: rb.ReplayState
+
+
+class DDPGNets(NamedTuple):
+    actor: Network
+    critic: Network
+
+
+def make_nets(env: Env, hidden=(64, 64)) -> DDPGNets:
+    from repro.rl.networks import make_network
+    obs_dim = int(jnp.prod(jnp.asarray(env.spec.obs_shape)))
+    a_dim = env.spec.action_dim
+    actor = make_network(env.spec.obs_shape, a_dim, hidden=hidden)
+    critic = make_network((obs_dim + a_dim,), 1, hidden=hidden)
+    return DDPGNets(actor, critic)
+
+
+def init(key, env: Env, nets: DDPGNets, cfg: DDPGConfig):
+    k1, k2 = jax.random.split(key)
+    actor_params = nets.actor.init(k1)
+    critic_params = nets.critic.init(k2)
+    opt = adam_init(actor_params, AdamConfig(lr=cfg.actor_lr))
+    copt = adam_init(critic_params, AdamConfig(lr=cfg.critic_lr))
+    replay = rb.replay_init(cfg.buffer_size, env.spec.obs_shape,
+                            action_shape=(env.spec.action_dim,),
+                            action_dtype=jnp.float32)
+    return common.TrainState(
+        params=actor_params, opt=opt, observers={},
+        step=jnp.zeros((), jnp.int32),
+        extras=DDPGExtras(critic_params, actor_params, critic_params,
+                          copt, replay))
+
+
+def make_iteration(env: Env, nets: DDPGNets, cfg: DDPGConfig):
+    benv = batched_env(env, cfg.n_envs)
+    a_cfg = AdamConfig(lr=cfg.actor_lr)
+    c_cfg = AdamConfig(lr=cfg.critic_lr)
+
+    def actor_out(params, obs, observers, step):
+        base = common.make_ctx(cfg.quant, observers, step)
+        ctx = common.PrefixCtx(base, "actor/")
+        return jnp.tanh(nets.actor.apply(ctx, params, obs)), \
+            base.merged_collection()
+
+    def critic_out(params, obs, action, observers, step):
+        base = common.make_ctx(cfg.quant, observers, step)
+        ctx = common.PrefixCtx(base, "critic/")
+        x = jnp.concatenate(
+            [obs.reshape(obs.shape[:-len(env.spec.obs_shape)] + (-1,)),
+             action], axis=-1)
+        return nets.critic.apply(ctx, params, x)[..., 0], \
+            base.merged_collection()
+
+    def update(state: common.TrainState, key):
+        batch = rb.replay_sample(state.extras.replay, key, cfg.batch_size)
+        ex = state.extras
+
+        def critic_loss(cp):
+            next_a, _ = actor_out(ex.target_actor, batch.next_obs,
+                                  state.observers, state.step)
+            q_next, _ = critic_out(ex.target_critic, batch.next_obs, next_a,
+                                   state.observers, state.step)
+            target = batch.reward + cfg.gamma * (1 - batch.done) * q_next
+            q, new_coll = critic_out(cp, batch.obs, batch.action,
+                                     state.observers, state.step)
+            return jnp.mean(jnp.square(
+                q - jax.lax.stop_gradient(target))), new_coll
+
+        (closs, new_coll), cgrads = jax.value_and_grad(
+            critic_loss, has_aux=True)(ex.critic_params)
+        critic_params, critic_opt, _ = adam_update(
+            cgrads, ex.critic_opt, ex.critic_params, c_cfg)
+
+        def actor_loss(ap):
+            a, coll2 = actor_out(ap, batch.obs, new_coll, state.step)
+            q, _ = critic_out(critic_params, batch.obs,
+                              a * env.spec.action_scale, new_coll,
+                              state.step)
+            return -jnp.mean(q), coll2
+
+        (aloss, new_coll2), agrads = jax.value_and_grad(
+            actor_loss, has_aux=True)(state.params)
+        actor_params, actor_opt, _ = adam_update(
+            agrads, state.opt, state.params, a_cfg)
+
+        warm = ex.replay.size >= cfg.warmup
+        actor_params = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(warm, n, o), actor_params, state.params)
+        critic_params = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(warm, n, o), critic_params,
+            ex.critic_params)
+
+        target_actor = common.soft_update(ex.target_actor, actor_params,
+                                          cfg.tau)
+        target_critic = common.soft_update(ex.target_critic, critic_params,
+                                           cfg.tau)
+        state = common.TrainState(
+            actor_params, actor_opt, new_coll2, state.step + 1,
+            DDPGExtras(critic_params, target_actor, target_critic,
+                       critic_opt, ex.replay))
+        return state, closs + aloss
+
+    @jax.jit
+    def iteration(state: common.TrainState, env_state, obs, key):
+        k_roll, k_up = jax.random.split(key)
+
+        scale = env.spec.action_scale
+
+        def policy(params, obs, k):
+            a, _ = actor_out(params, obs, state.observers, state.step)
+            noise = cfg.noise_sigma * jax.random.normal(k, a.shape)
+            return jnp.clip(a + noise, -1.0, 1.0) * scale, a
+
+        env_state, obs, traj = rollout(benv, policy, state.params,
+                                       env_state, obs, k_roll,
+                                       cfg.rollout_steps)
+        flat = jax.tree_util.tree_map(
+            lambda x: x.reshape((-1,) + x.shape[2:]), traj)
+        replay = rb.replay_add_batch(
+            state.extras.replay,
+            rb.Transition(flat.obs, flat.action, flat.reward, flat.done,
+                          flat.next_obs))
+        state = state._replace(extras=state.extras._replace(replay=replay))
+        state, losses = jax.lax.scan(
+            update, state, jax.random.split(k_up, cfg.updates_per_iter))
+        metrics = {"loss": jnp.mean(losses),
+                   "reward": jnp.sum(traj.reward) / jnp.maximum(
+                       jnp.sum(traj.done), 1.0)}
+        return state, env_state, obs, metrics
+
+    def act_fn(params, obs, observers=None, step=1 << 30):
+        ctx = common.make_ctx(cfg.quant, observers or {}, step)
+        return jnp.tanh(nets.actor.apply(ctx, params, obs)) \
+            * env.spec.action_scale
+
+    return iteration, act_fn, benv

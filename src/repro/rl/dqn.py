@@ -1,0 +1,151 @@
+"""DQN (Mnih et al. 2013) with target network + replay, QAT-instrumented.
+
+Paper hyperparameters (QuaRL Table 9) are the defaults scaled down:
+lr 1e-4, buffer 10k, target update 1000, epsilon 1.0 -> 0.01 over 10% of
+training, quantization delay = half of training (quant_delay).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qconfig import QuantConfig
+from repro.optim.adam import AdamConfig, adam_init, adam_update
+from repro.rl import buffer as rb
+from repro.rl import common
+from repro.rl.env import Env, batched_env, rollout
+from repro.rl.networks import Network
+
+
+@dataclasses.dataclass(frozen=True)
+class DQNConfig:
+    lr: float = 1e-3
+    gamma: float = 0.99
+    buffer_size: int = 10_000
+    batch_size: int = 64
+    n_envs: int = 8
+    rollout_steps: int = 16       # env steps per iteration (per env)
+    updates_per_iter: int = 8
+    target_update_every: int = 100  # in gradient updates
+    eps_start: float = 1.0
+    eps_end: float = 0.01
+    eps_decay_updates: int = 4000
+    warmup: int = 500             # transitions before learning
+    quant: QuantConfig = QuantConfig.none()
+
+
+class DQNExtras(NamedTuple):
+    target_params: Any
+    replay: rb.ReplayState
+    updates: jnp.ndarray
+
+
+def init(key, env: Env, net: Network, cfg: DQNConfig):
+    k1, k2 = jax.random.split(key)
+    params = net.init(k1)
+    opt = adam_init(params, AdamConfig(lr=cfg.lr))
+    replay = rb.replay_init(cfg.buffer_size, env.spec.obs_shape)
+    return common.TrainState(
+        params=params, opt=opt, observers={},
+        step=jnp.zeros((), jnp.int32),
+        extras=DQNExtras(target_params=params, replay=replay,
+                         updates=jnp.zeros((), jnp.int32)))
+
+
+def make_iteration(env: Env, net: Network, cfg: DQNConfig):
+    benv = batched_env(env, cfg.n_envs)
+    adam_cfg = AdamConfig(lr=cfg.lr)
+
+    def q_values(params, obs, observers, step):
+        ctx = common.make_ctx(cfg.quant, observers, step)
+        q = net.apply(ctx, params, obs)
+        return q, ctx.merged_collection()
+
+    def policy_fn_builder(state):
+        eps = common.linear_epsilon(state.extras.updates, cfg.eps_start,
+                                    cfg.eps_end, cfg.eps_decay_updates)
+
+        def policy(params, obs, key):
+            k_rand, k_explore = jax.random.split(key)
+            q, _ = q_values(params, obs, state.observers, state.step)
+            greedy = jnp.argmax(q, axis=-1)
+            rand = jax.random.randint(k_rand, greedy.shape, 0,
+                                      env.spec.n_actions)
+            explore = jax.random.uniform(k_explore, greedy.shape) < eps
+            return jnp.where(explore, rand, greedy).astype(jnp.int32), q
+        return policy
+
+    def td_update(state: common.TrainState, key) -> Tuple[common.TrainState,
+                                                          jnp.ndarray]:
+        batch = rb.replay_sample(state.extras.replay, key, cfg.batch_size)
+
+        def loss_fn(params):
+            q, new_obs_coll = q_values(params, batch.obs, state.observers,
+                                       state.step)
+            q_sel = jnp.take_along_axis(
+                q, batch.action[:, None].astype(jnp.int32), axis=1)[:, 0]
+            q_next, _ = q_values(state.extras.target_params, batch.next_obs,
+                                 state.observers, state.step)
+            target = batch.reward + cfg.gamma * (1 - batch.done) \
+                * jnp.max(q_next, axis=-1)
+            loss = jnp.mean(common.huber(
+                q_sel - jax.lax.stop_gradient(target)))
+            return loss, new_obs_coll
+
+        (loss, new_coll), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params)
+        new_params, new_opt, _ = adam_update(grads, state.opt, state.params,
+                                             adam_cfg)
+        updates = state.extras.updates + 1
+        do_sync = (updates % cfg.target_update_every) == 0
+        target = jax.tree_util.tree_map(
+            lambda t, o: jnp.where(do_sync, o, t),
+            state.extras.target_params, new_params)
+        # learn only after warmup
+        warm = state.extras.replay.size >= cfg.warmup
+        new_params = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(warm, n, o), new_params, state.params)
+        state = common.TrainState(
+            params=new_params, opt=new_opt, observers=new_coll,
+            step=state.step + 1,
+            extras=DQNExtras(target, state.extras.replay,
+                             jnp.where(warm, updates, state.extras.updates)))
+        return state, loss
+
+    @jax.jit
+    def iteration(state: common.TrainState, env_state, obs, key):
+        k_roll, k_updates = jax.random.split(key)
+        policy = policy_fn_builder(state)
+        env_state, obs, traj = rollout(
+            benv, policy, state.params, env_state, obs, k_roll,
+            cfg.rollout_steps)
+        flat = jax.tree_util.tree_map(
+            lambda x: x.reshape((-1,) + x.shape[2:]), traj)
+        replay = rb.replay_add_batch(
+            state.extras.replay,
+            rb.Transition(flat.obs, flat.action, flat.reward, flat.done,
+                          flat.next_obs))
+        state = state._replace(extras=state.extras._replace(replay=replay))
+
+        def one_update(st, k):
+            return td_update(st, k)
+        state, losses = jax.lax.scan(
+            one_update, state, jax.random.split(k_updates,
+                                                cfg.updates_per_iter))
+        metrics = {"loss": jnp.mean(losses),
+                   "reward": jnp.sum(traj.reward) / jnp.maximum(
+                       jnp.sum(traj.done), 1.0),
+                   "mean_q_var": jnp.var(jax.nn.softmax(
+                       traj.logits_or_value, axis=-1), axis=-1).mean()}
+        return state, env_state, obs, metrics
+
+    def act_fn(params, obs, observers=None, step=1 << 30):
+        ctx = common.make_ctx(cfg.quant, observers or {}, step)
+        q = net.apply(ctx, params, obs)
+        return jnp.argmax(q, axis=-1).astype(jnp.int32)
+
+    return iteration, act_fn, benv

@@ -1,0 +1,136 @@
+"""Functional environment API (pure JAX — fully jittable/vmappable).
+
+The paper's environments (OpenAI Gym classic control, Atari, PyBullet) are
+not installable offline; these are faithful pure-JAX ports of the classic
+control dynamics plus a pixel Atari-proxy ("Catch") and an Air-Learning-style
+navigation env (see envs/). Everything is:
+
+  env.reset(key)            -> (state, obs)
+  env.step(state, action, key) -> (state, obs, reward, done)
+
+with auto-reset handled by ``batched_rollout`` so rollouts are a single
+``lax.scan``. Observations are f32; discrete actions int32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+State = Any
+Obs = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvSpec:
+    name: str
+    obs_shape: Tuple[int, ...]
+    n_actions: int = 0            # discrete envs
+    action_dim: int = 0           # continuous envs
+    action_scale: float = 1.0     # actor outputs [-1,1] * action_scale
+    max_steps: int = 500
+
+    @property
+    def continuous(self) -> bool:
+        return self.action_dim > 0
+
+
+class Env(NamedTuple):
+    spec: EnvSpec
+    reset: Callable[[jax.Array], Tuple[State, Obs]]
+    step: Callable[[State, jnp.ndarray, jax.Array],
+                   Tuple[State, Obs, jnp.ndarray, jnp.ndarray]]
+
+
+class StepOut(NamedTuple):
+    obs: jnp.ndarray
+    action: jnp.ndarray
+    reward: jnp.ndarray
+    done: jnp.ndarray
+    next_obs: jnp.ndarray
+    logits_or_value: Any = None
+
+
+def auto_reset_step(env: Env):
+    """step that resets the env when done (state carries the episode)."""
+    def step(state, action, key):
+        k_step, k_reset = jax.random.split(key)
+        new_state, obs, reward, done = env.step(state, action, k_step)
+        reset_state, reset_obs = env.reset(k_reset)
+        state_out = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(_bshape(done, a), a, b),
+            reset_state, new_state)
+        obs_out = jnp.where(_bshape(done, obs), reset_obs, obs)
+        return state_out, obs_out, reward, done
+    return step
+
+
+def _bshape(done, x):
+    return done.reshape(done.shape + (1,) * (x.ndim - done.ndim)) \
+        if hasattr(x, "ndim") and x.ndim > done.ndim else done
+
+
+def batched_env(env: Env, n: int) -> Env:
+    """vmap an env over a batch dimension."""
+    def reset(key):
+        return jax.vmap(env.reset)(jax.random.split(key, n))
+
+    def step(state, action, key):
+        return jax.vmap(env.step)(state, action, jax.random.split(key, n))
+
+    return Env(spec=env.spec, reset=reset, step=step)
+
+
+def rollout(env: Env, policy_fn, params, state, obs, key, n_steps: int,
+            auto_reset: bool = True):
+    """Collect a trajectory with lax.scan.
+
+    policy_fn(params, obs, key) -> (action, aux) — aux is carried into the
+    trajectory (logits for exploration analysis, values for A2C/PPO...).
+    Returns (final_state, final_obs, StepOut trajectory [n_steps, ...]).
+    """
+    stepper = auto_reset_step(env) if auto_reset else env.step
+
+    def one(carry, key):
+        state, obs = carry
+        k_act, k_env = jax.random.split(key)
+        action, aux = policy_fn(params, obs, k_act)
+        state, next_obs, reward, done = stepper(state, action, k_env)
+        out = StepOut(obs=obs, action=action, reward=reward, done=done,
+                      next_obs=next_obs, logits_or_value=aux)
+        return (state, next_obs), out
+
+    (state, obs), traj = jax.lax.scan(one, (state, obs),
+                                      jax.random.split(key, n_steps))
+    return state, obs, traj
+
+
+def evaluate(env: Env, act_fn, params, key, n_episodes: int,
+             max_steps: int = 1000) -> jnp.ndarray:
+    """Mean undiscounted episode return under a deterministic policy.
+
+    Runs ``n_episodes`` in parallel (one vmap), each until its first done
+    (rewards after the first done are masked out).
+    """
+    keys = jax.random.split(key, n_episodes)
+
+    def one_episode(key):
+        k_reset, k_run = jax.random.split(key)
+        state, obs = env.reset(k_reset)
+
+        def step_fn(carry, k):
+            state, obs, done_prev, total = carry
+            action = act_fn(params, obs)
+            state, obs2, reward, done = env.step(state, action, k)
+            total = total + reward * (1.0 - done_prev)
+            done_now = jnp.maximum(done_prev, done.astype(jnp.float32))
+            return (state, obs2, done_now, total), None
+
+        (_, _, _, total), _ = jax.lax.scan(
+            step_fn, (state, obs, jnp.zeros(()), jnp.zeros(())),
+            jax.random.split(k_run, max_steps))
+        return total
+
+    return jnp.mean(jax.vmap(one_episode)(keys))

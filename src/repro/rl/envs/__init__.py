@@ -1,0 +1,19 @@
+"""Pure-JAX environments (gym-faithful dynamics; see env.py for the API)."""
+from repro.rl.envs.cartpole import make_cartpole
+from repro.rl.envs.mountaincar import make_mountaincar, make_mountaincar_continuous
+from repro.rl.envs.pendulum import make_pendulum
+from repro.rl.envs.catch import make_catch
+from repro.rl.envs.airnav import make_airnav
+
+ENVS = {
+    "cartpole": make_cartpole,
+    "mountaincar": make_mountaincar,
+    "mountaincar_continuous": make_mountaincar_continuous,
+    "pendulum": make_pendulum,
+    "catch": make_catch,
+    "airnav": make_airnav,
+}
+
+
+def make(name: str, **kwargs):
+    return ENVS[name](**kwargs)

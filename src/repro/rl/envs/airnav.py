@@ -1,0 +1,106 @@
+"""AirNav — Air-Learning-style point-to-point aerial navigation (paper §5/D).
+
+A 2D point-mass drone navigates a 25m x 25m arena with 1-5 random circular
+obstacles to a random goal. Faithful to the paper's setup:
+
+* 25 discrete actions (5 speeds x 5 yaw rates), V_max = 2.5 m/s (paper D).
+* Reward (paper Eq. 1):  r = 1000*alpha - 100*beta - D_g - D_c*delta - 1
+  with alpha = reached-goal, beta = collision-or-timeout, D_g = distance to
+  goal, D_c = (V_max - V_now) * t_max the distance correction (Eq. 2).
+* Obstacle count/positions and the goal are randomized every episode.
+* max 750 steps per episode (paper footnote 2; reduced default here).
+
+Observation: [dx_goal, dy_goal, vx, vy, heading_sin, heading_cos,
+              nearest-obstacle dx, dy, dist] (the paper uses depth+IMU; we
+use the equivalent geometric features the stub sensors would produce).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.env import Env, EnvSpec
+
+ARENA = 25.0
+V_MAX = 2.5
+T_MAX = 0.5           # actuation duration (s)
+N_OBSTACLES = 5
+OBSTACLE_R = 1.5
+GOAL_R = 1.0
+DELTA = 1.0           # distance-correction weight
+
+
+class AirNavState(NamedTuple):
+    pos: jnp.ndarray        # (2,)
+    vel: jnp.ndarray        # (2,)
+    heading: jnp.ndarray    # scalar rad
+    goal: jnp.ndarray       # (2,)
+    obstacles: jnp.ndarray  # (N_OBSTACLES, 3): x, y, active
+    t: jnp.ndarray
+
+
+SPEEDS = jnp.linspace(0.0, V_MAX, 5)
+YAWS = jnp.linspace(-jnp.pi / 4, jnp.pi / 4, 5)
+
+
+def make_airnav(max_steps: int = 300) -> Env:
+    spec = EnvSpec("airnav", obs_shape=(9,), n_actions=25,
+                   max_steps=max_steps)
+
+    def obs_of(s: AirNavState) -> jnp.ndarray:
+        to_goal = s.goal - s.pos
+        d_obs = jnp.linalg.norm(s.obstacles[:, :2] - s.pos, axis=1)
+        d_obs = jnp.where(s.obstacles[:, 2] > 0, d_obs, 1e6)
+        i = jnp.argmin(d_obs)
+        nearest = s.obstacles[i, :2] - s.pos
+        return jnp.concatenate([
+            to_goal / ARENA, s.vel / V_MAX,
+            jnp.stack([jnp.sin(s.heading), jnp.cos(s.heading)]),
+            nearest / ARENA, jnp.minimum(d_obs[i], ARENA)[None] / ARENA])
+
+    def reset(key):
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        pos = jax.random.uniform(k1, (2,), minval=2.0, maxval=ARENA - 2.0)
+        goal = jax.random.uniform(k2, (2,), minval=2.0, maxval=ARENA - 2.0)
+        n_active = jax.random.randint(k3, (), 1, N_OBSTACLES + 1)
+        obs_xy = jax.random.uniform(k4, (N_OBSTACLES, 2), minval=3.0,
+                                    maxval=ARENA - 3.0)
+        # keep obstacles away from the start position
+        d_start = jnp.linalg.norm(obs_xy - pos, axis=1)
+        obs_xy = jnp.where((d_start < 3.0)[:, None], obs_xy + 4.0, obs_xy)
+        active = (jnp.arange(N_OBSTACLES) < n_active).astype(jnp.float32)
+        s = AirNavState(pos=pos, vel=jnp.zeros(2),
+                        heading=jax.random.uniform(k5, (), minval=-jnp.pi,
+                                                   maxval=jnp.pi),
+                        goal=goal,
+                        obstacles=jnp.concatenate([obs_xy, active[:, None]],
+                                                  axis=1),
+                        t=jnp.zeros((), jnp.int32))
+        return s, obs_of(s)
+
+    def step(s: AirNavState, action, key):
+        speed = SPEEDS[action // 5]
+        yaw = YAWS[action % 5]
+        heading = s.heading + yaw
+        vel = speed * jnp.stack([jnp.cos(heading), jnp.sin(heading)])
+        pos = jnp.clip(s.pos + vel * T_MAX, 0.0, ARENA)
+        t = s.t + 1
+
+        d_goal = jnp.linalg.norm(s.goal - pos)
+        d_obs = jnp.linalg.norm(s.obstacles[:, :2] - pos, axis=1)
+        collided = jnp.any((d_obs < OBSTACLE_R) & (s.obstacles[:, 2] > 0))
+        reached = d_goal < GOAL_R
+        timeout = t >= max_steps
+
+        alpha = reached.astype(jnp.float32)
+        beta = (collided | timeout).astype(jnp.float32)
+        d_c = (V_MAX - speed) * T_MAX          # paper Eq. 2
+        reward = 1000.0 * alpha - 100.0 * beta - d_goal - d_c * DELTA - 1.0
+
+        ns = AirNavState(pos, vel, heading, s.goal, s.obstacles, t)
+        done = jnp.maximum(alpha, beta)
+        return ns, obs_of(ns), reward, done
+
+    return Env(spec=spec, reset=reset, step=step)

@@ -1,0 +1,63 @@
+"""CartPole-v1 (faithful gym dynamics; Barto, Sutton & Anderson 1983)."""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.env import Env, EnvSpec
+
+GRAVITY = 9.8
+MASSCART = 1.0
+MASSPOLE = 0.1
+TOTAL_MASS = MASSCART + MASSPOLE
+LENGTH = 0.5
+POLEMASS_LENGTH = MASSPOLE * LENGTH
+FORCE_MAG = 10.0
+TAU = 0.02
+THETA_THRESHOLD = 12 * 2 * jnp.pi / 360
+X_THRESHOLD = 2.4
+
+
+class CartPoleState(NamedTuple):
+    x: jnp.ndarray
+    x_dot: jnp.ndarray
+    theta: jnp.ndarray
+    theta_dot: jnp.ndarray
+    t: jnp.ndarray
+
+
+def make_cartpole(max_steps: int = 500) -> Env:
+    spec = EnvSpec("cartpole", obs_shape=(4,), n_actions=2,
+                   max_steps=max_steps)
+
+    def obs_of(s: CartPoleState) -> jnp.ndarray:
+        return jnp.stack([s.x, s.x_dot, s.theta, s.theta_dot])
+
+    def reset(key):
+        vals = jax.random.uniform(key, (4,), minval=-0.05, maxval=0.05)
+        s = CartPoleState(vals[0], vals[1], vals[2], vals[3],
+                          jnp.zeros((), jnp.int32))
+        return s, obs_of(s)
+
+    def step(s: CartPoleState, action, key):
+        force = jnp.where(action == 1, FORCE_MAG, -FORCE_MAG)
+        costheta, sintheta = jnp.cos(s.theta), jnp.sin(s.theta)
+        temp = (force + POLEMASS_LENGTH * s.theta_dot ** 2 * sintheta) \
+            / TOTAL_MASS
+        thetaacc = (GRAVITY * sintheta - costheta * temp) / (
+            LENGTH * (4.0 / 3.0 - MASSPOLE * costheta ** 2 / TOTAL_MASS))
+        xacc = temp - POLEMASS_LENGTH * thetaacc * costheta / TOTAL_MASS
+        x = s.x + TAU * s.x_dot
+        x_dot = s.x_dot + TAU * xacc
+        theta = s.theta + TAU * s.theta_dot
+        theta_dot = s.theta_dot + TAU * thetaacc
+        t = s.t + 1
+        ns = CartPoleState(x, x_dot, theta, theta_dot, t)
+        done = ((jnp.abs(x) > X_THRESHOLD)
+                | (jnp.abs(theta) > THETA_THRESHOLD)
+                | (t >= max_steps)).astype(jnp.float32)
+        return ns, obs_of(ns), jnp.ones(()), done
+
+    return Env(spec=spec, reset=reset, step=step)

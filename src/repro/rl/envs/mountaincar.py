@@ -1,0 +1,69 @@
+"""MountainCar-v0 (discrete) and MountainCarContinuous-v0 (Moore 1990)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.env import Env, EnvSpec
+
+MIN_POS, MAX_POS = -1.2, 0.6
+MAX_SPEED = 0.07
+GOAL_POS = 0.5
+
+
+class MCState(NamedTuple):
+    pos: jnp.ndarray
+    vel: jnp.ndarray
+    t: jnp.ndarray
+
+
+def _obs(s: MCState) -> jnp.ndarray:
+    return jnp.stack([s.pos, s.vel])
+
+
+def _reset(key):
+    pos = jax.random.uniform(key, (), minval=-0.6, maxval=-0.4)
+    s = MCState(pos, jnp.zeros(()), jnp.zeros((), jnp.int32))
+    return s, _obs(s)
+
+
+def make_mountaincar(max_steps: int = 200) -> Env:
+    spec = EnvSpec("mountaincar", obs_shape=(2,), n_actions=3,
+                   max_steps=max_steps)
+
+    def step(s: MCState, action, key):
+        force = (action.astype(jnp.float32) - 1.0) * 0.001
+        vel = jnp.clip(s.vel + force + jnp.cos(3 * s.pos) * (-0.0025),
+                       -MAX_SPEED, MAX_SPEED)
+        pos = jnp.clip(s.pos + vel, MIN_POS, MAX_POS)
+        vel = jnp.where((pos == MIN_POS) & (vel < 0), 0.0, vel)
+        t = s.t + 1
+        ns = MCState(pos, vel, t)
+        reached = pos >= GOAL_POS
+        done = (reached | (t >= max_steps)).astype(jnp.float32)
+        return ns, _obs(ns), -jnp.ones(()), done
+
+    return Env(spec=spec, reset=_reset, step=step)
+
+
+def make_mountaincar_continuous(max_steps: int = 999) -> Env:
+    """Continuous version (the paper's DDPG MountainCar entry)."""
+    spec = EnvSpec("mountaincar_continuous", obs_shape=(2,), action_dim=1,
+                   max_steps=max_steps)
+
+    def step(s: MCState, action, key):
+        force = jnp.clip(action[..., 0], -1.0, 1.0)
+        vel = jnp.clip(s.vel + force * 0.0015 + jnp.cos(3 * s.pos) * -0.0025,
+                       -MAX_SPEED, MAX_SPEED)
+        pos = jnp.clip(s.pos + vel, MIN_POS, MAX_POS)
+        vel = jnp.where((pos == MIN_POS) & (vel < 0), 0.0, vel)
+        t = s.t + 1
+        ns = MCState(pos, vel, t)
+        reached = pos >= GOAL_POS
+        done = (reached | (t >= max_steps)).astype(jnp.float32)
+        reward = jnp.where(reached, 100.0, 0.0) - 0.1 * force ** 2
+        return ns, _obs(ns), reward, done
+
+    return Env(spec=spec, reset=_reset, step=step)

@@ -1,0 +1,55 @@
+"""Pendulum-v1 (continuous torque control) — the offline stand-in for the
+paper's PyBullet continuous-control suite (HalfCheetah/Walker2D dynamics are
+not portable without a physics engine; Pendulum exercises the same DDPG
+machinery: continuous actions, dense rewards, bounded torque)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.env import Env, EnvSpec
+
+MAX_SPEED = 8.0
+MAX_TORQUE = 2.0
+DT = 0.05
+G = 10.0
+M = 1.0
+L = 1.0
+
+
+class PendulumState(NamedTuple):
+    theta: jnp.ndarray
+    theta_dot: jnp.ndarray
+    t: jnp.ndarray
+
+
+def make_pendulum(max_steps: int = 200) -> Env:
+    spec = EnvSpec("pendulum", obs_shape=(3,), action_dim=1,
+                   action_scale=MAX_TORQUE, max_steps=max_steps)
+
+    def obs_of(s):
+        return jnp.stack([jnp.cos(s.theta), jnp.sin(s.theta), s.theta_dot])
+
+    def reset(key):
+        k1, k2 = jax.random.split(key)
+        theta = jax.random.uniform(k1, (), minval=-jnp.pi, maxval=jnp.pi)
+        theta_dot = jax.random.uniform(k2, (), minval=-1.0, maxval=1.0)
+        s = PendulumState(theta, theta_dot, jnp.zeros((), jnp.int32))
+        return s, obs_of(s)
+
+    def step(s: PendulumState, action, key):
+        u = jnp.clip(action[..., 0], -MAX_TORQUE, MAX_TORQUE)
+        th = ((s.theta + jnp.pi) % (2 * jnp.pi)) - jnp.pi
+        cost = th ** 2 + 0.1 * s.theta_dot ** 2 + 0.001 * u ** 2
+        theta_dot = s.theta_dot + (3 * G / (2 * L) * jnp.sin(s.theta)
+                                   + 3.0 / (M * L ** 2) * u) * DT
+        theta_dot = jnp.clip(theta_dot, -MAX_SPEED, MAX_SPEED)
+        theta = s.theta + theta_dot * DT
+        t = s.t + 1
+        ns = PendulumState(theta, theta_dot, t)
+        done = (t >= max_steps).astype(jnp.float32)
+        return ns, obs_of(ns), -cost, done
+
+    return Env(spec=spec, reset=reset, step=step)

@@ -1,0 +1,186 @@
+"""Training loops + the QuaRL pipelines (paper Algorithms 1 and 2).
+
+``train(...)`` runs any of the four algorithms on any env;
+``quarl_ptq(...)``  = Algorithm 1: M = Train(T, L, A); return Eval(Q(M)).
+``quarl_qat(...)``  = Algorithm 2: insert fake-quant ops, monitor ranges for
+``quant_delay`` updates, then train with quantization; Eval with Q^train.
+
+Both return a ``QuarlResult`` with fp32 and quantized rewards plus the
+paper's relative error E_%.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics as metrics_lib
+from repro.core.qconfig import QuantConfig
+from repro.rl import a2c, common, ddpg, dqn, ppo
+from repro.rl.env import Env, evaluate
+from repro.rl.envs import make as make_env
+from repro.rl.networks import Network, make_network
+
+ALGOS = ("dqn", "a2c", "ppo", "ddpg")
+
+
+def _bootstrap_observers(algo, env, net, state, quant):
+    """Pre-create every QAT observer slot (scan carries need fixed pytrees)."""
+    from repro.core import fake_quant
+    import jax.numpy as jnp
+    obs0 = jnp.zeros((2,) + tuple(env.spec.obs_shape))
+
+    if algo == "ddpg":
+        def trace(rec):
+            a = jnp.tanh(net.actor.apply(common.PrefixCtx(rec, "actor/"),
+                                         state.params, obs0))
+            x = jnp.concatenate([obs0.reshape(2, -1), a], axis=-1)
+            net.critic.apply(common.PrefixCtx(rec, "critic/"),
+                             state.extras.critic_params, x)
+    else:
+        def trace(rec):
+            net.apply(rec, state.params, obs0)
+    return fake_quant.discover_observers(quant, trace)
+
+
+@dataclasses.dataclass
+class TrainResult:
+    state: common.TrainState
+    act_fn: Callable
+    env: Env
+    rewards: List[float]
+    action_variances: List[float]
+    wall_time_s: float
+    algo_cfg: Any
+    net: Any
+
+
+def _build(algo: str, env: Env, quant: QuantConfig, net_kwargs: Dict,
+           overrides: Dict):
+    if algo == "ddpg":
+        assert env.spec.continuous, f"DDPG needs continuous env"
+        nets = ddpg.make_nets(env, **net_kwargs)
+        cfg = dataclasses.replace(ddpg.DDPGConfig(quant=quant), **overrides)
+        return nets, cfg
+    out_dim = env.spec.n_actions
+    if algo in ("a2c", "ppo"):
+        out_dim += 1  # value head
+    net = make_network(env.spec.obs_shape, out_dim, **net_kwargs)
+    if algo == "dqn":
+        cfg = dataclasses.replace(dqn.DQNConfig(quant=quant), **overrides)
+    elif algo == "a2c":
+        cfg = dataclasses.replace(a2c.A2CConfig(quant=quant), **overrides)
+    else:
+        cfg = dataclasses.replace(ppo.PPOConfig(quant=quant), **overrides)
+    return net, cfg
+
+
+def train(algo: str, env_name: str, *, iterations: int = 200,
+          quant: QuantConfig = QuantConfig.none(), seed: int = 0,
+          net_kwargs: Optional[Dict] = None,
+          algo_overrides: Optional[Dict] = None,
+          record_every: int = 10, eval_episodes: int = 8) -> TrainResult:
+    env = make_env(env_name)
+    net, cfg = _build(algo, env, quant, net_kwargs or {},
+                      algo_overrides or {})
+    mod = {"dqn": dqn, "a2c": a2c, "ppo": ppo, "ddpg": ddpg}[algo]
+    key = jax.random.PRNGKey(seed)
+    k_init, k_env, k_run = jax.random.split(key, 3)
+    state = mod.init(k_init, env, net, cfg)
+    if quant.is_qat:
+        state = state._replace(
+            observers=_bootstrap_observers(algo, env, net, state, quant))
+    iteration, act_fn, benv = mod.make_iteration(env, net, cfg)
+    env_state, obs = benv.reset(k_env)
+
+    rewards, variances = [], []
+    t0 = time.time()
+    for i in range(iterations):
+        k_run, k_it = jax.random.split(k_run)
+        state, env_state, obs, metrics = iteration(state, env_state, obs,
+                                                   k_it)
+        if (i + 1) % record_every == 0 or i == iterations - 1:
+            k_run, k_eval = jax.random.split(k_run)
+            det_act = lambda p, o: act_fn(p, o, state.observers, state.step)
+            r = float(evaluate(env, det_act, state.params, k_eval,
+                               eval_episodes,
+                               max_steps=env.spec.max_steps))
+            rewards.append(r)
+            variances.append(float(metrics.get(
+                "action_dist_variance", metrics.get("mean_q_var", 0.0))))
+    wall = time.time() - t0
+    return TrainResult(state=state, act_fn=act_fn, env=env, rewards=rewards,
+                       action_variances=variances, wall_time_s=wall,
+                       algo_cfg=cfg, net=net)
+
+
+def eval_policy(result: TrainResult, quant: QuantConfig, key,
+                episodes: int = 16) -> float:
+    """Eval(Q(M)) — run the (possibly quantized) policy deterministically."""
+    params = common.eval_params(result.state.params, quant)
+    if quant.is_ptq and hasattr(result.state.extras, "critic_params"):
+        pass  # DDPG: only the actor runs at deployment
+    det_act = lambda p, o: result.act_fn(p, o, result.state.observers,
+                                         result.state.step)
+    return float(evaluate(result.env, det_act, params, key, episodes,
+                          max_steps=result.env.spec.max_steps))
+
+
+@dataclasses.dataclass
+class QuarlResult:
+    algo: str
+    env: str
+    label: str
+    fp32_reward: float
+    quant_reward: float
+    error_pct: float
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def quarl_ptq(algo: str, env_name: str, bits_list=(8, 16), *,
+              iterations: int = 200, seed: int = 0,
+              net_kwargs=None, algo_overrides=None,
+              eval_episodes: int = 16) -> List[QuarlResult]:
+    """Algorithm 1 over fp16 + intN PTQ."""
+    result = train(algo, env_name, iterations=iterations, seed=seed,
+                   net_kwargs=net_kwargs, algo_overrides=algo_overrides)
+    key = jax.random.PRNGKey(seed + 1000)
+    fp32 = eval_policy(result, QuantConfig.none(), key, eval_episodes)
+    out = []
+    for bits in bits_list:
+        q = QuantConfig.ptq_fp16() if bits == 16 else QuantConfig.ptq_int(bits)
+        r = eval_policy(result, q, key, eval_episodes)
+        out.append(QuarlResult(
+            algo=algo, env=env_name, label=q.label(), fp32_reward=fp32,
+            quant_reward=r,
+            error_pct=metrics_lib.relative_error(fp32, r),
+            extra={"weight_stats": metrics_lib.weight_distribution_stats(
+                result.state.params)}))
+    return out
+
+
+def quarl_qat(algo: str, env_name: str, bits: int, *, iterations: int = 200,
+              quant_delay_frac: float = 0.5, seed: int = 0,
+              net_kwargs=None, algo_overrides=None,
+              eval_episodes: int = 16) -> QuarlResult:
+    """Algorithm 2: train with fake quantization after a monitoring delay."""
+    delay = int(iterations * quant_delay_frac)
+    quant = QuantConfig.qat(bits, quant_delay=delay)
+    fp = train(algo, env_name, iterations=iterations, seed=seed,
+               net_kwargs=net_kwargs, algo_overrides=algo_overrides)
+    qt = train(algo, env_name, iterations=iterations, quant=quant,
+               seed=seed, net_kwargs=net_kwargs,
+               algo_overrides=algo_overrides)
+    key = jax.random.PRNGKey(seed + 2000)
+    fp32 = eval_policy(fp, QuantConfig.none(), key, eval_episodes)
+    q_r = eval_policy(qt, quant, key, eval_episodes)
+    return QuarlResult(
+        algo=algo, env=env_name, label=f"qat{bits}", fp32_reward=fp32,
+        quant_reward=q_r, error_pct=metrics_lib.relative_error(fp32, q_r),
+        extra={"variances_fp": fp.action_variances,
+               "variances_qat": qt.action_variances,
+               "rewards_fp": fp.rewards, "rewards_qat": qt.rewards})

@@ -1,0 +1,152 @@
+"""Policy/value networks with the paper's quantization hooks.
+
+Matches QuaRL's architectures:
+* Atari/pixel: 3-layer conv + FC (Appendix B: 3x Conv(128) + FC(128));
+  Policies A/B/C for the mixed-precision study (Table 10).
+* Deployment MLPs (Table 5): 3-layer MLPs.
+* Classic control: 2x64 MLPs (stable-baselines defaults).
+
+Every dense/conv site routes its weights and activations through the QAT
+context (repro.core.fake_quant), and the same param pytrees feed
+``core.ptq`` for post-training quantization — these networks ARE the paper's
+experimental subjects. Conv weights use per-axis (output-channel)
+quantization per the paper; dense per-tensor.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import affine
+from repro.core.qconfig import QuantConfig
+from repro.models.common import P, init_params
+
+
+# ---------------------------------------------------------------------------
+# Layers (QAT-aware)
+# ---------------------------------------------------------------------------
+
+def dense(ctx, name, params, x, act=None):
+    w = ctx.weight(f"{name}/w", params["w"])
+    y = x @ w.astype(x.dtype) + params["b"].astype(x.dtype)
+    if act is not None:
+        y = act(y)
+    return ctx.activation(f"{name}/out", y)
+
+
+def conv2d(ctx, name, params, x, stride=1, act=jax.nn.relu):
+    """x: (B, H, W, C). Per-axis weight fake-quant (paper: conv per-channel)."""
+    w = params["w"]
+    if ctx.config.is_qat:
+        # per-output-channel fake quantization with STE
+        from repro.core import fake_quant as fq
+        wmin = jnp.minimum(jnp.min(w, axis=(0, 1, 2)), 0.0)
+        wmax = jnp.maximum(jnp.max(w, axis=(0, 1, 2)), 0.0)
+        w_q = fq.fake_quant(w, wmin, wmax, ctx.config.bits)
+        w = jnp.where(ctx.enabled, w_q, w) if hasattr(ctx, "enabled") else w_q
+    y = jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), window_strides=(stride, stride),
+        padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = y + params["b"].astype(x.dtype)
+    if act is not None:
+        y = act(y)
+    return ctx.activation(f"{name}/out", y)
+
+
+def dense_spec(d_in, d_out, scale=None):
+    return {"w": P((d_in, d_out), (None, None), scale=scale),
+            "b": P((d_out,), (None,), init="zeros")}
+
+
+def conv_spec(k, c_in, c_out):
+    return {"w": P((k, k, c_in, c_out), (None, None, None, None),
+                   scale=1.0 / math.sqrt(k * k * c_in)),
+            "b": P((c_out,), (None,), init="zeros")}
+
+
+# ---------------------------------------------------------------------------
+# MLP backbone (classic control + deployment policies)
+# ---------------------------------------------------------------------------
+
+def mlp_spec(obs_dim: int, widths: Sequence[int], out_dim: int,
+             out_scale: float = 0.01) -> Dict[str, Any]:
+    spec, d = {}, obs_dim
+    for i, w in enumerate(widths):
+        spec[f"fc{i}"] = dense_spec(d, w)
+        d = w
+    spec["out"] = dense_spec(d, out_dim, scale=out_scale)
+    return spec
+
+
+def mlp_apply(ctx, params, x, n_hidden: int, out_act=None):
+    # x: (..., obs_dim) — arbitrary leading batch dims.
+    for i in range(n_hidden):
+        x = dense(ctx, f"fc{i}", params[f"fc{i}"], x, act=jax.nn.relu)
+    y = dense(ctx, "out", params["out"], x)
+    if out_act is not None:
+        y = out_act(y)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Conv backbone (the paper's Atari policy: 3 conv + FC)
+# ---------------------------------------------------------------------------
+
+def cnn_spec(obs_shape: Tuple[int, int, int], filters: Sequence[int],
+             fc_width: int, out_dim: int) -> Dict[str, Any]:
+    h, w, c = obs_shape
+    spec = {}
+    c_in = c
+    for i, f in enumerate(filters):
+        spec[f"conv{i}"] = conv_spec(3, c_in, f)
+        c_in = f
+    flat = h * w * c_in  # stride-1 SAME convs preserve H, W
+    spec["fc"] = dense_spec(flat, fc_width)
+    spec["out"] = dense_spec(fc_width, out_dim, scale=0.01)
+    return spec
+
+
+def cnn_apply(ctx, params, x, n_convs: int):
+    batch_shape = x.shape[:-3]
+    x = x.reshape((-1,) + x.shape[-3:])
+    for i in range(n_convs):
+        x = conv2d(ctx, f"conv{i}", params[f"conv{i}"], x)
+    x = x.reshape(x.shape[0], -1)
+    x = dense(ctx, "fc", params["fc"], x, act=jax.nn.relu)
+    y = dense(ctx, "out", params["out"], x)
+    return y.reshape(batch_shape + y.shape[-1:])
+
+
+# ---------------------------------------------------------------------------
+# Network factory
+# ---------------------------------------------------------------------------
+
+class Network:
+    """(spec, apply) pair; apply(ctx, params, obs) -> head outputs."""
+
+    def __init__(self, spec: Dict[str, Any], apply_fn, out_dim: int):
+        self.spec = spec
+        self.apply = apply_fn
+        self.out_dim = out_dim
+
+    def init(self, key, dtype=jnp.float32):
+        return init_params(key, self.spec, dtype)
+
+
+def make_network(obs_shape: Tuple[int, ...], out_dim: int,
+                 hidden: Sequence[int] = (64, 64),
+                 conv_filters: Optional[Sequence[int]] = None,
+                 fc_width: int = 128) -> Network:
+    if len(obs_shape) == 3:  # pixels
+        filters = tuple(conv_filters or (16, 16, 16))
+        spec = cnn_spec(obs_shape, filters, fc_width, out_dim)
+        n = len(filters)
+        return Network(spec, lambda ctx, p, x: cnn_apply(ctx, p, x, n),
+                       out_dim)
+    obs_dim = int(jnp.prod(jnp.asarray(obs_shape)))
+    spec = mlp_spec(obs_dim, hidden, out_dim)
+    nh = len(hidden)
+    return Network(spec, lambda ctx, p, x: mlp_apply(ctx, p, x, nh), out_dim)

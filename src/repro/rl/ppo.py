@@ -1,0 +1,146 @@
+"""PPO (Schulman et al. 2017): GAE + clipped surrogate, minibatch epochs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qconfig import QuantConfig
+from repro.optim.adam import AdamConfig, adam_init, adam_update
+from repro.rl import common
+from repro.rl.env import Env, batched_env, rollout
+from repro.rl.networks import Network
+
+
+@dataclasses.dataclass(frozen=True)
+class PPOConfig:
+    lr: float = 3e-4
+    gamma: float = 0.99
+    gae_lambda: float = 0.95
+    clip_eps: float = 0.2
+    n_envs: int = 16
+    n_steps: int = 64
+    epochs: int = 4
+    n_minibatches: int = 4
+    value_coef: float = 0.5
+    entropy_coef: float = 0.01
+    quant: QuantConfig = QuantConfig.none()
+
+
+def init(key, env: Env, net: Network, cfg: PPOConfig):
+    params = net.init(key)
+    opt = adam_init(params, AdamConfig(lr=cfg.lr))
+    return common.TrainState(params=params, opt=opt, observers={},
+                             step=jnp.zeros((), jnp.int32), extras=())
+
+
+def gae(rewards, dones, values, last_value, gamma, lam):
+    """values: (T, B); returns (advantages, returns)."""
+    def step(carry, inp):
+        adv, next_value = carry
+        reward, done, value = inp
+        delta = reward + gamma * next_value * (1 - done) - value
+        adv = delta + gamma * lam * (1 - done) * adv
+        return (adv, value), adv
+    (_, _), advs = jax.lax.scan(
+        step, (jnp.zeros_like(last_value), last_value),
+        (rewards, dones, values), reverse=True)
+    return advs, advs + values
+
+
+def make_iteration(env: Env, net: Network, cfg: PPOConfig):
+    benv = batched_env(env, cfg.n_envs)
+    adam_cfg = AdamConfig(lr=cfg.lr)
+    n_act = env.spec.n_actions
+
+    def heads(params, obs, observers, step):
+        ctx = common.make_ctx(cfg.quant, observers, step)
+        out = net.apply(ctx, params, obs)
+        return out[..., :n_act], out[..., n_act], ctx.merged_collection()
+
+    @jax.jit
+    def iteration(state: common.TrainState, env_state, obs, key):
+        k_roll, k_perm = jax.random.split(key)
+
+        def policy(params, obs, k):
+            logits, value, _ = heads(params, obs, state.observers,
+                                     state.step)
+            action = jax.random.categorical(k, logits)
+            logp = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                                       action[..., None], axis=-1)[..., 0]
+            return action.astype(jnp.int32), (logits, value, logp)
+
+        env_state, last_obs, traj = rollout(
+            benv, policy, state.params, env_state, obs, k_roll, cfg.n_steps)
+        logits_b, values_b, logp_b = traj.logits_or_value
+        _, last_value, _ = heads(state.params, last_obs, state.observers,
+                                 state.step)
+        advs, returns = gae(traj.reward, traj.done, values_b,
+                            last_value, cfg.gamma, cfg.gae_lambda)
+        advs_n = (advs - advs.mean()) / (advs.std() + 1e-8)
+
+        # flatten (T, B) -> (T*B,)
+        def flat(x):
+            return x.reshape((-1,) + x.shape[2:])
+        data = dict(obs=flat(traj.obs), action=flat(traj.action),
+                    logp=flat(logp_b), adv=flat(advs_n),
+                    ret=flat(returns))
+        n_data = data["adv"].shape[0]
+        mb = n_data // cfg.n_minibatches
+
+        def epoch(carry, k):
+            params, opt, observers = carry
+            perm = jax.random.permutation(k, n_data)
+
+            def minibatch(carry, idx):
+                params, opt, observers = carry
+                mb_data = {k2: v[idx] for k2, v in data.items()}
+
+                def loss_fn(p):
+                    logits, values, new_coll = heads(p, mb_data["obs"],
+                                                     observers, state.step)
+                    logp = jnp.take_along_axis(
+                        jax.nn.log_softmax(logits, -1),
+                        mb_data["action"][..., None], axis=-1)[..., 0]
+                    ratio = jnp.exp(logp - mb_data["logp"])
+                    clipped = jnp.clip(ratio, 1 - cfg.clip_eps,
+                                       1 + cfg.clip_eps)
+                    pg = -jnp.minimum(ratio * mb_data["adv"],
+                                      clipped * mb_data["adv"]).mean()
+                    v_loss = jnp.square(values - mb_data["ret"]).mean()
+                    p_ = jax.nn.softmax(logits, -1)
+                    ent = -jnp.sum(
+                        p_ * jax.nn.log_softmax(logits, -1), -1).mean()
+                    return pg + cfg.value_coef * v_loss \
+                        - cfg.entropy_coef * ent, new_coll
+
+                (loss, new_coll), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params)
+                params, opt, _ = adam_update(grads, opt, params, adam_cfg)
+                return (params, opt, new_coll), loss
+
+            idxs = perm[:mb * cfg.n_minibatches].reshape(
+                cfg.n_minibatches, mb)
+            carry, losses = jax.lax.scan(minibatch,
+                                         (params, opt, observers), idxs)
+            return carry, jnp.mean(losses)
+
+        (params, opt, observers), losses = jax.lax.scan(
+            epoch, (state.params, state.opt, state.observers),
+            jax.random.split(k_perm, cfg.epochs))
+        state = common.TrainState(params, opt, observers, state.step + 1, ())
+        metrics = {"loss": jnp.mean(losses),
+                   "reward": jnp.sum(traj.reward) / jnp.maximum(
+                       jnp.sum(traj.done), 1.0),
+                   "action_dist_variance": jnp.var(
+                       jax.nn.softmax(logits_b, -1), -1).mean()}
+        return state, env_state, last_obs, metrics
+
+    def act_fn(params, obs, observers=None, step=1 << 30):
+        ctx = common.make_ctx(cfg.quant, observers or {}, step)
+        out = net.apply(ctx, params, obs)
+        return jnp.argmax(out[..., :n_act], axis=-1).astype(jnp.int32)
+
+    return iteration, act_fn, benv

@@ -1,0 +1,285 @@
+"""Unit + property tests for the paper-faithful quantization core."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import affine, fake_quant, ptq, mixed_precision as mp
+from repro.core.qconfig import QuantConfig, QuantMode
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# Affine quantizer (paper Sec 3.1)
+# ---------------------------------------------------------------------------
+
+def test_zero_exactly_representable():
+    w = jnp.array([-1.3, 0.0, 2.7, 0.0])
+    for bits in (2, 4, 8):
+        out = affine.ptq_tensor(w, bits)
+        assert out[1] == 0.0 and out[3] == 0.0
+
+
+def test_delta_matches_paper_formula():
+    w = jnp.array([-2.0, 3.0, 1.0])
+    p = affine.compute_affine_params(w, 8)
+    np.testing.assert_allclose(p.delta, (2.0 + 3.0) / 256.0, rtol=1e-6)
+    np.testing.assert_allclose(p.zero_point, round(2.0 / ((2 + 3) / 256)))
+
+
+def test_range_extended_to_include_zero():
+    # All-positive tensor: min(W,0)=0 so range is [0, max]
+    w = jnp.array([1.0, 2.0, 4.0])
+    p = affine.compute_affine_params(w, 8)
+    np.testing.assert_allclose(p.delta, 4.0 / 256.0, rtol=1e-6)
+    np.testing.assert_allclose(p.zero_point, 0.0)
+
+
+def test_all_zero_tensor_safe():
+    w = jnp.zeros((4, 4))
+    out = affine.ptq_tensor(w, 8)
+    assert jnp.all(out == 0.0) and jnp.all(jnp.isfinite(out))
+
+
+@settings(max_examples=60, deadline=None)
+@given(hnp.arrays(np.float32, hnp.array_shapes(min_dims=1, max_dims=3,
+                                               min_side=1, max_side=16),
+                  elements=st.floats(-100, 100, width=32)),
+       st.sampled_from([2, 4, 6, 8]))
+def test_prop_quant_error_bounded_by_delta(w, bits):
+    """|W - D(Q(W))| <= 1.5*delta everywhere (paper-quantizer bound).
+
+    Note on the bound: the paper's formula uses delta = range/2^n (not
+    range/(2^n - 1)) and z = round(-min/delta), so the max of the range maps
+    to code 2^n which clips to 2^n - 1 — the edge value can lose up to one
+    full delta, plus 0.5*delta from rounding z. Interior values obey the
+    usual 0.5*delta bound.
+    """
+    w = jnp.asarray(w)
+    p = affine.compute_affine_params(w, bits)
+    err = jnp.abs(w - affine.quantize_dequantize(w, p))
+    assert float(err.max()) <= float(p.delta) * 1.5001 + 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(hnp.arrays(np.float32, (8, 8),
+                  elements=st.floats(-50, 50, width=32)),
+       st.sampled_from([4, 8]))
+def test_prop_quantize_idempotent(w, bits):
+    """Quantize-dequantize is a projection: applying twice == once."""
+    w = jnp.asarray(w)
+    p = affine.compute_affine_params(w, bits)
+    once = affine.quantize_dequantize(w, p)
+    twice = affine.quantize_dequantize(once, p)
+    np.testing.assert_allclose(once, twice, atol=float(p.delta) * 0.51 + 1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(hnp.arrays(np.float32, (16,), elements=st.floats(-10, 10, width=32)))
+def test_prop_codes_in_range(w):
+    w = jnp.asarray(w)
+    for bits in (2, 8):
+        p = affine.compute_affine_params(w, bits)
+        q = affine.quantize(w, p)
+        assert float(q.min()) >= 0.0
+        assert float(q.max()) <= 2.0 ** bits - 1.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(hnp.arrays(np.float32, (4, 6), elements=st.floats(-20, 20, width=32)))
+def test_prop_int_pack_roundtrip_matches_simulation(w):
+    w = jnp.asarray(w)
+    sim = affine.ptq_tensor(w, 8)
+    codes, p = affine.quantize_to_int(w, 8)
+    assert codes.dtype == jnp.int8
+    unpacked = affine.dequantize_from_int(codes, p)
+    np.testing.assert_allclose(sim, unpacked, rtol=1e-5, atol=1e-5)
+
+
+def test_per_axis_less_error_than_per_tensor():
+    # Channels with very different scales: per-axis must win.
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (3, 3, 8, 4))
+    w = w * jnp.array([0.01, 0.1, 1.0, 10.0])  # scale per output channel
+    err_pt = float(affine.quantization_error(w, 8, axis=None))
+    err_pa = float(affine.quantization_error(w, 8, axis=3))
+    assert err_pa < err_pt
+
+
+def test_fp16_quantization():
+    w = jnp.array([1.0000001, -2.5, 65504.0, 1e-8], jnp.float32)
+    out = affine.fp16_quantize(w)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(out, np.asarray(w, np.float16).astype(np.float32))
+
+
+def test_wider_distribution_higher_error():
+    """Fig 3/4's mechanism: wider weight distribution -> more int8 error."""
+    key = jax.random.PRNGKey(1)
+    narrow = jax.random.normal(key, (256, 256)) * 0.05
+    wide = jax.random.normal(key, (256, 256)) * 1.0
+    assert float(affine.quantization_error(wide, 8)) > \
+        float(affine.quantization_error(narrow, 8))
+
+
+# ---------------------------------------------------------------------------
+# Fake quantization / STE (paper Sec 3.2)
+# ---------------------------------------------------------------------------
+
+def test_ste_gradient_is_identity():
+    w = jnp.array([-1.0, 0.3, 2.0])
+
+    def loss(w):
+        return jnp.sum(fake_quant.fake_quant_self_range(w, 4) ** 2)
+
+    g = jax.grad(loss)(w)
+    fq = fake_quant.fake_quant_self_range(w, 4)
+    np.testing.assert_allclose(g, 2 * fq, rtol=1e-5)  # d/dw (fq^2) with STE
+
+
+def test_fake_quant_matches_affine_oracle():
+    key = jax.random.PRNGKey(2)
+    w = jax.random.normal(key, (32, 32))
+    for bits in (2, 4, 8):
+        got = fake_quant.fake_quant_self_range(w, bits)
+        want = affine.ptq_tensor(w, bits)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_observer_monitoring_and_freeze():
+    st0 = fake_quant.ObserverState.init()
+    x1 = jnp.array([-1.0, 2.0])
+    st1 = fake_quant.observe(st0, x1, ema_decay=0.9,
+                             monitoring=jnp.asarray(True))
+    assert bool(st1.initialized)
+    np.testing.assert_allclose(st1.vmin, -1.0)
+    np.testing.assert_allclose(st1.vmax, 2.0)
+    # EMA pull toward new batch
+    x2 = jnp.array([-3.0, 0.5])
+    st2 = fake_quant.observe(st1, x2, ema_decay=0.9,
+                             monitoring=jnp.asarray(True))
+    np.testing.assert_allclose(st2.vmin, 0.9 * -1.0 + 0.1 * -3.0, rtol=1e-6)
+    # Frozen after delay: no change
+    st3 = fake_quant.observe(st2, jnp.array([-100.0, 100.0]), 0.9,
+                             monitoring=jnp.asarray(False))
+    np.testing.assert_allclose(st3.vmin, st2.vmin)
+    np.testing.assert_allclose(st3.vmax, st2.vmax)
+
+
+def test_qat_context_delay_semantics():
+    cfg = QuantConfig.qat(bits=8, quant_delay=10)
+    w = jnp.linspace(-1, 1, 64).reshape(8, 8)
+
+    # Before the delay: identity on weights and activations.
+    ctx = fake_quant.make_context(cfg, {}, step=0)
+    np.testing.assert_allclose(ctx.weight("w", w), w)
+    a = ctx.activation("a", w)
+    np.testing.assert_allclose(a, w)
+    coll = ctx.merged_collection()
+    assert "a" in coll and bool(coll["a"].initialized)
+
+    # After the delay: fake quantization active, using monitored ranges.
+    ctx2 = fake_quant.make_context(cfg, coll, step=10)
+    wq = ctx2.weight("w", w)
+    assert not np.allclose(wq, w)
+    np.testing.assert_allclose(wq, affine.ptq_tensor(w, 8), rtol=1e-5)
+    aq = ctx2.activation("a", w)
+    assert not np.allclose(aq, w)
+
+
+def test_null_context_passthrough():
+    ctx = fake_quant.make_context(QuantConfig.none(), None, 0)
+    w = jnp.ones((4, 4))
+    assert ctx.weight("w", w) is w
+    assert ctx.activation("a", w) is w
+
+
+# ---------------------------------------------------------------------------
+# PTQ over pytrees
+# ---------------------------------------------------------------------------
+
+def _toy_params():
+    k = jax.random.PRNGKey(3)
+    return {
+        "dense": {"kernel": jax.random.normal(k, (16, 8)),
+                  "bias": jnp.zeros((8,))},
+        "conv": {"kernel": jax.random.normal(k, (3, 3, 4, 8))},
+        "norm": {"scale": jnp.ones((16,))},
+    }
+
+
+def test_ptq_simulate_only_touches_weights():
+    params = _toy_params()
+    out = ptq.ptq_simulate(params, QuantConfig.ptq_int(8))
+    assert not np.allclose(out["dense"]["kernel"], params["dense"]["kernel"])
+    np.testing.assert_allclose(out["dense"]["bias"], params["dense"]["bias"])
+    np.testing.assert_allclose(out["norm"]["scale"], params["norm"]["scale"])
+
+
+def test_ptq_pack_unpack_roundtrip_and_memory():
+    params = _toy_params()
+    cfg = QuantConfig.ptq_int(8)
+    packed = ptq.ptq_pack(params, cfg)
+    unpacked = ptq.ptq_unpack(packed)
+    sim = ptq.ptq_simulate(params, cfg)
+    np.testing.assert_allclose(unpacked["dense"]["kernel"],
+                               sim["dense"]["kernel"], rtol=1e-5, atol=1e-5)
+    # Paper: ~4x parameter-memory reduction from fp32 -> int8.
+    fp32_bytes = ptq.tree_nbytes(params)
+    int8_bytes = ptq.tree_nbytes(packed)
+    assert int8_bytes < fp32_bytes / 3.0
+
+
+def test_ptq_fp16_simulation():
+    params = _toy_params()
+    out = ptq.ptq_simulate(params, QuantConfig.ptq_fp16())
+    want = np.asarray(params["dense"]["kernel"], np.float16).astype(np.float32)
+    np.testing.assert_allclose(out["dense"]["kernel"], want)
+
+
+# ---------------------------------------------------------------------------
+# Mixed precision
+# ---------------------------------------------------------------------------
+
+def test_cast_and_loss_scale_roundtrip():
+    from repro.core.qconfig import MixedPrecisionConfig
+    params = _toy_params()
+    half = mp.to_compute(params, MixedPrecisionConfig.bf16())
+    assert half["dense"]["kernel"].dtype == jnp.bfloat16
+
+    ls = mp.DynamicLossScale.init(1024.0)
+    loss = jnp.asarray(0.5)
+    scaled = mp.scale_loss(loss, ls)
+    np.testing.assert_allclose(scaled, 512.0)
+    grads = {"g": jnp.asarray([2048.0])}
+    np.testing.assert_allclose(mp.unscale_grads(grads, ls)["g"], [2.0])
+
+
+def test_dynamic_loss_scale_halves_on_nan_and_grows():
+    ls = mp.DynamicLossScale.init(1024.0)
+    ls2 = mp.update_loss_scale(ls, jnp.asarray(False))
+    np.testing.assert_allclose(ls2.scale, 512.0)
+    ls3 = mp.update_loss_scale(ls2, jnp.asarray(True), growth_interval=1)
+    np.testing.assert_allclose(ls3.scale, 1024.0)
+
+
+def test_all_finite_detects_nan():
+    assert bool(mp.all_finite({"a": jnp.ones(3)}))
+    assert not bool(mp.all_finite({"a": jnp.array([1.0, jnp.nan])}))
+
+
+# ---------------------------------------------------------------------------
+# Config parsing
+# ---------------------------------------------------------------------------
+
+def test_quant_config_parse():
+    assert QuantConfig.parse("none").mode == QuantMode.NONE
+    assert QuantConfig.parse("ptq_int8").bits == 8
+    assert QuantConfig.parse("ptq_fp16").mode == QuantMode.PTQ_FP16
+    c = QuantConfig.parse("qat4:delay=100")
+    assert c.bits == 4 and c.quant_delay == 100 and c.is_qat
+    with pytest.raises(ValueError):
+        QuantConfig.parse("int9000")

@@ -1,0 +1,232 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Per-kernel shape/dtype sweeps + hypothesis property tests, per the repo's
+kernel contract: every kernel must match its ref.py oracle allclose.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import affine
+from repro.kernels import ref, ops
+from repro.kernels.fake_quant import fake_quant_pallas
+from repro.kernels.int8_matmul import int8_matmul_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+# ---------------------------------------------------------------------------
+# fake_quant kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(8, 128), (16, 256), (100, 100), (1, 128),
+                                   (257, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_fake_quant_kernel_matches_ref(shape, dtype, bits):
+    key = jax.random.PRNGKey(hash((shape, bits)) % 2**31)
+    x = (jax.random.normal(key, shape) * 3.0).astype(dtype)
+    vmin = jnp.minimum(jnp.min(x), 0.0).astype(jnp.float32)
+    vmax = jnp.maximum(jnp.max(x), 0.0).astype(jnp.float32)
+    got = fake_quant_pallas(x.astype(jnp.float32).reshape(shape), vmin, vmax,
+                            bits, block_rows=64, block_cols=128,
+                            interpret=True)
+    want = ref.fake_quant_with_range_ref(x.astype(jnp.float32), vmin, vmax,
+                                         bits)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_fake_quant_op_dispatches_and_matches():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 128))
+    got = ops.fake_quant(x, 8, backend="interpret")
+    want = ref.fake_quant_ref(x, 8)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 300), st.sampled_from([2, 6, 8]))
+def test_prop_fake_quant_kernel_random_shapes(rows, cols, bits):
+    x = jax.random.normal(jax.random.PRNGKey(rows * 1000 + cols), (rows, cols))
+    got = ops.fake_quant(x, bits, backend="interpret")
+    want = ref.fake_quant_ref(x, bits)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# int8 matmul kernel
+# ---------------------------------------------------------------------------
+
+def _quantize_operands(key, m, k, n):
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (m, k)) * 2.0
+    w = jax.random.normal(kw, (k, n)) * 0.5
+    xq, xp = affine.quantize_to_int(x, 8, axis=None)
+    # per-output-channel weight quantization (paper's per-axis scheme)
+    wq_list, wscale, wzero = [], [], []
+    wq, wp = affine.quantize_to_int(w, 8, axis=1)
+    return x, w, xq, xp, wq, wp
+
+
+@pytest.mark.parametrize("mkn", [(8, 128, 128), (32, 256, 64), (100, 70, 36),
+                                 (1, 512, 256), (64, 64, 512)])
+def test_int8_matmul_kernel_matches_ref(mkn):
+    m, k, n = mkn
+    x, w, xq, xp, wq, wp = _quantize_operands(jax.random.PRNGKey(m + n), m, k, n)
+    w_scale = wp.delta.reshape(-1)
+    w_zero = wp.zero_point.reshape(-1)
+    got = int8_matmul_pallas(xq, wq, xp.delta, xp.zero_point, w_scale, w_zero,
+                             block_m=32, block_n=64, block_k=64,
+                             interpret=True)
+    want = ref.int8_matmul_ref(xq, wq, xp.delta, w_scale, xp.zero_point,
+                               w_zero)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_int8_matmul_ref_close_to_float_matmul():
+    """End-to-end: int8 GEMM approximates the float product (paper's premise)."""
+    m, k, n = 16, 256, 32
+    x, w, xq, xp, wq, wp = _quantize_operands(jax.random.PRNGKey(7), m, k, n)
+    got = ref.int8_matmul_ref(xq, wq, xp.delta, wp.delta.reshape(-1),
+                              xp.zero_point, wp.zero_point.reshape(-1))
+    want = x @ w
+    # error ~ O(delta); relative tolerance scaled to magnitudes
+    assert float(jnp.max(jnp.abs(got - want))) < 0.05 * float(
+        jnp.max(jnp.abs(want))) + 0.1
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 40), st.integers(8, 130), st.integers(1, 50))
+def test_prop_int8_matmul_random_shapes(m, k, n):
+    x, w, xq, xp, wq, wp = _quantize_operands(
+        jax.random.PRNGKey(m * 7919 + k * 13 + n), m, k, n)
+    got = ops.int8_matmul(xq, wq, xp.delta, xp.zero_point,
+                          wp.delta.reshape(-1), wp.zero_point.reshape(-1),
+                          backend="interpret")
+    want = ref.int8_matmul_ref(xq, wq, xp.delta, wp.delta.reshape(-1),
+                               xp.zero_point, wp.zero_point.reshape(-1))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seq,dim", [(128, 64), (256, 128), (96, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_dense_ref(seq, dim, causal):
+    key = jax.random.PRNGKey(seq + dim)
+    q, k, v = jax.random.normal(key, (3, seq, dim))
+    got = flash_attention_pallas(q, k, v, causal=causal, block_q=64,
+                                 block_kv=64, interpret=True)
+    want = ref.mha_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_attention_sliding_window(window):
+    key = jax.random.PRNGKey(0)
+    q, k, v = jax.random.normal(key, (3, 128, 64))
+    got = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                 block_q=32, block_kv=32, interpret=True)
+    want = ref.mha_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_softcap():
+    key = jax.random.PRNGKey(1)
+    q, k, v = jax.random.normal(key, (3, 64, 32)) * 3.0
+    got = flash_attention_pallas(q, k, v, causal=True, softcap=50.0,
+                                 block_q=32, block_kv=32, interpret=True)
+    want = ref.mha_ref(q, k, v, causal=True, softcap=50.0)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_decode_alignment():
+    """seq_q < seq_kv (decode/suffix): queries align to the end of kv."""
+    key = jax.random.PRNGKey(2)
+    k = jax.random.normal(key, (128, 64))
+    v = jax.random.normal(jax.random.PRNGKey(3), (128, 64))
+    q = jax.random.normal(jax.random.PRNGKey(4), (8, 64))
+    got = flash_attention_pallas(q, k, v, causal=True, block_q=8,
+                                 block_kv=32, interpret=True)
+    want = ref.mha_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_batched_op():
+    key = jax.random.PRNGKey(5)
+    q = jax.random.normal(key, (2, 4, 64, 32))
+    k = jax.random.normal(jax.random.PRNGKey(6), (2, 4, 64, 32))
+    v = jax.random.normal(jax.random.PRNGKey(7), (2, 4, 64, 32))
+    got = ops.flash_attention(q, k, v, backend="interpret")
+    want = ops.flash_attention(q, k, v, backend="ref")
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(2, 5), st.integers(1, 4))
+def test_prop_flash_attention_blocks(log_seq, dim8):
+    seq, dim = 2 ** log_seq * 8, dim8 * 16
+    key = jax.random.PRNGKey(seq * dim)
+    q, k, v = jax.random.normal(key, (3, seq, dim))
+    got = flash_attention_pallas(q, k, v, causal=True, block_q=16,
+                                 block_kv=16, interpret=True)
+    want = ref.mha_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache decode attention kernel
+# ---------------------------------------------------------------------------
+
+from repro.kernels.int8_cache_attention import int8_cache_decode_attention
+
+
+def _make_cache(key, t, dh):
+    k = jax.random.normal(key, (t, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (t, dh))
+    ks = jnp.max(jnp.abs(k), axis=-1, keepdims=True) / 127.0
+    vs = jnp.max(jnp.abs(v), axis=-1, keepdims=True) / 127.0
+    kc = jnp.clip(jnp.round(k / ks), -127, 127).astype(jnp.int8)
+    vc = jnp.clip(jnp.round(v / vs), -127, 127).astype(jnp.int8)
+    return kc, ks, vc, vs
+
+
+@pytest.mark.parametrize("t,dh,pos", [(256, 64, 255), (256, 64, 100),
+                                      (128, 128, 17)])
+def test_int8_cache_decode_matches_ref(t, dh, pos):
+    key = jax.random.PRNGKey(t + pos)
+    q = jax.random.normal(key, (4, dh))
+    kc, ks, vc, vs = _make_cache(jax.random.fold_in(key, 7), t, dh)
+    got = int8_cache_decode_attention(q, kc, ks, vc, vs, pos,
+                                      block_t=64, interpret=True)
+    want = ref.int8_cache_decode_ref(q, kc, ks, vc, vs, pos)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_int8_cache_decode_window():
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 64))
+    kc, ks, vc, vs = _make_cache(jax.random.fold_in(key, 3), 256, 64)
+    got = int8_cache_decode_attention(q, kc, ks, vc, vs, 200, window=64,
+                                      block_t=64, interpret=True)
+    want = ref.int8_cache_decode_ref(q, kc, ks, vc, vs, 200, window=64)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_int8_cache_decode_quantization_error_small():
+    """int8 cache attention ~ fp attention (the feature's premise)."""
+    key = jax.random.PRNGKey(5)
+    q = jax.random.normal(key, (4, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (128, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (128, 64))
+    ks = jnp.max(jnp.abs(k), axis=-1, keepdims=True) / 127.0
+    vs = jnp.max(jnp.abs(v), axis=-1, keepdims=True) / 127.0
+    kc = jnp.clip(jnp.round(k / ks), -127, 127).astype(jnp.int8)
+    vc = jnp.clip(jnp.round(v / vs), -127, 127).astype(jnp.int8)
+    fp = ref.mha_ref(q, k, v, causal=False)
+    q8 = ref.int8_cache_decode_ref(q, kc, ks, vc, vs, 127)
+    assert float(jnp.max(jnp.abs(fp - q8))) < 0.05

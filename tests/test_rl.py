@@ -1,0 +1,190 @@
+"""RL substrate tests: envs, buffer, algorithms, QuaRL pipelines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.qconfig import QuantConfig
+from repro.rl import buffer as rb
+from repro.rl import loops
+from repro.rl.env import batched_env, evaluate, rollout
+from repro.rl.envs import ENVS, make as make_env
+
+
+# ---------------------------------------------------------------------------
+# Environments
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(ENVS))
+def test_env_api_contract(name):
+    env = make_env(name)
+    key = jax.random.PRNGKey(0)
+    state, obs = env.reset(key)
+    assert obs.shape == env.spec.obs_shape
+    if env.spec.continuous:
+        action = jnp.zeros((env.spec.action_dim,))
+    else:
+        action = jnp.zeros((), jnp.int32)
+    state, obs2, reward, done = env.step(state, action, key)
+    assert obs2.shape == env.spec.obs_shape
+    assert reward.shape == () and done.shape == ()
+    assert bool(jnp.isfinite(reward))
+    # jittable
+    jitted = jax.jit(env.step)
+    jitted(state, action, key)
+
+
+@pytest.mark.parametrize("name", sorted(ENVS))
+def test_env_episodes_terminate(name):
+    """Random policy: every env terminates within its max_steps budget."""
+    env = make_env(name)
+    key = jax.random.PRNGKey(1)
+    state, obs = env.reset(key)
+    done_seen = False
+    for i in range(env.spec.max_steps + 5):
+        key, k1, k2 = jax.random.split(key, 3)
+        if env.spec.continuous:
+            action = jax.random.uniform(k1, (env.spec.action_dim,),
+                                        minval=-1, maxval=1)
+        else:
+            action = jax.random.randint(k1, (), 0, env.spec.n_actions)
+        state, obs, reward, done = env.step(state, action, k2)
+        if bool(done):
+            done_seen = True
+            break
+    assert done_seen, f"{name} never terminated"
+
+
+def test_cartpole_dynamics_match_gym():
+    """One analytic step against hand-computed gym physics."""
+    env = make_env("cartpole")
+    from repro.rl.envs.cartpole import CartPoleState
+    s = CartPoleState(jnp.asarray(0.1), jnp.asarray(0.2), jnp.asarray(0.05),
+                      jnp.asarray(-0.1), jnp.zeros((), jnp.int32))
+    ns, obs, r, d = env.step(s, jnp.asarray(1), jax.random.PRNGKey(0))
+    # x' = x + tau * x_dot
+    np.testing.assert_allclose(ns.x, 0.1 + 0.02 * 0.2, rtol=1e-6)
+    np.testing.assert_allclose(ns.theta, 0.05 + 0.02 * -0.1, rtol=1e-6)
+    assert float(r) == 1.0 and float(d) == 0.0
+
+
+def test_airnav_reward_equation():
+    """Paper Eq. 1: reaching the goal pays 1000*alpha - D_g - D_c - 1."""
+    env = make_env("airnav")
+    from repro.rl.envs.airnav import AirNavState, V_MAX, T_MAX
+    s = AirNavState(pos=jnp.array([5.0, 5.0]), vel=jnp.zeros(2),
+                    heading=jnp.zeros(()), goal=jnp.array([6.2, 5.0]),
+                    obstacles=jnp.zeros((5, 3)), t=jnp.zeros((), jnp.int32))
+    # action 22 = full speed, straight ahead (speed idx 4, yaw idx 2)
+    ns, obs, r, d = env.step(s, jnp.asarray(22), jax.random.PRNGKey(0))
+    assert float(d) == 1.0          # goal 1.2m ahead < 1.25m step + 1m radius
+    d_goal = float(jnp.linalg.norm(ns.goal - ns.pos))
+    expect = 1000.0 - d_goal - (V_MAX - V_MAX) * T_MAX - 1.0
+    np.testing.assert_allclose(float(r), expect, rtol=1e-5)
+
+
+def test_batched_rollout_and_autoreset():
+    env = make_env("cartpole")
+    benv = batched_env(env, 4)
+    key = jax.random.PRNGKey(0)
+    state, obs = benv.reset(key)
+    assert obs.shape == (4, 4)
+
+    def policy(params, obs, key):
+        return jax.random.randint(key, (4,), 0, 2), jnp.zeros((4, 2))
+
+    state, obs, traj = rollout(benv, policy, None, state, obs, key, 100)
+    assert traj.reward.shape == (100, 4)
+    assert float(traj.done.sum()) > 0  # episodes ended and auto-reset
+    # time index of env state resets after done
+    assert int(state.t.max()) < 100
+
+
+# ---------------------------------------------------------------------------
+# Replay buffer
+# ---------------------------------------------------------------------------
+
+def test_replay_circular_write_and_sample():
+    state = rb.replay_init(8, (2,))
+    batch = rb.Transition(
+        obs=jnp.arange(12, dtype=jnp.float32).reshape(6, 2),
+        action=jnp.arange(6, dtype=jnp.int32),
+        reward=jnp.arange(6, dtype=jnp.float32),
+        done=jnp.zeros(6), next_obs=jnp.zeros((6, 2)))
+    state = rb.replay_add_batch(state, batch)
+    assert int(state.size) == 6 and int(state.index) == 6
+    state = rb.replay_add_batch(state, batch)   # wraps
+    assert int(state.size) == 8 and int(state.index) == 4
+    sample = rb.replay_sample(state, jax.random.PRNGKey(0), 16)
+    assert sample.obs.shape == (16, 2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 20), st.integers(1, 10))
+def test_prop_replay_size_invariant(n1, n2):
+    cap = 16
+    state = rb.replay_init(cap, (1,))
+    for n in (n1, n2):
+        batch = rb.Transition(jnp.zeros((n, 1)), jnp.zeros((n,), jnp.int32),
+                              jnp.ones((n,)), jnp.zeros((n,)),
+                              jnp.zeros((n, 1)))
+        state = rb.replay_add_batch(state, batch)
+    assert int(state.size) == min(n1 + n2, cap)
+    assert int(state.index) == (n1 + n2) % cap
+
+
+# ---------------------------------------------------------------------------
+# Algorithms (short runs: learning signal, not convergence)
+# ---------------------------------------------------------------------------
+
+def test_ppo_learns_cartpole():
+    res = loops.train("ppo", "cartpole", iterations=120, record_every=40,
+                      seed=3)
+    assert max(res.rewards) > 100, res.rewards
+
+
+def test_a2c_runs_and_improves():
+    res = loops.train("a2c", "cartpole", iterations=500, record_every=250,
+                      seed=1)
+    assert max(res.rewards) > 50, res.rewards
+
+
+def test_dqn_runs_finite():
+    res = loops.train("dqn", "cartpole", iterations=60, record_every=30)
+    assert all(np.isfinite(res.rewards))
+
+
+def test_ddpg_runs_finite():
+    res = loops.train("ddpg", "pendulum", iterations=40, record_every=20)
+    assert all(np.isfinite(res.rewards))
+
+
+def test_qat_training_runs_with_delay():
+    from repro.core.qconfig import QuantConfig
+    res = loops.train("ppo", "cartpole", iterations=30,
+                      quant=QuantConfig.qat(8, quant_delay=10),
+                      record_every=15)
+    assert all(np.isfinite(res.rewards))
+    assert res.state.observers, "QAT observers were never populated"
+
+
+# ---------------------------------------------------------------------------
+# QuaRL pipelines (Algorithms 1 & 2)
+# ---------------------------------------------------------------------------
+
+def test_quarl_ptq_pipeline():
+    out = loops.quarl_ptq("ppo", "cartpole", bits_list=(8,), iterations=60)
+    r = out[0]
+    assert r.label == "ptq_int8"
+    assert np.isfinite(r.fp32_reward) and np.isfinite(r.quant_reward)
+    assert "range" in r.extra["weight_stats"]
+
+
+def test_eval_params_changes_weights_ptq():
+    res = loops.train("ppo", "cartpole", iterations=10, record_every=10)
+    from repro.rl.common import eval_params
+    q = eval_params(res.state.params, QuantConfig.ptq_int(4))
+    diff = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), res.state.params, q)
+    assert max(jax.tree_util.tree_leaves(diff)) > 0
