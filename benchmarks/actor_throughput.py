@@ -1,0 +1,137 @@
+"""ActorQ hot-path benchmark: actor inference throughput + driver overhead.
+
+Two measurements behind the paper's systems claim (8-bit actors collect data
+1.5-5.41x faster):
+
+1. Actor throughput — env-steps/sec of batched action selection for the
+   three actor execution modes across env batch sizes {64, 256, 1024}:
+     * fp32       — the plain policy,
+     * fake-quant — fp32 math on quantize-dequantized weights (what the
+       repo simulated before ActorQ; same arithmetic cost as fp32),
+     * int8       — the true ActorQ path (``rl.actorq``): packed int8
+       params + dynamic activation quantization through the W8A8 GEMM
+       (Pallas on TPU; on this CPU host the ``ref`` oracle path, so the
+       reported CPU number is XLA-CPU latency, not the TPU kernel).
+
+2. Dispatch overhead — wall time of ``loops.train`` with the per-step
+   driver (one jit dispatch per update) vs the scan-fused driver
+   (``steps_per_call`` updates per dispatch), same seed and budget.
+
+Emits ``BENCH_actor_throughput.json`` via ``benchmarks/common.py``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common as C
+
+BATCH_SIZES = (64, 256, 1024)
+HIDDEN = (256, 256, 256)          # paper Table 5 "policy II" deployment MLP
+
+
+def _actor_fns(net, params, n_act):
+    """(label -> jitted act fn, params-for-that-fn) for the three modes."""
+    from repro.core import ptq
+    from repro.core.fake_quant import NullQATContext
+    from repro.core.qconfig import QuantConfig
+    from repro.rl import actorq
+
+    ctx = NullQATContext()
+
+    @jax.jit
+    def fp32_act(p, obs):
+        return jnp.argmax(net.apply(ctx, p, obs)[..., :n_act], -1)
+
+    fake = ptq.ptq_simulate(params, QuantConfig.ptq_int(8))
+    packed = actorq.pack_actor_params(params)
+
+    @jax.jit
+    def int8_act(p, obs):
+        return jnp.argmax(
+            actorq.quantized_apply(p, obs)[..., :n_act], -1)
+
+    return {"fp32": (fp32_act, params),
+            "fake_quant": (fp32_act, fake),
+            "int8": (int8_act, packed)}
+
+
+def run(train_iterations: int = 60) -> List[Dict]:
+    from repro.rl import loops
+    from repro.rl.envs import make as make_env
+    from repro.rl.networks import make_network
+
+    rows = []
+
+    # -- 1. actor inference throughput -----------------------------------
+    env = make_env("airnav")
+    n_act = env.spec.n_actions
+    net = make_network(env.spec.obs_shape, n_act, hidden=HIDDEN)
+    params = net.init(jax.random.PRNGKey(0))
+    fns = _actor_fns(net, params, n_act)
+    obs_dim = int(env.spec.obs_shape[0])
+
+    for batch in BATCH_SIZES:
+        obs = jax.random.normal(jax.random.PRNGKey(1), (batch, obs_dim))
+        base_t = None
+        for label, (fn, p) in fns.items():
+            t = C.time_fn(fn, p, obs, warmup=2, iters=10)
+            base_t = t if label == "fp32" else base_t
+            sps = batch / t
+            rows.append({"section": "actor_throughput", "actor": label,
+                         "batch": batch, "us_per_call": t * 1e6,
+                         "steps_per_sec": sps,
+                         "speedup_vs_fp32": base_t / t})
+            C.emit(f"actor/{label}/b{batch}", t * 1e6,
+                   f"steps_per_sec={sps:.0f}"
+                   f";speedup={base_t / t:.2f}x")
+
+    # -- 2. driver dispatch overhead: per-step vs scan-fused --------------
+    # Same total update budget through both drivers, timed after compile,
+    # so the difference is pure Python-dispatch + host-roundtrip overhead.
+    import time as _time
+
+    from repro.rl import a2c as a2c_mod
+
+    cenv = make_env("cartpole")
+    cnet = make_network(cenv.spec.obs_shape, cenv.spec.n_actions + 1)
+    ccfg = a2c_mod.A2CConfig()
+    iteration, _, benv = a2c_mod.make_iteration(cenv, cnet, ccfg)
+    updates = C.scaled(train_iterations) * 10
+
+    def drive(chunk_len: int) -> float:
+        """us/update of the fused driver at the given chunk length."""
+        state = a2c_mod.init(jax.random.PRNGKey(0), cenv, cnet, ccfg)
+        env_state, obs = benv.reset(jax.random.PRNGKey(1))
+        key = jax.random.PRNGKey(2)
+        fused = loops.make_scan_iteration(iteration, chunk_len)
+        state, env_state, obs, key, _ = fused(state, env_state, obs, key)
+        jax.block_until_ready(state.params)        # compile + warm
+        n_chunks = max(updates // chunk_len, 1)
+        t0 = _time.perf_counter()
+        for _ in range(n_chunks):
+            state, env_state, obs, key, _ = fused(state, env_state, obs,
+                                                  key)
+        jax.block_until_ready(state.params)
+        return (_time.perf_counter() - t0) / (n_chunks * chunk_len) * 1e6
+
+    base_us = None
+    for steps_per_call in (1, 10, 50):
+        us_it = drive(steps_per_call)
+        base_us = us_it if steps_per_call == 1 else base_us
+        rows.append({"section": "driver_overhead",
+                     "steps_per_call": steps_per_call,
+                     "updates": updates, "us_per_update": us_it,
+                     "speedup_vs_per_step": base_us / us_it})
+        C.emit(f"driver/scan{steps_per_call}", us_it,
+               f"speedup={base_us / us_it:.2f}x")
+
+    path = C.save_rows("BENCH_actor_throughput", rows)
+    print(f"wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

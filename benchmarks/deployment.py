@@ -29,30 +29,13 @@ POLICIES = {          # paper Table 5
 }
 
 
-def _int8_infer_fn(net, packed_params, n_hidden):
-    """MLP forward where every dense is the int8 GEMM path."""
-    from repro.core import affine
-    from repro.core.ptq import PackedTensor
-    from repro.kernels import ref as kref
+def _int8_infer_fn(packed_params):
+    """MLP forward where every dense is the int8 GEMM path (rl.actorq)."""
+    from repro.rl import actorq
 
     @jax.jit
     def infer(obs):
-        x = obs
-        for i in range(n_hidden + 1):
-            name = f"fc{i}" if i < n_hidden else "out"
-            layer = packed_params[name]
-            w: PackedTensor = layer["w"]
-            n = w.codes.shape[1]
-            xq, xp = affine.quantize_to_int(x, 8)
-            # per-tensor weight quant: broadcast scalar delta/zero per column
-            y = kref.int8_matmul_ref(
-                xq, w.codes, xp.delta,
-                jnp.broadcast_to(w.delta.reshape(-1), (n,)),
-                xp.zero_point,
-                jnp.broadcast_to(w.zero_point.reshape(-1), (n,)))
-            y = y + layer["b"]
-            x = jax.nn.relu(y) if i < n_hidden else y
-        return jnp.argmax(x, -1)
+        return jnp.argmax(actorq.quantized_apply(packed_params, obs), -1)
 
     return infer
 
@@ -85,8 +68,7 @@ def run(iterations: int = 250) -> List[Dict]:
         def fp32_infer(obs, params=res.state.params):
             return jnp.argmax(res.net.apply(ctx, params, obs), -1)
 
-        n_hidden = len(widths)
-        int8_infer = _int8_infer_fn(res.net, packed, n_hidden)
+        int8_infer = _int8_infer_fn(packed)
         t_fp32 = C.time_fn(fp32_infer, obs, warmup=2, iters=10)
         t_int8 = C.time_fn(int8_infer, obs, warmup=2, iters=10)
 

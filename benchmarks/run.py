@@ -22,9 +22,9 @@ def main() -> None:
     print("benchmark,us_per_call,derived")
     jobs = []
 
-    from benchmarks import (deployment, exploration, mixed_precision,
-                            ptq_rewards, qat_bitwidth, roofline,
-                            weight_distribution)
+    from benchmarks import (actor_throughput, deployment, exploration,
+                            mixed_precision, ptq_rewards, qat_bitwidth,
+                            roofline, weight_distribution)
 
     if FAST:
         jobs = [
@@ -44,6 +44,8 @@ def main() -> None:
             ("fig5_mp_convergence",
              lambda: mixed_precision.convergence_check(steps=60)),
             ("table5_deployment", lambda: deployment.run(iterations=100)),
+            ("actorq_throughput",
+             lambda: actor_throughput.run(train_iterations=30)),
         ]
     else:
         jobs = [
@@ -54,6 +56,7 @@ def main() -> None:
             ("table4_mixed_precision", mixed_precision.run),
             ("fig5_mp_convergence", mixed_precision.convergence_check),
             ("table5_deployment", deployment.run),
+            ("actorq_throughput", actor_throughput.run),
         ]
     jobs.append(("roofline", roofline.main))
 

@@ -176,6 +176,7 @@ class QATContext:
 class NullQATContext:
     """No-op context used when quantization is disabled (keeps call sites clean)."""
     config = QuantConfig.none()
+    enabled = False  # ctx contract: every context exposes ``enabled``
 
     def weight(self, name: str, w: jnp.ndarray) -> jnp.ndarray:
         return w
@@ -203,6 +204,8 @@ class NameRecorder:
     update — scan carries need a fixed pytree structure, so all observer
     slots must exist up front.
     """
+
+    enabled = False  # ctx contract: recording never applies quantization
 
     def __init__(self, config: QuantConfig):
         self.config = config

@@ -43,6 +43,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
         t_compile = time.time() - t1
         memory = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, list):   # older jax: one dict per executable
+            cost = cost[0] if cost else {}
         # Post-SPMD HLO: collectives are explicit here (pre-partitioning
         # stablehlo has none); trip-count-weighted per hlo_analysis.py.
         coll = collective_stats(compiled.as_text())

@@ -1,11 +1,14 @@
 """Serving launcher: batched greedy decoding with (optionally int8) weights
 and (optionally int8) KV caches — the paper's deployment case study scaled to
-the assigned architectures.
+the assigned architectures — plus an RL policy-serving mode (ActorQ
+deployment: ``--rl-env`` serves a policy with a true int8 actor).
 
-Example:
+Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \\
       --reduced --batch 4 --prompt-len 32 --new-tokens 32 --quant ptq_int8 \\
       --int8-cache
+  PYTHONPATH=src python -m repro.launch.serve --rl-env cartpole \\
+      --actor-backend int8 --batch 256 --rl-iters 40
 """
 from __future__ import annotations
 
@@ -13,6 +16,68 @@ import argparse
 import dataclasses
 import sys
 import time
+
+
+def _serve_policy(args) -> int:
+    """ActorQ deployment: serve batched policy inference on an RL env.
+
+    ``--actor-backend int8`` packs the policy into the int8 cache
+    (``rl.actorq``) and answers action queries through the W8A8 kernel
+    (``--kernel-backend`` = pallas | interpret | ref | auto); ``fp32`` serves
+    the plain policy.  Reports params memory and actions/sec.
+    """
+    import jax
+
+    from repro.core import ptq
+    from repro.rl import actorq, loops
+    from repro.rl.envs import make as make_env
+
+    env = make_env(args.rl_env)
+    res = loops.train("ppo" if not env.spec.continuous else "ddpg",
+                      args.rl_env, iterations=max(args.rl_iters, 1),
+                      record_every=max(args.rl_iters, 1), eval_episodes=2,
+                      seed=args.seed, steps_per_call=args.steps_per_call)
+    params = res.state.params
+    fp32_bytes = ptq.tree_nbytes(params)
+
+    if args.actor_backend == "int8":
+        served = actorq.pack_actor_params(params)
+        act = actorq.make_act_fn(env.spec, backend=args.kernel_backend)
+        served_bytes = actorq.packed_nbytes(served)
+    else:
+        served = params
+
+        def act(p, o):
+            # the algo's own deterministic policy (argmax head for
+            # discrete, tanh*scale for DDPG)
+            return res.act_fn(p, o, res.state.observers, res.state.step)
+        served_bytes = fp32_bytes
+
+    step = jax.jit(act)
+    key = jax.random.PRNGKey(args.seed)
+    obs = jax.random.normal(key, (args.batch,) + tuple(env.spec.obs_shape))
+    jax.block_until_ready(step(served, obs))          # compile
+    t0 = time.time()
+    reps = 20
+    for _ in range(reps):
+        actions = jax.block_until_ready(step(served, obs))
+    dt = time.time() - t0
+    print(f"[serve-rl] env={args.rl_env} actor={args.actor_backend} "
+          f"kernel={args.kernel_backend} "
+          f"params={fp32_bytes / 1e3:.1f}KB fp32 -> "
+          f"{served_bytes / 1e3:.1f}KB served "
+          f"({fp32_bytes / max(served_bytes, 1):.2f}x)")
+    print(f"[serve-rl] {reps} batches x {args.batch} obs in {dt:.3f}s "
+          f"({reps * args.batch / dt:.0f} actions/s)")
+    print("           first actions:",
+          np_list(actions)[:8] if not env.spec.continuous
+          else np_list(actions[:2]))
+    return 0
+
+
+def np_list(x):
+    import numpy as np
+    return np.asarray(x).tolist()
 
 
 def main(argv=None) -> int:
@@ -26,7 +91,21 @@ def main(argv=None) -> int:
                     help="none | ptq_fp16 | ptq_int8 (weights)")
     ap.add_argument("--int8-cache", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rl-env", default=None,
+                    help="serve an RL policy instead of an LM "
+                         "(ActorQ deployment; e.g. cartpole, airnav)")
+    ap.add_argument("--actor-backend", default="fp32",
+                    choices=["fp32", "int8"])
+    ap.add_argument("--kernel-backend", default="auto",
+                    choices=["pallas", "interpret", "ref", "auto"])
+    ap.add_argument("--rl-iters", type=int, default=20,
+                    help="training iterations before serving (--rl-env)")
+    ap.add_argument("--steps-per-call", type=int, default=10,
+                    help="scan-fused driver chunk for --rl-env training")
     args = ap.parse_args(argv)
+
+    if args.rl_env:
+        return _serve_policy(args)
 
     import jax
     import jax.numpy as jnp

@@ -112,6 +112,8 @@ def partition_specs(cfg: cfgs.ArchConfig, *, multi_pod: bool = False) -> PyTree:
 class _NameRecorder:
     """Trace-time context that records every activation site name."""
 
+    enabled = False  # ctx contract: recording never applies quantization
+
     def __init__(self, config: QuantConfig):
         self.config = config
         self.names: set[str] = set()

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 
 from repro.core.qconfig import QuantConfig
 from repro.optim.adam import AdamConfig, adam_init, adam_update
-from repro.rl import common
+from repro.rl import actorq, common
 from repro.rl.env import Env, batched_env, rollout
 from repro.rl.networks import Network
 
@@ -23,6 +23,10 @@ class A2CConfig:
     value_coef: float = 0.5
     entropy_coef: float = 0.01
     quant: QuantConfig = QuantConfig.none()
+    # ActorQ: "int8" samples rollout actions from the packed int8 actor
+    # (refreshed once per learner update); the learner stays fp32.
+    actor_backend: str = "fp32"
+    kernel_backend: str = "auto"
 
 
 def init(key, env: Env, net: Network, cfg: A2CConfig):
@@ -34,9 +38,13 @@ def init(key, env: Env, net: Network, cfg: A2CConfig):
 
 def make_iteration(env: Env, net: Network, cfg: A2CConfig):
     """net outputs (n_actions + 1): logits + value head."""
+    actorq.validate_actor_backend(cfg.actor_backend)
     benv = batched_env(env, cfg.n_envs)
     adam_cfg = AdamConfig(lr=cfg.lr)
     n_act = env.spec.n_actions
+    int8_policy = actorq.make_sampling_policy(
+        env.spec, backend=cfg.kernel_backend) \
+        if cfg.actor_backend == "int8" else None
 
     def heads(params, obs, observers, step):
         ctx = common.make_ctx(cfg.quant, observers, step)
@@ -47,11 +55,19 @@ def make_iteration(env: Env, net: Network, cfg: A2CConfig):
     def iteration(state: common.TrainState, env_state, obs, key):
         k_roll, k_learn = jax.random.split(key)
 
-        def policy(params, obs, k):
-            logits, value, _ = heads(params, obs, state.observers,
-                                     state.step)
-            action = jax.random.categorical(k, logits)
-            return action.astype(jnp.int32), logits
+        if int8_policy is not None:
+            # ActorQ hot path: pack once per learner update; the rollout
+            # scan below reuses the int8 cache for every env step.
+            qparams = actorq.pack_actor_params(state.params)
+
+            def policy(params, obs, k):
+                return int8_policy(qparams, obs, k)
+        else:
+            def policy(params, obs, k):
+                logits, value, _ = heads(params, obs, state.observers,
+                                         state.step)
+                action = jax.random.categorical(k, logits)
+                return action.astype(jnp.int32), logits
 
         env_state, last_obs, traj = rollout(
             benv, policy, state.params, env_state, obs, k_roll, cfg.n_steps)

@@ -37,7 +37,8 @@ class PrefixCtx:
 
     @property
     def enabled(self):
-        return getattr(self._ctx, "enabled", True)
+        # ``enabled`` is a required part of the ctx contract — no fallback.
+        return self._ctx.enabled
 
     def weight(self, name, w):
         return self._ctx.weight(self._prefix + name, w)

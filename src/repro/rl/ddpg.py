@@ -64,10 +64,14 @@ def init(key, env: Env, nets: DDPGNets, cfg: DDPGConfig):
     replay = rb.replay_init(cfg.buffer_size, env.spec.obs_shape,
                             action_shape=(env.spec.action_dim,),
                             action_dtype=jnp.float32)
+    # copies, not aliases: the scan-fused driver donates the TrainState and
+    # donation rejects the same buffer appearing twice
+    target_actor = jax.tree_util.tree_map(jnp.array, actor_params)
+    target_critic = jax.tree_util.tree_map(jnp.array, critic_params)
     return common.TrainState(
         params=actor_params, opt=opt, observers={},
         step=jnp.zeros((), jnp.int32),
-        extras=DDPGExtras(critic_params, actor_params, critic_params,
+        extras=DDPGExtras(critic_params, target_actor, target_critic,
                           copt, replay))
 
 

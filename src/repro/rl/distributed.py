@@ -30,15 +30,33 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.qconfig import QuantConfig
 from repro.optim.adam import AdamConfig, adam_init, adam_update
-from repro.rl import a2c, common
+from repro.rl import a2c, actorq, common
 from repro.rl.env import Env, batched_env, rollout
 from repro.rl.networks import Network
+
+
+def _shard_map(fn, mesh, *, in_specs, out_specs):
+    """jax.shard_map across jax versions (top-level API vs experimental)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 def make_distributed_a2c(env: Env, net: Network, cfg: a2c.A2CConfig,
                          mesh: Mesh, axis: str = "data"):
     """Returns (iteration, act_fn, benv_global) — iteration signature matches
-    the single-host a2c.make_iteration."""
+    the single-host a2c.make_iteration.
+
+    ``cfg.actor_backend="int8"`` runs the ActorQ rollout inside the
+    shard_map: every device packs the replicated params into an int8 cache
+    once per learner update and steps its local env slice through the W8A8
+    kernel; gradients (learner side) stay fp32 and are psum-averaged as
+    usual.
+    """
+    actorq.validate_actor_backend(cfg.actor_backend)
     n_dev = mesh.shape[axis]
     assert cfg.n_envs % n_dev == 0, (cfg.n_envs, n_dev)
     local_envs = cfg.n_envs // n_dev
@@ -46,6 +64,9 @@ def make_distributed_a2c(env: Env, net: Network, cfg: a2c.A2CConfig,
     benv_global = batched_env(env, cfg.n_envs)
     adam_cfg = AdamConfig(lr=cfg.lr)
     n_act = env.spec.n_actions
+    int8_policy = actorq.make_sampling_policy(
+        env.spec, backend=cfg.kernel_backend) \
+        if cfg.actor_backend == "int8" else None
 
     def heads(params, obs, observers, step):
         ctx = common.make_ctx(cfg.quant, observers, step)
@@ -56,9 +77,20 @@ def make_distributed_a2c(env: Env, net: Network, cfg: a2c.A2CConfig,
         # per-device: local rollout + local grads
         key = jax.random.fold_in(key[0], jax.lax.axis_index(axis))
 
-        def policy(params, obs, k):
-            logits, _, _ = heads(params, obs, state.observers, state.step)
-            return jax.random.categorical(k, logits).astype(jnp.int32), logits
+        if int8_policy is not None:
+            # quantized actor inside the shard: one int8 pack per update,
+            # shared by all local env steps (params are replicated, so every
+            # device packs the identical cache)
+            qparams = actorq.pack_actor_params(state.params)
+
+            def policy(params, obs, k):
+                return int8_policy(qparams, obs, k)
+        else:
+            def policy(params, obs, k):
+                logits, _, _ = heads(params, obs, state.observers,
+                                     state.step)
+                return jax.random.categorical(k, logits).astype(jnp.int32), \
+                    logits
 
         k_roll, _ = jax.random.split(key)
         env_state, last_obs, traj = rollout(
@@ -108,11 +140,10 @@ def make_distributed_a2c(env: Env, net: Network, cfg: a2c.A2CConfig,
         return new_state, env_state, last_obs, {"loss": loss,
                                                 "reward": reward}
 
-    sharded = jax.shard_map(
-        shard_fn, mesh=mesh,
+    sharded = _shard_map(
+        shard_fn, mesh,
         in_specs=(P(), P(axis), P(axis), P(axis)),
-        out_specs=(P(), P(axis), P(axis), P()),
-        check_vma=False)
+        out_specs=(P(), P(axis), P(axis), P()))
 
     @jax.jit
     def iteration(state, env_state, obs, key):

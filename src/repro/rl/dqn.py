@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.core.qconfig import QuantConfig
 from repro.optim.adam import AdamConfig, adam_init, adam_update
+from repro.rl import actorq
 from repro.rl import buffer as rb
 from repro.rl import common
 from repro.rl.env import Env, batched_env, rollout
@@ -36,6 +37,10 @@ class DQNConfig:
     eps_decay_updates: int = 4000
     warmup: int = 500             # transitions before learning
     quant: QuantConfig = QuantConfig.none()
+    # ActorQ: "int8" computes behaviour-policy Q-values with the packed int8
+    # actor (refreshed once per learner update); TD learning stays fp32.
+    actor_backend: str = "fp32"
+    kernel_backend: str = "auto"
 
 
 class DQNExtras(NamedTuple):
@@ -49,14 +54,19 @@ def init(key, env: Env, net: Network, cfg: DQNConfig):
     params = net.init(k1)
     opt = adam_init(params, AdamConfig(lr=cfg.lr))
     replay = rb.replay_init(cfg.buffer_size, env.spec.obs_shape)
+    # target params start equal but must not alias the online buffers:
+    # the scan-fused driver donates the whole TrainState, and donation
+    # rejects the same buffer appearing twice.
+    target = jax.tree_util.tree_map(jnp.array, params)
     return common.TrainState(
         params=params, opt=opt, observers={},
         step=jnp.zeros((), jnp.int32),
-        extras=DQNExtras(target_params=params, replay=replay,
+        extras=DQNExtras(target_params=target, replay=replay,
                          updates=jnp.zeros((), jnp.int32)))
 
 
 def make_iteration(env: Env, net: Network, cfg: DQNConfig):
+    actorq.validate_actor_backend(cfg.actor_backend)
     benv = batched_env(env, cfg.n_envs)
     adam_cfg = AdamConfig(lr=cfg.lr)
 
@@ -68,10 +78,21 @@ def make_iteration(env: Env, net: Network, cfg: DQNConfig):
     def policy_fn_builder(state):
         eps = common.linear_epsilon(state.extras.updates, cfg.eps_start,
                                     cfg.eps_end, cfg.eps_decay_updates)
+        if cfg.actor_backend == "int8":
+            # ActorQ hot path: int8 cache packed once per learner update,
+            # reused by every env step of the rollout scan.
+            qparams = actorq.pack_actor_params(state.params)
+
+            def behaviour_q(params, obs):
+                return actorq.quantized_apply(qparams, obs,
+                                              backend=cfg.kernel_backend)
+        else:
+            def behaviour_q(params, obs):
+                return q_values(params, obs, state.observers, state.step)[0]
 
         def policy(params, obs, key):
             k_rand, k_explore = jax.random.split(key)
-            q, _ = q_values(params, obs, state.observers, state.step)
+            q = behaviour_q(params, obs)
             greedy = jnp.argmax(q, axis=-1)
             rand = jax.random.randint(k_rand, greedy.shape, 0,
                                       env.spec.n_actions)

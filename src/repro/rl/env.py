@@ -14,6 +14,7 @@ with auto-reset handled by ``batched_rollout`` so rollouts are a single
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
@@ -107,16 +108,8 @@ def rollout(env: Env, policy_fn, params, state, obs, key, n_steps: int,
     return state, obs, traj
 
 
-def evaluate(env: Env, act_fn, params, key, n_episodes: int,
-             max_steps: int = 1000) -> jnp.ndarray:
-    """Mean undiscounted episode return under a deterministic policy.
-
-    Runs ``n_episodes`` in parallel (one vmap), each until its first done
-    (rewards after the first done are masked out).
-    """
-    keys = jax.random.split(key, n_episodes)
-
-    def one_episode(key):
+def _build_evaluation(env: Env, act_fn, max_steps: int):
+    def one_episode(params, key):
         k_reset, k_run = jax.random.split(key)
         state, obs = env.reset(k_reset)
 
@@ -133,4 +126,37 @@ def evaluate(env: Env, act_fn, params, key, n_episodes: int,
             jax.random.split(k_run, max_steps))
         return total
 
-    return jnp.mean(jax.vmap(one_episode)(keys))
+    @jax.jit
+    def run(params, keys):
+        return jnp.mean(jax.vmap(one_episode, in_axes=(None, 0))(params,
+                                                                 keys))
+
+    return run
+
+
+@functools.lru_cache(maxsize=16)
+def _cached_evaluation(env: Env, act_fn, max_steps: int):
+    return _build_evaluation(env, act_fn, max_steps)
+
+
+def evaluate(env: Env, act_fn, params, key, n_episodes: int,
+             max_steps: int = 1000) -> jnp.ndarray:
+    """Mean undiscounted episode return under a deterministic policy.
+
+    Runs ``n_episodes`` in parallel (one vmap), each until its first done
+    (rewards after the first done are masked out).  The whole evaluation
+    (reset + rollout scan + masking + mean) compiles to a single XLA
+    program, cached per ``(env, act_fn, max_steps)`` — callers that reuse
+    one ``act_fn`` object (e.g. the periodic evals in ``loops.train``)
+    compile once and dispatch once per eval thereafter.
+
+    ``params`` is any pytree ``act_fn`` understands: fp32 network params,
+    fake-quant-simulated params, or the packed int8 ``QuantizedParams`` of
+    ``rl.actorq`` (deployment actors run their int8 kernels inside this same
+    compiled program).
+    """
+    try:
+        run = _cached_evaluation(env, act_fn, max_steps)
+    except TypeError:        # unhashable env/act_fn: build uncached
+        run = _build_evaluation(env, act_fn, max_steps)
+    return run(params, jax.random.split(key, n_episodes))

@@ -7,10 +7,28 @@
 
 Both return a ``QuarlResult`` with fp32 and quantized rewards plus the
 paper's relative error E_%.
+
+Hot-path knobs (ActorQ):
+
+* ``steps_per_call`` — the scan-fused driver. ``make_scan_iteration`` wraps
+  any algorithm's jitted iteration in a ``jax.lax.scan`` over a chunk of
+  ``steps_per_call`` updates inside ONE jit with donated
+  ``(state, env_state, obs)`` buffers, so the Python driver pays one
+  dispatch per chunk instead of one per update.  Numerically equivalent to
+  the per-step driver (same seed -> same params, bitwise on CPU): the PRNG
+  split chain moves into the scan carry unchanged.
+* ``actor_backend`` — ``"fp32"`` (default) or ``"int8"``.  With ``"int8"``
+  the *actor* runs true integer inference (``rl.actorq``): params are packed
+  into an int8 cache once per learner update and every dense layer goes
+  through the W8A8 kernel (``kernels.ops.int8_matmul``; backend matrix
+  pallas/interpret/ref/auto).  Rollout data collection uses the int8 actor
+  for A2C/DQN; evaluation uses it for every algorithm.  The learner's
+  gradient path stays fp32 — exactly the paper's ActorQ split.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -19,8 +37,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import metrics as metrics_lib
-from repro.core.qconfig import QuantConfig
-from repro.rl import a2c, common, ddpg, dqn, ppo
+from repro.core.qconfig import QuantConfig, QuantMode
+from repro.rl import a2c, actorq, common, ddpg, dqn, ppo
 from repro.rl.env import Env, evaluate
 from repro.rl.envs import make as make_env
 from repro.rl.networks import Network, make_network
@@ -59,6 +77,40 @@ class TrainResult:
     net: Any
 
 
+def make_scan_iteration(iteration: Callable, steps_per_call: int):
+    """Fuse ``steps_per_call`` algorithm iterations into one jitted scan.
+
+    ``iteration(state, env_state, obs, key) -> (state, env_state, obs,
+    metrics)`` is any algo's update (the already-jitted function from
+    ``make_iteration`` works; jit-of-jit inlines).  The returned ``chunk``
+    has signature ``chunk(state, env_state, obs, key) -> (state, env_state,
+    obs, key, metrics)`` where ``key`` is the advanced run key and
+    ``metrics`` is the per-iteration metrics dict stacked to shape
+    ``(steps_per_call,)`` — accumulated on device, transferred once per
+    chunk.
+
+    The per-iteration PRNG chain (``key, k_it = split(key)``) runs inside
+    the scan carry, byte-for-byte the chain the per-step driver produces on
+    the host — so the two drivers are bitwise equivalent on CPU.
+    ``(state, env_state, obs)`` buffers are donated: the carry updates in
+    place instead of round-tripping fresh allocations per update.
+    """
+    @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+    def chunk(state, env_state, obs, key):
+        def body(carry, _):
+            state, env_state, obs, key = carry
+            key, k_it = jax.random.split(key)
+            state, env_state, obs, metrics = iteration(state, env_state,
+                                                       obs, k_it)
+            return (state, env_state, obs, key), metrics
+
+        (state, env_state, obs, key), metrics = jax.lax.scan(
+            body, (state, env_state, obs, key), None, length=steps_per_call)
+        return state, env_state, obs, key, metrics
+
+    return chunk
+
+
 def _build(algo: str, env: Env, quant: QuantConfig, net_kwargs: Dict,
            overrides: Dict):
     if algo == "ddpg":
@@ -83,10 +135,27 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
           quant: QuantConfig = QuantConfig.none(), seed: int = 0,
           net_kwargs: Optional[Dict] = None,
           algo_overrides: Optional[Dict] = None,
-          record_every: int = 10, eval_episodes: int = 8) -> TrainResult:
+          record_every: int = 10, eval_episodes: int = 8,
+          steps_per_call: int = 1,
+          actor_backend: str = "fp32") -> TrainResult:
+    """Train ``algo`` on ``env_name``.
+
+    ``steps_per_call > 1`` enables the scan-fused driver (see module
+    docstring): the Python loop dispatches ``iterations / steps_per_call``
+    fused chunks instead of one jit call per update, with chunks clipped to
+    ``record_every`` boundaries so recorded rewards/metrics are identical.
+
+    ``actor_backend="int8"`` runs data collection (A2C/DQN rollouts) and the
+    periodic evaluations through the true-int8 actor (``rl.actorq``); the
+    learner stays fp32.  PPO/DDPG currently quantize the evaluation actor
+    only.
+    """
+    actorq.validate_actor_backend(actor_backend)
     env = make_env(env_name)
-    net, cfg = _build(algo, env, quant, net_kwargs or {},
-                      algo_overrides or {})
+    overrides = dict(algo_overrides or {})
+    if algo in ("a2c", "dqn"):
+        overrides.setdefault("actor_backend", actor_backend)
+    net, cfg = _build(algo, env, quant, net_kwargs or {}, overrides)
     mod = {"dqn": dqn, "a2c": a2c, "ppo": ppo, "ddpg": ddpg}[algo]
     key = jax.random.PRNGKey(seed)
     k_init, k_env, k_run = jax.random.split(key, 3)
@@ -97,37 +166,87 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
     iteration, act_fn, benv = mod.make_iteration(env, net, cfg)
     env_state, obs = benv.reset(k_env)
 
+    kernel_backend = getattr(cfg, "kernel_backend", "auto")
+    int8_act = actorq.make_act_fn(env.spec, backend=kernel_backend) \
+        if actor_backend == "int8" else None
+    # stable act-fn identity across the run -> evaluate() compiles once;
+    # observers/step ride along in the params slot as traced inputs
+    det_act = _det_act(act_fn)
+    chunks: Dict[int, Callable] = {}   # compiled fused drivers by length
+
     rewards, variances = [], []
     t0 = time.time()
-    for i in range(iterations):
-        k_run, k_it = jax.random.split(k_run)
-        state, env_state, obs, metrics = iteration(state, env_state, obs,
-                                                   k_it)
-        if (i + 1) % record_every == 0 or i == iterations - 1:
+    i = 0
+    while i < iterations:
+        # clip chunks to record boundaries so the recorded metrics/rewards
+        # (and their PRNG draws) match the per-step driver exactly
+        next_stop = min((i // record_every + 1) * record_every, iterations)
+        n = min(max(steps_per_call, 1), next_stop - i)
+        if n not in chunks:
+            chunks[n] = make_scan_iteration(iteration, n)
+        state, env_state, obs, k_run, metrics = chunks[n](
+            state, env_state, obs, k_run)
+        i += n
+        if i % record_every == 0 or i == iterations:
+            last = jax.tree_util.tree_map(lambda m: m[-1], metrics)
             k_run, k_eval = jax.random.split(k_run)
-            det_act = lambda p, o: act_fn(p, o, state.observers, state.step)
-            r = float(evaluate(env, det_act, state.params, k_eval,
-                               eval_episodes,
-                               max_steps=env.spec.max_steps))
+            if int8_act is not None:
+                qparams = actorq.pack_actor_params(state.params)
+                r = float(evaluate(env, int8_act, qparams, k_eval,
+                                   eval_episodes,
+                                   max_steps=env.spec.max_steps))
+            else:
+                r = float(evaluate(
+                    env, det_act,
+                    (state.params, state.observers, state.step), k_eval,
+                    eval_episodes, max_steps=env.spec.max_steps))
             rewards.append(r)
-            variances.append(float(metrics.get(
-                "action_dist_variance", metrics.get("mean_q_var", 0.0))))
+            variances.append(float(last.get(
+                "action_dist_variance", last.get("mean_q_var", 0.0))))
     wall = time.time() - t0
     return TrainResult(state=state, act_fn=act_fn, env=env, rewards=rewards,
                        action_variances=variances, wall_time_s=wall,
                        algo_cfg=cfg, net=net)
 
 
+@functools.lru_cache(maxsize=32)
+def _det_act(act_fn):
+    """Deterministic wrapper with a cached identity per underlying act_fn.
+
+    Threads (params, observers, step) through ``evaluate``'s params slot so
+    repeated evals of one trained policy (e.g. the ``quarl_ptq`` bits loop)
+    reuse a single compiled eval program.
+    """
+    return lambda p, o: act_fn(p[0], o, p[1], p[2])
+
+
 def eval_policy(result: TrainResult, quant: QuantConfig, key,
-                episodes: int = 16) -> float:
-    """Eval(Q(M)) — run the (possibly quantized) policy deterministically."""
+                episodes: int = 16, *, actor_backend: str = "fp32",
+                kernel_backend: str = "auto") -> float:
+    """Eval(Q(M)) — run the (possibly quantized) policy deterministically.
+
+    Deployment quantizes only the actor: ``result.state.params`` holds the
+    actor params for every algorithm (the DDPG critic lives in
+    ``state.extras`` and never runs at deployment, per the paper).
+
+    ``actor_backend="int8"`` deploys the packed int8 actor through the W8A8
+    kernel (``kernels.ops.int8_matmul``, ``kernel_backend`` selecting
+    pallas/interpret/ref/auto) for int PTQ configs of <= 8 bits; other
+    configs (fp16, wide ints, QAT range replay) keep the fp32 simulation.
+    """
+    actorq.validate_actor_backend(actor_backend)
+    if (actor_backend == "int8" and quant.mode == QuantMode.PTQ_INT
+            and quant.bits <= 8):
+        qparams = actorq.pack_actor_params(result.state.params,
+                                           bits=quant.bits)
+        act = actorq.make_act_fn(result.env.spec, backend=kernel_backend)
+        return float(evaluate(result.env, act, qparams, key, episodes,
+                              max_steps=result.env.spec.max_steps))
     params = common.eval_params(result.state.params, quant)
-    if quant.is_ptq and hasattr(result.state.extras, "critic_params"):
-        pass  # DDPG: only the actor runs at deployment
-    det_act = lambda p, o: result.act_fn(p, o, result.state.observers,
-                                         result.state.step)
-    return float(evaluate(result.env, det_act, params, key, episodes,
-                          max_steps=result.env.spec.max_steps))
+    return float(evaluate(
+        result.env, _det_act(result.act_fn),
+        (params, result.state.observers, result.state.step), key, episodes,
+        max_steps=result.env.spec.max_steps))
 
 
 @dataclasses.dataclass
@@ -144,16 +263,24 @@ class QuarlResult:
 def quarl_ptq(algo: str, env_name: str, bits_list=(8, 16), *,
               iterations: int = 200, seed: int = 0,
               net_kwargs=None, algo_overrides=None,
-              eval_episodes: int = 16) -> List[QuarlResult]:
-    """Algorithm 1 over fp16 + intN PTQ."""
+              eval_episodes: int = 16, steps_per_call: int = 1,
+              actor_backend: str = "fp32") -> List[QuarlResult]:
+    """Algorithm 1 over fp16 + intN PTQ.
+
+    ``actor_backend="int8"`` deploys each intN evaluation through the packed
+    int8 actor instead of the fp32 fake-quant simulation (the fp32 baseline
+    eval always runs fp32).
+    """
     result = train(algo, env_name, iterations=iterations, seed=seed,
-                   net_kwargs=net_kwargs, algo_overrides=algo_overrides)
+                   net_kwargs=net_kwargs, algo_overrides=algo_overrides,
+                   steps_per_call=steps_per_call)
     key = jax.random.PRNGKey(seed + 1000)
     fp32 = eval_policy(result, QuantConfig.none(), key, eval_episodes)
     out = []
     for bits in bits_list:
         q = QuantConfig.ptq_fp16() if bits == 16 else QuantConfig.ptq_int(bits)
-        r = eval_policy(result, q, key, eval_episodes)
+        r = eval_policy(result, q, key, eval_episodes,
+                        actor_backend=actor_backend)
         out.append(QuarlResult(
             algo=algo, env=env_name, label=q.label(), fp32_reward=fp32,
             quant_reward=r,
@@ -166,15 +293,23 @@ def quarl_ptq(algo: str, env_name: str, bits_list=(8, 16), *,
 def quarl_qat(algo: str, env_name: str, bits: int, *, iterations: int = 200,
               quant_delay_frac: float = 0.5, seed: int = 0,
               net_kwargs=None, algo_overrides=None,
-              eval_episodes: int = 16) -> QuarlResult:
-    """Algorithm 2: train with fake quantization after a monitoring delay."""
+              eval_episodes: int = 16, steps_per_call: int = 1,
+              actor_backend: str = "fp32") -> QuarlResult:
+    """Algorithm 2: train with fake quantization after a monitoring delay.
+
+    ``actor_backend="int8"`` collects the QAT run's rollouts with the true
+    int8 actor (A2C/DQN); the QAT evaluation itself replays the monitored
+    fake-quant ranges, which need the fp32 simulation path.
+    """
     delay = int(iterations * quant_delay_frac)
     quant = QuantConfig.qat(bits, quant_delay=delay)
     fp = train(algo, env_name, iterations=iterations, seed=seed,
-               net_kwargs=net_kwargs, algo_overrides=algo_overrides)
+               net_kwargs=net_kwargs, algo_overrides=algo_overrides,
+               steps_per_call=steps_per_call)
     qt = train(algo, env_name, iterations=iterations, quant=quant,
                seed=seed, net_kwargs=net_kwargs,
-               algo_overrides=algo_overrides)
+               algo_overrides=algo_overrides,
+               steps_per_call=steps_per_call, actor_backend=actor_backend)
     key = jax.random.PRNGKey(seed + 2000)
     fp32 = eval_policy(fp, QuantConfig.none(), key, eval_episodes)
     q_r = eval_policy(qt, quant, key, eval_episodes)

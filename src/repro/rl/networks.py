@@ -41,12 +41,14 @@ def conv2d(ctx, name, params, x, stride=1, act=jax.nn.relu):
     """x: (B, H, W, C). Per-axis weight fake-quant (paper: conv per-channel)."""
     w = params["w"]
     if ctx.config.is_qat:
-        # per-output-channel fake quantization with STE
+        # per-output-channel fake quantization with STE.  ``ctx.enabled`` is
+        # part of the context contract (every ctx implements it, recorder
+        # included), so quant_delay gates the conv path like the dense path.
         from repro.core import fake_quant as fq
         wmin = jnp.minimum(jnp.min(w, axis=(0, 1, 2)), 0.0)
         wmax = jnp.maximum(jnp.max(w, axis=(0, 1, 2)), 0.0)
         w_q = fq.fake_quant(w, wmin, wmax, ctx.config.bits)
-        w = jnp.where(ctx.enabled, w_q, w) if hasattr(ctx, "enabled") else w_q
+        w = jnp.where(ctx.enabled, w_q, w)
     y = jax.lax.conv_general_dilated(
         x, w.astype(x.dtype), window_strides=(stride, stride),
         padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))

@@ -1,0 +1,40 @@
+"""Optional-dependency shim for ``hypothesis``.
+
+Tier-1 runs in minimal containers where hypothesis may not be installed.
+When it is available this module re-exports the real API unchanged; when it
+is not, ``@given`` replaces each property test with a skip stub (zero-arg so
+pytest requests no fixtures) and ``st``/``hnp`` become permissive dummies so
+strategy expressions in decorator arguments still evaluate at import time.
+Either way, ``pytest -x -q`` collects and runs every module.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+    from hypothesis.extra import numpy as hnp
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for strategy modules: any attribute/call returns self."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _AnyStrategy()
+    hnp = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            def skipped():
+                pytest.skip("hypothesis not installed")
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+        return deco

@@ -3,8 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from hypothesis.extra import numpy as hnp
+from hypcompat import given, settings, st, hnp  # guarded hypothesis import
 
 from repro.core import affine, fake_quant, ptq, mixed_precision as mp
 from repro.core.qconfig import QuantConfig, QuantMode

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st  # guarded hypothesis import
 
 from repro.optim import (AdamConfig, adam_init, adam_update, BlockQuantized,
                          block_quantize, block_dequantize,

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st  # guarded hypothesis import
 
 from repro.core.qconfig import QuantConfig
 from repro.rl import buffer as rb
