@@ -1,0 +1,119 @@
+"""Actor–learner topology benchmark: the paper's distributed ActorQ claim.
+
+Measures end-to-end training throughput of ``rl.actor_learner`` (DQN on
+cartpole) across the topology matrix
+
+    num_actors x {1, 2, 4}  ×  actor_backend x {fp32, int8}
+                            ×  sync_every   x {1, 4}
+
+Two numbers per cell, both measured after compile on the jitted iteration:
+
+* ``env_steps_per_sec``    — environment transitions collected per second
+  (``num_actors * n_envs * rollout_steps`` per iteration): the actor-side
+  throughput the paper scales by adding quantized actors,
+* ``learner_samples_per_sec`` — replay transitions consumed by the fp32
+  learner per second (``updates_per_iter * batch_size`` per iteration).
+
+The acceptance row (ISSUE 2): a >= 2-actor int8 configuration must beat the
+1-actor fp32 baseline on env-steps/sec.  On this CPU host the int8 path
+runs the ``ref`` oracle (the Pallas kernel needs a TPU), so the speedup
+comes from the actor fan-out; on TPU the W8A8 kernel compounds it.
+
+Emits ``BENCH_actor_learner.json`` via ``benchmarks/common.py``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+
+from benchmarks import common as C
+
+ACTORS = (1, 2, 4)
+BACKENDS = ("fp32", "int8")
+SYNCS = (1, 4)
+ENV = "cartpole"
+
+
+def _time_topology(num_actors: int, backend: str, sync_every: int,
+                   iters: int) -> Dict:
+    from repro.rl import actor_learner, dqn
+    from repro.rl.envs import make as make_env
+    from repro.rl.networks import make_network
+
+    env = make_env(ENV)
+    cfg = dqn.DQNConfig(n_envs=16, rollout_steps=8, updates_per_iter=4,
+                        buffer_size=4096, batch_size=64, warmup=64,
+                        actor_backend=backend)
+    net = make_network(env.spec.obs_shape, env.spec.n_actions)
+    al = actor_learner.ActorLearnerConfig(num_actors=num_actors,
+                                          sync_every=sync_every)
+    state = actor_learner.init(jax.random.PRNGKey(0), env, net, "dqn",
+                               cfg, al)
+    iteration, _, benv = actor_learner.make_actor_learner(
+        "dqn", env, net, cfg, al)
+    env_state, obs = benv.reset(jax.random.PRNGKey(1))
+    key = jax.random.PRNGKey(2)
+
+    key, k = jax.random.split(key)
+    state, env_state, obs, m = iteration(state, env_state, obs, k)
+    jax.block_until_ready(state.learner.params)          # compile + warm
+
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        key, k = jax.random.split(key)
+        state, env_state, obs, m = iteration(state, env_state, obs, k)
+    jax.block_until_ready(state.learner.params)
+    dt = time.perf_counter() - t0
+
+    env_steps = iters * num_actors * cfg.n_envs * cfg.rollout_steps
+    learner_samples = iters * cfg.updates_per_iter * cfg.batch_size
+    return {
+        "section": "actor_learner",
+        "num_actors": num_actors,
+        "actor_backend": backend,
+        "sync_every": sync_every,
+        "iters": iters,
+        "wall_s": dt,
+        "us_per_iter": dt / iters * 1e6,
+        "env_steps_per_sec": env_steps / dt,
+        "learner_samples_per_sec": learner_samples / dt,
+        "divergence_last": [float(d) for d in state.divergence],
+    }
+
+
+def run(iters: int = 30) -> List[Dict]:
+    iters = C.scaled(iters)
+    rows = []
+    base = None
+    for num_actors in ACTORS:
+        for backend in BACKENDS:
+            for sync_every in SYNCS:
+                row = _time_topology(num_actors, backend, sync_every, iters)
+                if (num_actors, backend, sync_every) == (1, "fp32", 1):
+                    base = row
+                row["speedup_env_steps_vs_1actor_fp32"] = (
+                    row["env_steps_per_sec"] / base["env_steps_per_sec"]
+                    if base else 1.0)
+                rows.append(row)
+                C.emit(
+                    f"actor_learner/{backend}/a{num_actors}/s{sync_every}",
+                    row["us_per_iter"],
+                    f"env_steps_per_sec={row['env_steps_per_sec']:.0f}"
+                    f";learner_sps={row['learner_samples_per_sec']:.0f}"
+                    f";speedup="
+                    f"{row['speedup_env_steps_vs_1actor_fp32']:.2f}x")
+
+    path = C.save_rows("BENCH_actor_learner", rows)
+    print(f"wrote {path}")
+    accept = [r for r in rows
+              if r["num_actors"] >= 2 and r["actor_backend"] == "int8"
+              and r["speedup_env_steps_vs_1actor_fp32"] > 1.0]
+    print(f"acceptance: {len(accept)} int8 multi-actor configs beat the "
+          f"1-actor fp32 baseline on env-steps/sec")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -11,7 +11,6 @@ the absolute ratios differ, but the trend with model size is the check.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, List
 
 import jax

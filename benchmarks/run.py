@@ -1,32 +1,46 @@
 """Benchmark driver — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows. REPRO_BENCH_SCALE (default 1.0)
-multiplies the training budgets; REPRO_BENCH_FAST=1 runs a reduced matrix
-for CI-style runs.
+multiplies the training budgets; REPRO_BENCH_FAST=1 (or ``--fast``) runs a
+reduced matrix for CI-style runs; ``--smoke`` additionally shrinks the
+training budgets (scale 0.25 unless REPRO_BENCH_SCALE is set) — the CI
+benchmark job runs ``python benchmarks/run.py --smoke`` and uploads the
+``artifacts/bench/BENCH_*.json`` files as workflow artifacts.
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import time
 import traceback
 
-sys.path.insert(0, os.path.join(os.path.dirname(
-    os.path.dirname(os.path.abspath(__file__))), "src"))
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)                       # the benchmarks package
+sys.path.insert(0, os.path.join(_ROOT, "src"))  # the repro package
 
-FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
 
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced matrix (same as REPRO_BENCH_FAST=1)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: reduced matrix on tiny budgets")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        os.environ.setdefault("REPRO_BENCH_SCALE", "0.25")
+    fast = (args.fast or args.smoke
+            or os.environ.get("REPRO_BENCH_FAST", "0") == "1")
 
-def main() -> None:
     t0 = time.time()
     print("benchmark,us_per_call,derived")
     jobs = []
 
-    from benchmarks import (actor_throughput, deployment, exploration,
-                            mixed_precision, ptq_rewards, qat_bitwidth,
-                            roofline, weight_distribution)
+    from benchmarks import (actor_learner, actor_throughput, deployment,
+                            exploration, mixed_precision, ptq_rewards,
+                            qat_bitwidth, roofline, weight_distribution)
 
-    if FAST:
+    if fast:
         jobs = [
             ("table2_ptq", lambda: ptq_rewards.run(
                 matrix=[("ppo", "cartpole", 120), ("ppo", "airnav", 100),
@@ -46,6 +60,7 @@ def main() -> None:
             ("table5_deployment", lambda: deployment.run(iterations=100)),
             ("actorq_throughput",
              lambda: actor_throughput.run(train_iterations=30)),
+            ("actor_learner_topology", lambda: actor_learner.run(iters=10)),
         ]
     else:
         jobs = [
@@ -57,6 +72,7 @@ def main() -> None:
             ("fig5_mp_convergence", mixed_precision.convergence_check),
             ("table5_deployment", deployment.run),
             ("actorq_throughput", actor_throughput.run),
+            ("actor_learner_topology", actor_learner.run),
         ]
     jobs.append(("roofline", roofline.main))
 

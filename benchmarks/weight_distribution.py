@@ -17,7 +17,6 @@ from benchmarks import common as C
 
 
 def run(cases=None) -> List[Dict]:
-    from repro.core import metrics as M
     from repro.rl import loops
 
     rows = []
@@ -39,7 +38,6 @@ def run(cases=None) -> List[Dict]:
 
     # mechanism check: per-tensor analytic quantization error vs range on the
     # actual trained parameter tensors
-    import numpy as np
     corr_rows = sorted(rows, key=lambda r: r["weight_range"])
     C.emit("wdist/range_ranking", 0.0,
            ">".join(f"{r['algo']}/{r['env']}" for r in corr_rows[::-1]))

@@ -15,7 +15,6 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
 from repro.core import ptq  # noqa: E402
 from repro.core.qconfig import QuantConfig  # noqa: E402
@@ -28,7 +27,8 @@ def success_rate(res, quant, key, episodes=32):
     from repro.rl.env import evaluate
     params = common.eval_params(res.state.params, quant)
     # AirNav: success <=> the +1000 bonus dominates -> episode return > 0
-    det = lambda p, o: res.act_fn(p, o, res.state.observers, res.state.step)
+    def det(p, o):
+        return res.act_fn(p, o, res.state.observers, res.state.step)
     rewards = []
     for i in range(4):
         k = jax.random.fold_in(key, i)

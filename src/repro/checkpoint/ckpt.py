@@ -62,9 +62,9 @@ def load_checkpoint(path: str, template: PyTree, step: Optional[int] = None
     assert treedef.num_leaves == len(leaves), \
         f"checkpoint has {len(leaves)} leaves, template {treedef.num_leaves}"
     t_leaves = jax.tree_util.tree_leaves(template)
-    out = [jnp.asarray(l).astype(t.dtype) if hasattr(t, "dtype")
-           else np.asarray(l)
-           for l, t in zip(leaves, t_leaves)]
+    out = [jnp.asarray(leaf).astype(t.dtype) if hasattr(t, "dtype")
+           else np.asarray(leaf)
+           for leaf, t in zip(leaves, t_leaves)]
     return jax.tree_util.tree_unflatten(treedef, out)
 
 

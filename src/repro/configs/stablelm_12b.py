@@ -4,7 +4,6 @@
 40L, d_model 5120, 32 heads (GQA kv=8), d_ff 13824, vocab 100352.
 Pure full attention -> long_500k only as the SWA *variant* (DESIGN.md).
 """
-import dataclasses
 from repro.configs import base
 from repro.configs.base import ArchConfig, ATTN
 

@@ -20,13 +20,13 @@ program covers both phases.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import affine
-from repro.core.qconfig import QuantConfig, QuantMode
+from repro.core.qconfig import QuantConfig
 
 
 class ObserverState(NamedTuple):

@@ -7,7 +7,7 @@ and skip the update, double every ``growth_interval`` clean steps.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

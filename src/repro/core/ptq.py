@@ -17,7 +17,6 @@ A ``predicate(path, leaf)`` hook lets callers exclude e.g. MoE routers.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax

@@ -8,7 +8,7 @@ multi-host pod each host feeds its slice via
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Iterator, Optional
+from typing import Dict, Iterator, Optional
 
 import jax
 import numpy as np

@@ -8,7 +8,7 @@ few hundred steps, unlike uniform-random tokens).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
 import jax.numpy as jnp

@@ -83,9 +83,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(kj == n_kv - 1)
     def _finalize():
-        l = l_ref[...]
-        l = jnp.where(l == 0.0, 1.0, l)             # fully-masked rows -> 0
-        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lse = l_ref[...]
+        lse = jnp.where(lse == 0.0, 1.0, lse)       # fully-masked rows -> 0
+        o_ref[...] = (acc_ref[...] / lse).astype(o_ref.dtype)
 
 
 def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

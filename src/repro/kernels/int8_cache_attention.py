@@ -63,8 +63,8 @@ def _kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, pos_ref, o_ref,
 
     @pl.when(tj == n_t - 1)
     def _done():
-        l = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
-        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lse = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
+        o_ref[...] = (acc_ref[...] / lse).astype(o_ref.dtype)
 
 
 def int8_cache_decode_attention(q: jnp.ndarray, k_codes: jnp.ndarray,

@@ -16,7 +16,6 @@ Conventions:
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict
 
 from repro.configs import base as cfgs

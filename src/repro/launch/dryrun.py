@@ -10,12 +10,11 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
 # ---------------------------------------------------------------------------
 import argparse        # noqa: E402
 import json            # noqa: E402
-import re              # noqa: E402
 import sys             # noqa: E402
 import time            # noqa: E402
 import traceback       # noqa: E402
 
-import jax             # noqa: E402
+import jax             # noqa: E402,F401  (init under the fake-device flags)
 
 from repro.configs import base as cfgs          # noqa: E402
 from repro.launch import mesh as mesh_lib       # noqa: E402

@@ -33,10 +33,24 @@ def _serve_policy(args) -> int:
     from repro.rl.envs import make as make_env
 
     env = make_env(args.rl_env)
-    res = loops.train("ppo" if not env.spec.continuous else "ddpg",
-                      args.rl_env, iterations=max(args.rl_iters, 1),
+    topo_kw = {}
+    if args.topology == "actor-learner":
+        # replay algorithms only (the paper's DQN/D4PG analogues)
+        algo = "dqn" if not env.spec.continuous else "ddpg"
+        topo_kw = dict(topology="actor-learner",
+                       num_actors=args.num_actors,
+                       sync_every=args.sync_every)
+    else:
+        algo = "ppo" if not env.spec.continuous else "ddpg"
+    res = loops.train(algo, args.rl_env, iterations=max(args.rl_iters, 1),
                       record_every=max(args.rl_iters, 1), eval_episodes=2,
-                      seed=args.seed, steps_per_call=args.steps_per_call)
+                      seed=args.seed, steps_per_call=args.steps_per_call,
+                      actor_backend=args.actor_backend, **topo_kw)
+    if args.topology == "actor-learner" and res.divergences:
+        div = ", ".join(f"{d:.4f}" for d in res.divergences[-1])
+        print(f"[serve-rl] actor-learner ({algo}): {args.num_actors} "
+              f"actors, sync_every={args.sync_every}, last per-actor "
+              f"divergence [{div}]")
     params = res.state.params
     fp32_bytes = ptq.tree_nbytes(params)
 
@@ -62,8 +76,8 @@ def _serve_policy(args) -> int:
     for _ in range(reps):
         actions = jax.block_until_ready(step(served, obs))
     dt = time.time() - t0
-    print(f"[serve-rl] env={args.rl_env} actor={args.actor_backend} "
-          f"kernel={args.kernel_backend} "
+    print(f"[serve-rl] env={args.rl_env} algo={algo} "
+          f"actor={args.actor_backend} kernel={args.kernel_backend} "
           f"params={fp32_bytes / 1e3:.1f}KB fp32 -> "
           f"{served_bytes / 1e3:.1f}KB served "
           f"({fp32_bytes / max(served_bytes, 1):.2f}x)")
@@ -102,6 +116,17 @@ def main(argv=None) -> int:
                     help="training iterations before serving (--rl-env)")
     ap.add_argument("--steps-per-call", type=int, default=10,
                     help="scan-fused driver chunk for --rl-env training")
+    ap.add_argument("--topology", default="fused",
+                    choices=["fused", "actor-learner"],
+                    help="--rl-env training topology. actor-learner = the "
+                         "paper's distributed ActorQ paradigm; NB it needs "
+                         "a replay algorithm, so discrete envs train DQN "
+                         "there vs PPO under fused (the printed summary "
+                         "names the algo)")
+    ap.add_argument("--num-actors", type=int, default=2,
+                    help="actor replicas for --topology actor-learner")
+    ap.add_argument("--sync-every", type=int, default=1,
+                    help="learner->actor param push cadence (iterations)")
     args = ap.parse_args(argv)
 
     if args.rl_env:

@@ -19,7 +19,6 @@ Examples:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import sys
 import time
 
@@ -66,11 +65,9 @@ def run_rl(args) -> int:
 def run_lm(args) -> int:
     import jax
     import jax.numpy as jnp
-    import numpy as np
 
     from repro import checkpoint as ckpt_lib
     from repro.configs import base as cfgs
-    from repro.core import mixed_precision as mp_lib
     from repro.data import SyntheticLMDataset
     from repro.launch import steps as steps_lib
     from repro.models import transformer

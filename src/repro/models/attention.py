@@ -17,16 +17,13 @@ Implementation notes
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import affine
 from repro.models import common
-from repro.models.common import P, dense_spec
+from repro.models.common import dense_spec
 
 NEG_INF = -1e30
 
@@ -137,7 +134,7 @@ def chunked_attention(q, k, v, *, causal: bool = True,
     def q_row(qi, q_blk):
         # q_blk: (b, q_chunk, nkv, g, dh)
         def kv_step(carry, inp):
-            m, l, acc = carry
+            m, lse, acc = carry
             kj, k_blk, v_blk = inp
             s = _logits(q_blk, k_blk, scale_, softcap)  # (b,kv,g,qc,kc)
             mask = _mask_dyn(q_chunk, kv_chunk,
@@ -148,19 +145,19 @@ def chunked_attention(q, k, v, *, causal: bool = True,
             m_new = jnp.maximum(m, m_cur)
             alpha = jnp.exp(m - m_new)
             p = jnp.exp(s - m_new)
-            l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            lse_new = alpha * lse + jnp.sum(p, axis=-1, keepdims=True)
             acc_new = alpha * acc + jnp.einsum(
                 "bkgqs,bskd->bkgqd", p, v_blk.astype(jnp.float32))
-            return (m_new, l_new, acc_new), None
+            return (m_new, lse_new, acc_new), None
 
         m0 = jnp.full((b, nkv, g, q_chunk, 1), NEG_INF, jnp.float32)
         l0 = jnp.zeros((b, nkv, g, q_chunk, 1), jnp.float32)
         a0 = jnp.zeros((b, nkv, g, q_chunk, dh), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(
+        (m, lse, acc), _ = jax.lax.scan(
             kv_step, (m0, l0, a0),
             (jnp.arange(n_kv), k_blocks, v_blocks))
-        l = jnp.where(l == 0.0, 1.0, l)
-        out = (acc / l)                               # (b,kv,g,qc,dh)
+        lse = jnp.where(lse == 0.0, 1.0, lse)
+        out = (acc / lse)                             # (b,kv,g,qc,dh)
         return jnp.transpose(out, (0, 3, 1, 2, 4)).astype(q.dtype)
 
     q_rows = jnp.moveaxis(q.reshape(b, n_q, q_chunk, nkv, g, dh), 1, 0)

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs import base as cfgs
 from repro.models import attention, common, moe as moe_lib, recurrent
-from repro.models.common import P, dense_spec
+from repro.models.common import dense_spec
 
 
 # ---------------------------------------------------------------------------

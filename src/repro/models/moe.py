@@ -19,8 +19,7 @@ grouping trade-off.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -102,7 +101,6 @@ def moe_ffn(ctx, params, x: jnp.ndarray, *, n_experts: int, top_k: int,
     # without these the (e, g, c, d) buffers replicate across 'model'.
     from jax.sharding import PartitionSpec as PS
     data = "data"
-    tok_spec = PS(None, data, None, None)
     hid_spec = PS(None, data, None, "model")
 
     xe = jnp.einsum("gsec,gsd->egcd", dispatch, xg)            # (e,g,c,d)

@@ -19,7 +19,6 @@ State layout (decode "cache" for these layers):
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -187,7 +186,8 @@ def mlstm_block(ctx, params, x: jnp.ndarray, *, n_heads: int, head_dim: int,
                 chunk: int = 128, name: str = "mlstm"
                 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
     b, s, d = x.shape
-    to_heads = lambda t: t.reshape(b, s, n_heads, head_dim).astype(jnp.float32)
+    def to_heads(t):
+        return t.reshape(b, s, n_heads, head_dim).astype(jnp.float32)
     q = to_heads(common.dense(ctx, f"{name}/wq", params["wq"], x)) \
         * head_dim ** -0.5
     k = to_heads(common.dense(ctx, f"{name}/wk", params["wk"], x)) \

@@ -28,7 +28,6 @@ whisper additionally runs its transformer *encoder* stack over them.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -15,7 +15,6 @@ transient fp32, persistent int8.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, NamedTuple, Optional, Tuple
 
 import jax

@@ -1,0 +1,307 @@
+"""ActorQ actor–learner topology: int8 actor fan-out + fp32 replay learner.
+
+The paper's headline system is a distributed training paradigm: a pool of
+8-bit quantized *actors* collects experience into a replay buffer while a
+full-precision *learner* samples batches and periodically broadcasts
+refreshed parameters to the actors.  This module reproduces that topology on
+top of the repo's replay algorithms (DQN, DDPG — the paper's DQN/D4PG
+analogues):
+
+* **Actor fan-out** — ``num_actors`` actor replicas, each running
+  ``cfg.n_envs`` environments with the behaviour policy of the underlying
+  algorithm (``dqn.make_behaviour_policy`` / ``ddpg.make_behaviour_policy``).
+  With ``actor_backend="int8"`` every replica packs the synced params into
+  an int8 cache once per iteration and steps through the W8A8 kernel — the
+  ActorQ hot path.  On a device mesh the actor axis is ``shard_map``-ped
+  (generalizing ``rl.distributed``); on a single host the replicas are one
+  vectorized env batch (same math, no collectives).
+* **Sharded replay** — each actor owns one shard of the replay buffer
+  (``buffer.replay_init_sharded``; per-shard capacity =
+  ``buffer_size / num_actors``) and writes only its own shard.
+* **fp32 learner** — samples ``batch_size / num_actors`` transitions per
+  shard, concatenates, and applies the algorithm's TD/actor-critic update
+  (``dqn.make_td_update`` / ``ddpg.make_update``).  Under ``shard_map`` the
+  gradients are ``pmean``-averaged across the actor axis — synchronous
+  data-parallel learning, every replica holds identical learner state.
+* **Staleness knob** — the learner pushes refreshed params to the actors
+  only every ``sync_every`` iterations; between syncs the actors run stale
+  params, exactly the decoupling the paper exploits for throughput.
+* **Divergence metrics** — at every sync point the topology records, per
+  actor, the mean absolute gap between the freshly-synced actor behaviour
+  head and the fp32 learner head on that actor's current observations
+  (with ``actor_backend="int8"`` this is the pure int8-vs-fp32
+  quantization divergence; with ``"fp32"`` it is identically zero).  The
+  last recorded value carries through non-sync iterations, keeping the
+  metric off the rollout hot path.
+
+Single-actor equivalence: with ``num_actors=1`` and ``sync_every=1`` (no
+mesh) the topology is *bitwise identical* to the fused ``loops.train``
+driver for DQN — same PRNG chain, same replay contents, same updates —
+which is the parity contract ``tests/test_actor_learner.py`` enforces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.rl import actorq, common, ddpg, dqn
+from repro.rl import buffer as rb
+from repro.rl.distributed import shard_map_compat
+from repro.rl.env import Env, batched_env, rollout
+
+ALGOS = ("dqn", "ddpg")
+TOPOLOGIES = ("fused", "actor-learner")
+
+
+def validate_topology(topology: str) -> str:
+    if topology not in TOPOLOGIES:
+        raise ValueError(f"topology must be one of {TOPOLOGIES}, "
+                         f"got {topology!r}")
+    return topology
+
+
+@dataclasses.dataclass(frozen=True)
+class ActorLearnerConfig:
+    """Topology knobs (the algorithm's own config rides separately)."""
+    num_actors: int = 2
+    sync_every: int = 1           # learner->actor param push cadence (iters)
+
+
+class ActorLearnerState(NamedTuple):
+    learner: common.TrainState    # fp32 learner; extras.replay is sharded
+    actor_params: Any             # the actors' (possibly stale) param copy
+    t: jnp.ndarray                # iterations completed
+    divergence: jnp.ndarray       # (num_actors,) actor-vs-learner head gap
+
+
+def init(key, env: Env, net, algo: str, cfg, al: ActorLearnerConfig
+         ) -> ActorLearnerState:
+    """Learner state + actor copy + sharded replay.
+
+    ``net``/``cfg`` are the underlying algorithm's network(s) and config
+    (``dqn.DQNConfig`` / ``ddpg.DDPGConfig``).  The algorithm's fused
+    replay is swapped for the sharded layout (total capacity conserved:
+    ``buffer_size / num_actors`` per shard).  The actor copy is a real
+    copy, not an alias — the scan-fused driver donates the whole state and
+    donation rejects one buffer appearing twice.
+    """
+    if algo not in ALGOS:
+        raise ValueError(f"actor-learner supports {ALGOS}, got {algo!r}")
+    n = al.num_actors
+    if n < 1 or cfg.buffer_size % n:
+        raise ValueError(f"buffer_size {cfg.buffer_size} must divide by "
+                         f"num_actors {n}")
+    mod = {"dqn": dqn, "ddpg": ddpg}[algo]
+    state = mod.init(key, env, net, cfg)
+    if algo == "ddpg":
+        sharded = rb.replay_init_sharded(
+            n, cfg.buffer_size // n, env.spec.obs_shape,
+            action_shape=(env.spec.action_dim,), action_dtype=jnp.float32)
+    else:
+        sharded = rb.replay_init_sharded(n, cfg.buffer_size // n,
+                                         env.spec.obs_shape)
+    state = state._replace(extras=state.extras._replace(replay=sharded))
+    actor_params = jax.tree_util.tree_map(jnp.array, state.params)
+    return ActorLearnerState(
+        learner=state, actor_params=actor_params,
+        t=jnp.zeros((), jnp.int32),
+        divergence=jnp.zeros((al.num_actors,), jnp.float32))
+
+
+def _state_specs(state: ActorLearnerState, axis: str):
+    """Partition specs for the state pytree: replay + divergence live on the
+    actor axis, everything else (learner params/opt, actor copy) replicated.
+    """
+    def one(path, leaf):
+        names = {getattr(entry, "name", None) for entry in path}
+        sharded = "replay" in names or "divergence" in names
+        return P(axis) if sharded else P()
+    return jax.tree_util.tree_map_with_path(one, state)
+
+
+def make_actor_learner(algo: str, env: Env, net, cfg,
+                       al: ActorLearnerConfig, mesh=None,
+                       axis: str = "actor"):
+    """Returns ``(iteration, act_fn, benv_global)``.
+
+    ``iteration(state, env_state, obs, key) -> (state, env_state, obs,
+    metrics)`` — the same contract as the fused algorithms, so the
+    scan-fused driver (``loops.make_scan_iteration``) and ``loops.train``
+    drive it unchanged.  ``benv_global`` batches
+    ``num_actors * cfg.n_envs`` environments (actor-major layout).
+
+    With ``mesh`` given, the actor axis is ``shard_map``-ped over
+    ``mesh.shape[axis]`` devices (``num_actors`` must divide by it; each
+    device runs ``num_actors / n_dev`` replicas) and learner gradients are
+    ``pmean``-averaged.  Without a mesh the replicas run as one vectorized
+    batch on the local device.
+    """
+    if algo not in ALGOS:
+        raise ValueError(f"actor-learner supports {ALGOS}, got {algo!r}")
+    actorq.validate_actor_backend(cfg.actor_backend)
+    if al.sync_every < 1:
+        raise ValueError(f"sync_every must be >= 1, got {al.sync_every}")
+    n = al.num_actors
+    n_dev = mesh.shape[axis] if mesh is not None else 1
+    if n % n_dev:
+        raise ValueError(f"num_actors {n} must divide by the mesh "
+                         f"{axis!r} axis size {n_dev}")
+    local_actors = n // n_dev
+    envs_per_actor = cfg.n_envs
+    if cfg.batch_size % n:
+        raise ValueError(f"batch_size {cfg.batch_size} must divide by "
+                         f"num_actors {n}")
+    per_actor_batch = cfg.batch_size // n
+    benv_local = batched_env(env, local_actors * envs_per_actor)
+    benv_global = batched_env(env, n * envs_per_actor)
+    obs_shape = tuple(env.spec.obs_shape)
+
+    if algo == "dqn":
+        _build = dqn.make_behaviour_policy(env, net, cfg)
+        learn = dqn.make_td_update(env, net, cfg)
+
+        def build_policy(learner, actor_params):
+            return _build(actor_params, learner.observers, learner.step,
+                          learner.extras.updates)
+
+        def fp32_head(params, obs, observers, step):
+            return dqn._q_values(net, cfg, params, obs, observers, step)[0]
+
+        def actor_head(params, obs):
+            qp = actorq.pack_actor_params(params)
+            return actorq.quantized_apply(qp, obs,
+                                          backend=cfg.kernel_backend)
+    else:
+        _build = ddpg.make_behaviour_policy(env, net, cfg)
+        learn = ddpg.make_update(env, net, cfg)
+
+        def build_policy(learner, actor_params):
+            return _build(actor_params, learner.observers, learner.step)
+
+        def fp32_head(params, obs, observers, step):
+            return ddpg._actor_out(net, cfg, params, obs, observers,
+                                   step)[0]
+
+        def actor_head(params, obs):
+            qp = actorq.pack_actor_params(params)
+            return jnp.tanh(actorq.quantized_apply(
+                qp, obs, backend=cfg.kernel_backend))
+
+    def divergence(learner, actor_params, obs):
+        """(local_actors,) mean-abs behaviour-head gap, per actor."""
+        obs_a = obs.reshape((local_actors, envs_per_actor) + obs_shape)
+
+        def one(o):
+            fresh = fp32_head(learner.params, o, learner.observers,
+                              learner.step)
+            if cfg.actor_backend == "int8":
+                behaved = actor_head(actor_params, o)
+            else:
+                behaved = fp32_head(actor_params, o, learner.observers,
+                                    learner.step)
+            return jnp.mean(jnp.abs(behaved - fresh))
+        return jax.vmap(one)(obs_a)
+
+    def core(state: ActorLearnerState, env_state, obs, key, axis_name):
+        if axis_name is not None:
+            key = jax.random.fold_in(key, jax.lax.axis_index(axis_name))
+            reduce = functools.partial(jax.lax.pmean, axis_name=axis_name)
+        else:
+            def reduce(x):
+                return x
+        learner, actor_params = state.learner, state.actor_params
+        k_roll, k_updates = jax.random.split(key)
+
+        # --- actor phase: stale-param rollouts into the local shards -----
+        policy = build_policy(learner, actor_params)
+        env_state, obs, traj = rollout(
+            benv_local, policy, actor_params, env_state, obs, k_roll,
+            cfg.rollout_steps)
+
+        def to_shards(x):
+            t_dim, trail = x.shape[0], x.shape[2:]
+            y = x.reshape((t_dim, local_actors, envs_per_actor) + trail)
+            y = jnp.moveaxis(y, 1, 0)
+            return y.reshape((local_actors, t_dim * envs_per_actor) + trail)
+        flat = jax.tree_util.tree_map(to_shards, traj)
+        replay = rb.replay_add_sharded(
+            learner.extras.replay,
+            rb.Transition(flat.obs, flat.action, flat.reward, flat.done,
+                          flat.next_obs))
+        learner = learner._replace(
+            extras=learner.extras._replace(replay=replay))
+        total_size = rb.replay_total_size(replay)
+        if axis_name is not None:
+            total_size = jax.lax.psum(total_size, axis_name)
+
+        # --- learner phase: per-shard sampling, fp32 updates -------------
+        def one_update(st, k):
+            keys_a = k[None] if local_actors == 1 \
+                else jax.random.split(k, local_actors)
+            shards = rb.replay_sample_sharded(st.extras.replay, keys_a,
+                                              per_actor_batch)
+            batch = jax.tree_util.tree_map(
+                lambda x: x.reshape((-1,) + x.shape[2:]), shards)
+            return learn(st, batch, total_size, reduce=reduce)
+
+        learner, losses = jax.lax.scan(
+            one_update, learner,
+            jax.random.split(k_updates, cfg.updates_per_iter))
+
+        # --- sync phase: staleness knob + divergence metric ---------------
+        t = state.t + 1
+        do_sync = (t % al.sync_every) == 0
+        actor_params = jax.tree_util.tree_map(
+            lambda a, p: jnp.where(do_sync, p, a), actor_params,
+            learner.params)
+        # divergence is recorded at sync points only (lax.cond keeps the
+        # extra head passes + int8 re-pack off the non-sync iterations);
+        # between syncs the last recorded value carries through
+        div = jax.lax.cond(
+            do_sync,
+            lambda args: divergence(*args),
+            lambda args: state.divergence,
+            (learner, actor_params, obs))
+
+        reward = jnp.sum(traj.reward) / jnp.maximum(jnp.sum(traj.done),
+                                                    1.0)
+        loss = jnp.mean(losses)
+        if axis_name is not None:
+            reward = jax.lax.pmean(reward, axis_name)
+            loss = jax.lax.pmean(loss, axis_name)
+        metrics = {"loss": loss, "reward": reward, "divergence": div}
+        new_state = ActorLearnerState(learner, actor_params, t, div)
+        return new_state, env_state, obs, metrics
+
+    if mesh is None:
+        @jax.jit
+        def iteration(state, env_state, obs, key):
+            return core(state, env_state, obs, key, None)
+    else:
+        @jax.jit
+        def iteration(state, env_state, obs, key):
+            specs = _state_specs(state, axis)
+            metric_specs = {"loss": P(), "reward": P(),
+                            "divergence": P(axis)}
+            sharded = shard_map_compat(
+                functools.partial(core, axis_name=axis), mesh,
+                in_specs=(specs, P(axis), P(axis), P()),
+                out_specs=(specs, P(axis), P(axis), metric_specs))
+            return sharded(state, env_state, obs, key)
+
+    if algo == "dqn":
+        def act_fn(params, obs, observers=None, step=1 << 30):
+            q = fp32_head(params, obs, observers or {},
+                          jnp.asarray(step))
+            return jnp.argmax(q, axis=-1).astype(jnp.int32)
+    else:
+        def act_fn(params, obs, observers=None, step=1 << 30):
+            a = fp32_head(params, obs, observers or {}, jnp.asarray(step))
+            return a * env.spec.action_scale
+
+    return iteration, act_fn, benv_global

@@ -13,11 +13,11 @@ Quantization scheme (matches ``core.ptq`` exactly, so the int8 path and the
 fake-quant simulation share one quantizer):
 
 * dense weights   — per-tensor affine int8 codes (``core.affine``),
-* conv weights    — per-output-channel int8 codes, dequantized to fp32 in
-  front of ``lax.conv`` (the convs of the paper's pixel policies are a small
-  fraction of actor FLOPs; the FC stack dominates and runs fully int8),
-* activations     — dynamic per-tensor quantization at each dense input
-  (computed on the fly from the live batch range; no calibration pass).
+* conv weights    — per-output-channel int8 codes, computed in int8 via an
+  im2col lowering: patches through the same W8A8 GEMM with the per-channel
+  scales in the kernel's per-column dequant epilogue,
+* activations     — dynamic per-tensor quantization at each dense/conv
+  input (computed on the fly from the live batch range; no calibration).
 
 Packing cadence: call ``pack_actor_params`` once per learner update — e.g.
 at the top of a jitted training iteration — NOT per environment step; the
@@ -121,20 +121,43 @@ def int8_dense(layer: Dict[str, Any], x: jnp.ndarray, *,
 
 
 def int8_conv2d(layer: Dict[str, Any], x: jnp.ndarray, stride: int = 1,
-                act: Callable = jax.nn.relu) -> jnp.ndarray:
-    """Conv over int8-stored weights (per-output-channel), fp32 compute.
+                act: Callable = jax.nn.relu, *, backend: str = "auto"
+                ) -> jnp.ndarray:
+    """Conv through the W8A8 integer GEMM via an im2col patch extraction.
 
-    The weights live as int8 codes (4x memory) and are dequantized in front
-    of ``lax.conv`` — identical values to the fake-quant simulation, so the
-    conv contributes zero extra error versus the fp32 fake-quant actor.
+    The conv weights are per-output-channel int8 codes; the input is lowered
+    to patches (``lax.conv_general_dilated_patches``, channel-major
+    ``(C_in, kh, kw)`` feature order) and the contraction runs through
+    ``kernels.ops.int8_matmul`` with the per-channel scales mapped onto the
+    kernel's per-column affine epilogue — true int8 compute, closing the
+    ROADMAP follow-up (previously the codes were dequantized in front of
+    ``lax.conv``).  Activations are dynamically quantized per-tensor over
+    the patch matrix, same policy as ``int8_dense``.
     """
     w = layer["w"]
-    if isinstance(w, PackedTensor):
-        w = w.dequantize(x.dtype)
-    y = jax.lax.conv_general_dilated(
-        x, w.astype(x.dtype), window_strides=(stride, stride),
-        padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    y = y + layer["b"].astype(x.dtype)
+    if not isinstance(w, PackedTensor):
+        # unpacked fp32 conv (e.g. a partially-packed tree): plain compute
+        y = jax.lax.conv_general_dilated(
+            x, w.astype(x.dtype), window_strides=(stride, stride),
+            padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        y = y + layer["b"].astype(x.dtype)
+        return act(y) if act is not None else y
+    kh, kw, c_in, c_out = w.codes.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    lead = patches.shape[:-1]
+    p2 = patches.reshape(-1, patches.shape[-1])
+    pq, pp = affine.quantize_to_int(p2, 8)
+    # patches order features as (C_in, kh, kw); permute HWIO codes to match
+    w2 = jnp.transpose(w.codes, (2, 0, 1, 3)).reshape(-1, c_out)
+    w_scale = jnp.broadcast_to(
+        jnp.asarray(w.delta, jnp.float32).reshape(-1), (c_out,))
+    w_zero = jnp.broadcast_to(
+        jnp.asarray(w.zero_point, jnp.float32).reshape(-1), (c_out,))
+    y = ops.int8_matmul(pq, w2, pp.delta, pp.zero_point, w_scale, w_zero,
+                        backend=backend)
+    y = y.reshape(lead + (c_out,)) + layer["b"].astype(y.dtype)
     if act is not None:
         y = act(y)
     return y
@@ -159,7 +182,7 @@ def quantized_cnn_apply(qparams: QuantizedParams, x: jnp.ndarray,
     batch_shape = x.shape[:-3]
     x = x.reshape((-1,) + x.shape[-3:])
     for i in range(n_convs):
-        x = int8_conv2d(qparams[f"conv{i}"], x)
+        x = int8_conv2d(qparams[f"conv{i}"], x, backend=backend)
     x = x.reshape(x.shape[0], -1)
     x = int8_dense(qparams["fc"], x, backend=backend, act=jax.nn.relu)
     y = int8_dense(qparams["out"], x, backend=backend)

@@ -1,7 +1,18 @@
-"""Replay buffer (uniform) — fixed-size circular arrays, fully jittable."""
-from __future__ import annotations
+"""Replay buffer (uniform) — fixed-size circular arrays, fully jittable.
 
-from typing import Any, NamedTuple, Tuple
+Two layouts:
+
+* single buffer — ``replay_init`` / ``replay_add_batch`` / ``replay_sample``
+  (leading dim = capacity), used by the fused DQN/DDPG loops;
+* sharded buffer — the ``*_sharded`` variants stack ``n_shards`` independent
+  circular buffers along a new leading axis (leading dims =
+  ``(n_shards, capacity)``), one shard per actor replica in the
+  actor–learner topology (``rl.actor_learner``).  The shard axis is what the
+  device mesh partitions: each actor writes only its own shard, the learner
+  samples per-shard and concatenates.  ``replay_stack`` / ``replay_unstack``
+  round-trip between the two layouts.
+"""
+from typing import List, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +58,52 @@ def replay_add_batch(state: ReplayState, batch: Transition) -> ReplayState:
 
 def replay_sample(state: ReplayState, key: jax.Array, batch_size: int
                   ) -> Transition:
-    capacity = state.data.reward.shape[0]
     maxval = jnp.maximum(state.size, 1)
     idx = jax.random.randint(key, (batch_size,), 0, maxval)
     return jax.tree_util.tree_map(lambda buf: buf[idx], state.data)
+
+
+# ---------------------------------------------------------------------------
+# Sharded layout (actor-learner: one shard per actor replica)
+# ---------------------------------------------------------------------------
+
+def replay_init_sharded(n_shards: int, capacity: int, obs_shape,
+                        action_shape=(), action_dtype=jnp.int32
+                        ) -> ReplayState:
+    """``n_shards`` independent circular buffers stacked on a leading axis."""
+    one = replay_init(capacity, obs_shape, action_shape, action_dtype)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n_shards,) + x.shape).copy(), one)
+
+
+def replay_add_sharded(state: ReplayState, batch: Transition) -> ReplayState:
+    """Per-shard batched add: ``batch`` leaves are (n_shards, N, ...)."""
+    return jax.vmap(replay_add_batch)(state, batch)
+
+
+def replay_sample_sharded(state: ReplayState, keys: jax.Array,
+                          per_shard: int) -> Transition:
+    """Sample ``per_shard`` transitions from every shard.
+
+    ``keys`` is one PRNG key per shard (n_shards, 2); the result leaves are
+    (n_shards, per_shard, ...) — reshape to (n_shards * per_shard, ...) for
+    a single learner batch.
+    """
+    return jax.vmap(replay_sample, in_axes=(0, 0, None))(state, keys,
+                                                         per_shard)
+
+
+def replay_total_size(state: ReplayState) -> jnp.ndarray:
+    """Total valid entries across shards (scalar for a single buffer)."""
+    return jnp.sum(state.size)
+
+
+def replay_stack(states: List[ReplayState]) -> ReplayState:
+    """Stack independent buffers into the sharded layout."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def replay_unstack(state: ReplayState) -> List[ReplayState]:
+    """Inverse of ``replay_stack`` — split the shard axis back out."""
+    n = state.size.shape[0]
+    return [jax.tree_util.tree_map(lambda x: x[i], state) for i in range(n)]

@@ -1,15 +1,14 @@
 """Shared RL plumbing: train-state, QAT context wiring, eval helpers."""
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import fake_quant, metrics as metrics_lib, ptq
+from repro.core import fake_quant, ptq
 from repro.core.qconfig import QuantConfig
-from repro.optim.adam import AdamConfig, AdamState, adam_init, adam_update
+from repro.optim.adam import AdamState
 
 
 class TrainState(NamedTuple):

@@ -4,13 +4,14 @@ original OU noise — documented deviation)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.qconfig import QuantConfig
 from repro.optim.adam import AdamConfig, AdamState, adam_init, adam_update
+from repro.rl import actorq
 from repro.rl import buffer as rb
 from repro.rl import common
 from repro.rl.env import Env, batched_env, rollout
@@ -31,6 +32,11 @@ class DDPGConfig:
     noise_sigma: float = 0.2
     warmup: int = 1000
     quant: QuantConfig = QuantConfig.none()
+    # ActorQ: "int8" runs rollout data collection (the exploration policy's
+    # mu head) through the packed int8 actor; the critic and both gradient
+    # paths stay fp32 — the paper's D4PG-style ActorQ split.
+    actor_backend: str = "fp32"
+    kernel_backend: str = "auto"
 
 
 class DDPGExtras(NamedTuple):
@@ -75,16 +81,56 @@ def init(key, env: Env, nets: DDPGNets, cfg: DDPGConfig):
                           copt, replay))
 
 
-def make_iteration(env: Env, nets: DDPGNets, cfg: DDPGConfig):
-    benv = batched_env(env, cfg.n_envs)
+def _actor_out(nets, cfg, params, obs, observers, step):
+    base = common.make_ctx(cfg.quant, observers, step)
+    ctx = common.PrefixCtx(base, "actor/")
+    return jnp.tanh(nets.actor.apply(ctx, params, obs)), \
+        base.merged_collection()
+
+
+def make_behaviour_policy(env: Env, nets: DDPGNets, cfg: DDPGConfig):
+    """``build(params, observers, step) -> policy(_, obs, key)``.
+
+    Gaussian-noise exploration over the deterministic actor.  With
+    ``actor_backend="int8"`` the mu head runs through the packed int8 actor
+    (one pack per build = per learner update); noise/clip/scale stay fp32.
+    """
+    scale = env.spec.action_scale
+
+    def build(params, observers, step):
+        if cfg.actor_backend == "int8":
+            qparams = actorq.pack_actor_params(params)
+
+            def mu_fn(obs):
+                mu = actorq.quantized_apply(qparams, obs,
+                                            backend=cfg.kernel_backend)
+                return jnp.tanh(mu)
+        else:
+            def mu_fn(obs):
+                return _actor_out(nets, cfg, params, obs, observers,
+                                  step)[0]
+
+        def policy(_params, obs, k):
+            a = mu_fn(obs)
+            noise = cfg.noise_sigma * jax.random.normal(k, a.shape)
+            return jnp.clip(a + noise, -1.0, 1.0) * scale, a
+        return policy
+    return build
+
+
+def make_update(env: Env, nets: DDPGNets, cfg: DDPGConfig):
+    """``update(state, batch, replay_size, reduce) -> (state, loss)``.
+
+    One critic + actor learner step on an already-sampled batch; ``reduce``
+    (identity / ``lax.pmean``) is applied to each gradient before its Adam
+    update so the same function serves the fused loop and the data-parallel
+    learner of the actor–learner topology.
+    """
     a_cfg = AdamConfig(lr=cfg.actor_lr)
     c_cfg = AdamConfig(lr=cfg.critic_lr)
 
     def actor_out(params, obs, observers, step):
-        base = common.make_ctx(cfg.quant, observers, step)
-        ctx = common.PrefixCtx(base, "actor/")
-        return jnp.tanh(nets.actor.apply(ctx, params, obs)), \
-            base.merged_collection()
+        return _actor_out(nets, cfg, params, obs, observers, step)
 
     def critic_out(params, obs, action, observers, step):
         base = common.make_ctx(cfg.quant, observers, step)
@@ -95,8 +141,8 @@ def make_iteration(env: Env, nets: DDPGNets, cfg: DDPGConfig):
         return nets.critic.apply(ctx, params, x)[..., 0], \
             base.merged_collection()
 
-    def update(state: common.TrainState, key):
-        batch = rb.replay_sample(state.extras.replay, key, cfg.batch_size)
+    def update(state: common.TrainState, batch: rb.Transition,
+               replay_size, reduce=lambda x: x):
         ex = state.extras
 
         def critic_loss(cp):
@@ -112,6 +158,8 @@ def make_iteration(env: Env, nets: DDPGNets, cfg: DDPGConfig):
 
         (closs, new_coll), cgrads = jax.value_and_grad(
             critic_loss, has_aux=True)(ex.critic_params)
+        cgrads, closs, new_coll = reduce(cgrads), reduce(closs), \
+            reduce(new_coll)
         critic_params, critic_opt, _ = adam_update(
             cgrads, ex.critic_opt, ex.critic_params, c_cfg)
 
@@ -124,10 +172,12 @@ def make_iteration(env: Env, nets: DDPGNets, cfg: DDPGConfig):
 
         (aloss, new_coll2), agrads = jax.value_and_grad(
             actor_loss, has_aux=True)(state.params)
+        agrads, aloss, new_coll2 = reduce(agrads), reduce(aloss), \
+            reduce(new_coll2)
         actor_params, actor_opt, _ = adam_update(
             agrads, state.opt, state.params, a_cfg)
 
-        warm = ex.replay.size >= cfg.warmup
+        warm = replay_size >= cfg.warmup
         actor_params = jax.tree_util.tree_map(
             lambda n, o: jnp.where(warm, n, o), actor_params, state.params)
         critic_params = jax.tree_util.tree_map(
@@ -144,17 +194,19 @@ def make_iteration(env: Env, nets: DDPGNets, cfg: DDPGConfig):
                        critic_opt, ex.replay))
         return state, closs + aloss
 
+    return update
+
+
+def make_iteration(env: Env, nets: DDPGNets, cfg: DDPGConfig):
+    actorq.validate_actor_backend(cfg.actor_backend)
+    benv = batched_env(env, cfg.n_envs)
+    build_policy = make_behaviour_policy(env, nets, cfg)
+    update = make_update(env, nets, cfg)
+
     @jax.jit
     def iteration(state: common.TrainState, env_state, obs, key):
         k_roll, k_up = jax.random.split(key)
-
-        scale = env.spec.action_scale
-
-        def policy(params, obs, k):
-            a, _ = actor_out(params, obs, state.observers, state.step)
-            noise = cfg.noise_sigma * jax.random.normal(k, a.shape)
-            return jnp.clip(a + noise, -1.0, 1.0) * scale, a
-
+        policy = build_policy(state.params, state.observers, state.step)
         env_state, obs, traj = rollout(benv, policy, state.params,
                                        env_state, obs, k_roll,
                                        cfg.rollout_steps)
@@ -165,8 +217,12 @@ def make_iteration(env: Env, nets: DDPGNets, cfg: DDPGConfig):
             rb.Transition(flat.obs, flat.action, flat.reward, flat.done,
                           flat.next_obs))
         state = state._replace(extras=state.extras._replace(replay=replay))
+
+        def one_update(st, k):
+            batch = rb.replay_sample(st.extras.replay, k, cfg.batch_size)
+            return update(st, batch, st.extras.replay.size)
         state, losses = jax.lax.scan(
-            update, state, jax.random.split(k_up, cfg.updates_per_iter))
+            one_update, state, jax.random.split(k_up, cfg.updates_per_iter))
         metrics = {"loss": jnp.mean(losses),
                    "reward": jnp.sum(traj.reward) / jnp.maximum(
                        jnp.sum(traj.done), 1.0)}

@@ -21,28 +21,31 @@ path is exercised with 8 fake host devices in tests/test_distributed_rl.py).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Tuple
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.qconfig import QuantConfig
-from repro.optim.adam import AdamConfig, adam_init, adam_update
+from repro.optim.adam import AdamConfig, adam_update
 from repro.rl import a2c, actorq, common
 from repro.rl.env import Env, batched_env, rollout
 from repro.rl.networks import Network
 
 
-def _shard_map(fn, mesh, *, in_specs, out_specs):
-    """jax.shard_map across jax versions (top-level API vs experimental)."""
+def shard_map_compat(fn, mesh, *, in_specs, out_specs):
+    """``jax.shard_map`` across jax versions (top-level API vs experimental).
+
+    Shared by this module and ``rl.actor_learner`` (which generalizes the
+    data-parallel pattern here to the replay-driven actor–learner topology).
+    """
     if hasattr(jax, "shard_map"):
         return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, check_vma=False)
     from jax.experimental.shard_map import shard_map as _sm
     return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                check_rep=False)
+
+
+_shard_map = shard_map_compat
 
 
 def make_distributed_a2c(env: Env, net: Network, cfg: a2c.A2CConfig,

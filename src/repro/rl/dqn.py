@@ -7,7 +7,6 @@ training, quantization delay = half of training (quant_delay).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, NamedTuple, Tuple
 
 import jax
@@ -65,45 +64,67 @@ def init(key, env: Env, net: Network, cfg: DQNConfig):
                          updates=jnp.zeros((), jnp.int32)))
 
 
-def make_iteration(env: Env, net: Network, cfg: DQNConfig):
-    actorq.validate_actor_backend(cfg.actor_backend)
-    benv = batched_env(env, cfg.n_envs)
-    adam_cfg = AdamConfig(lr=cfg.lr)
+def _q_values(net, cfg, params, obs, observers, step):
+    ctx = common.make_ctx(cfg.quant, observers, step)
+    q = net.apply(ctx, params, obs)
+    return q, ctx.merged_collection()
 
-    def q_values(params, obs, observers, step):
-        ctx = common.make_ctx(cfg.quant, observers, step)
-        q = net.apply(ctx, params, obs)
-        return q, ctx.merged_collection()
 
-    def policy_fn_builder(state):
-        eps = common.linear_epsilon(state.extras.updates, cfg.eps_start,
+def make_behaviour_policy(env: Env, net: Network, cfg: DQNConfig):
+    """``build(params, observers, step, updates) -> policy(_, obs, key)``.
+
+    The behaviour (data-collection) policy closes over the params it is
+    built from — in the fused loop that is the live learner state; in the
+    actor–learner topology (``rl.actor_learner``) it is the actors' possibly
+    stale synced copy.  ``actor_backend="int8"`` packs those params into the
+    int8 cache once per build (= once per learner update), the ActorQ hot
+    path.
+    """
+    def build(params, observers, step, updates):
+        eps = common.linear_epsilon(updates, cfg.eps_start,
                                     cfg.eps_end, cfg.eps_decay_updates)
         if cfg.actor_backend == "int8":
             # ActorQ hot path: int8 cache packed once per learner update,
             # reused by every env step of the rollout scan.
-            qparams = actorq.pack_actor_params(state.params)
+            qparams = actorq.pack_actor_params(params)
 
-            def behaviour_q(params, obs):
+            def behaviour_q(obs):
                 return actorq.quantized_apply(qparams, obs,
                                               backend=cfg.kernel_backend)
         else:
-            def behaviour_q(params, obs):
-                return q_values(params, obs, state.observers, state.step)[0]
+            def behaviour_q(obs):
+                return _q_values(net, cfg, params, obs, observers, step)[0]
 
-        def policy(params, obs, key):
+        def policy(_params, obs, key):
             k_rand, k_explore = jax.random.split(key)
-            q = behaviour_q(params, obs)
+            q = behaviour_q(obs)
             greedy = jnp.argmax(q, axis=-1)
             rand = jax.random.randint(k_rand, greedy.shape, 0,
                                       env.spec.n_actions)
             explore = jax.random.uniform(k_explore, greedy.shape) < eps
             return jnp.where(explore, rand, greedy).astype(jnp.int32), q
         return policy
+    return build
 
-    def td_update(state: common.TrainState, key) -> Tuple[common.TrainState,
-                                                          jnp.ndarray]:
-        batch = rb.replay_sample(state.extras.replay, key, cfg.batch_size)
 
+def make_td_update(env: Env, net: Network, cfg: DQNConfig):
+    """``td_update(state, batch, replay_size, reduce) -> (state, loss)``.
+
+    One fp32 learner step on an already-sampled batch.  ``replay_size``
+    gates the warmup; ``reduce`` is applied to gradients/metrics before the
+    optimizer (identity on a single host, ``lax.pmean`` over the actor axis
+    inside a ``shard_map`` — the data-parallel learner of the actor–learner
+    topology).  Sampling lives with the caller so the sharded replay of
+    ``rl.actor_learner`` and the single fused buffer share this update.
+    """
+    adam_cfg = AdamConfig(lr=cfg.lr)
+
+    def q_values(params, obs, observers, step):
+        return _q_values(net, cfg, params, obs, observers, step)
+
+    def td_update(state: common.TrainState, batch: rb.Transition,
+                  replay_size, reduce=lambda x: x
+                  ) -> Tuple[common.TrainState, jnp.ndarray]:
         def loss_fn(params):
             q, new_obs_coll = q_values(params, batch.obs, state.observers,
                                        state.step)
@@ -119,6 +140,7 @@ def make_iteration(env: Env, net: Network, cfg: DQNConfig):
 
         (loss, new_coll), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(state.params)
+        grads, loss, new_coll = reduce(grads), reduce(loss), reduce(new_coll)
         new_params, new_opt, _ = adam_update(grads, state.opt, state.params,
                                              adam_cfg)
         updates = state.extras.updates + 1
@@ -127,7 +149,7 @@ def make_iteration(env: Env, net: Network, cfg: DQNConfig):
             lambda t, o: jnp.where(do_sync, o, t),
             state.extras.target_params, new_params)
         # learn only after warmup
-        warm = state.extras.replay.size >= cfg.warmup
+        warm = replay_size >= cfg.warmup
         new_params = jax.tree_util.tree_map(
             lambda n, o: jnp.where(warm, n, o), new_params, state.params)
         state = common.TrainState(
@@ -137,10 +159,20 @@ def make_iteration(env: Env, net: Network, cfg: DQNConfig):
                              jnp.where(warm, updates, state.extras.updates)))
         return state, loss
 
+    return td_update
+
+
+def make_iteration(env: Env, net: Network, cfg: DQNConfig):
+    actorq.validate_actor_backend(cfg.actor_backend)
+    benv = batched_env(env, cfg.n_envs)
+    build_policy = make_behaviour_policy(env, net, cfg)
+    td_update = make_td_update(env, net, cfg)
+
     @jax.jit
     def iteration(state: common.TrainState, env_state, obs, key):
         k_roll, k_updates = jax.random.split(key)
-        policy = policy_fn_builder(state)
+        policy = build_policy(state.params, state.observers, state.step,
+                              state.extras.updates)
         env_state, obs, traj = rollout(
             benv, policy, state.params, env_state, obs, k_roll,
             cfg.rollout_steps)
@@ -153,7 +185,8 @@ def make_iteration(env: Env, net: Network, cfg: DQNConfig):
         state = state._replace(extras=state.extras._replace(replay=replay))
 
         def one_update(st, k):
-            return td_update(st, k)
+            batch = rb.replay_sample(st.extras.replay, k, cfg.batch_size)
+            return td_update(st, batch, st.extras.replay.size)
         state, losses = jax.lax.scan(
             one_update, state, jax.random.split(k_updates,
                                                 cfg.updates_per_iter))

@@ -1,7 +1,7 @@
 """CartPole-v1 (faithful gym dynamics; Barto, Sutton & Anderson 1983)."""
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -19,18 +19,26 @@ Hot-path knobs (ActorQ):
   split chain moves into the scan carry unchanged.
 * ``actor_backend`` — ``"fp32"`` (default) or ``"int8"``.  With ``"int8"``
   the *actor* runs true integer inference (``rl.actorq``): params are packed
-  into an int8 cache once per learner update and every dense layer goes
-  through the W8A8 kernel (``kernels.ops.int8_matmul``; backend matrix
+  into an int8 cache once per learner update and every dense/conv layer
+  goes through the W8A8 kernel (``kernels.ops.int8_matmul``; backend matrix
   pallas/interpret/ref/auto).  Rollout data collection uses the int8 actor
-  for A2C/DQN; evaluation uses it for every algorithm.  The learner's
-  gradient path stays fp32 — exactly the paper's ActorQ split.
+  for all four algorithms; evaluation uses it for every algorithm.  The
+  learner's gradient path stays fp32 — exactly the paper's ActorQ split.
+* ``topology`` — ``"fused"`` (default) or ``"actor-learner"``.  The latter
+  runs the paper's distributed ActorQ paradigm (``rl.actor_learner``) for
+  the replay algorithms (DQN/DDPG): ``num_actors`` actor replicas collect
+  rollouts (int8 under ``actor_backend="int8"``) into a sharded replay
+  buffer, the fp32 learner samples per-shard batches, and refreshed params
+  reach the actors every ``sync_every`` iterations (the staleness knob).
+  Per-actor int8-vs-fp32 divergence is recorded in
+  ``TrainResult.divergences``.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,10 +46,10 @@ import numpy as np
 
 from repro.core import metrics as metrics_lib
 from repro.core.qconfig import QuantConfig, QuantMode
-from repro.rl import a2c, actorq, common, ddpg, dqn, ppo
+from repro.rl import a2c, actor_learner, actorq, common, ddpg, dqn, ppo
 from repro.rl.env import Env, evaluate
 from repro.rl.envs import make as make_env
-from repro.rl.networks import Network, make_network
+from repro.rl.networks import make_network
 
 ALGOS = ("dqn", "a2c", "ppo", "ddpg")
 
@@ -75,6 +83,9 @@ class TrainResult:
     wall_time_s: float
     algo_cfg: Any
     net: Any
+    # actor-learner topology only: per-record-point [per-actor mean-abs
+    # divergence between the actors' behaviour head and the fp32 learner]
+    divergences: List[List[float]] = dataclasses.field(default_factory=list)
 
 
 def make_scan_iteration(iteration: Callable, steps_per_call: int):
@@ -137,7 +148,9 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
           algo_overrides: Optional[Dict] = None,
           record_every: int = 10, eval_episodes: int = 8,
           steps_per_call: int = 1,
-          actor_backend: str = "fp32") -> TrainResult:
+          actor_backend: str = "fp32",
+          topology: str = "fused", num_actors: int = 1,
+          sync_every: int = 1, mesh=None) -> TrainResult:
     """Train ``algo`` on ``env_name``.
 
     ``steps_per_call > 1`` enables the scan-fused driver (see module
@@ -145,25 +158,49 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
     fused chunks instead of one jit call per update, with chunks clipped to
     ``record_every`` boundaries so recorded rewards/metrics are identical.
 
-    ``actor_backend="int8"`` runs data collection (A2C/DQN rollouts) and the
-    periodic evaluations through the true-int8 actor (``rl.actorq``); the
-    learner stays fp32.  PPO/DDPG currently quantize the evaluation actor
-    only.
+    ``actor_backend="int8"`` runs rollout data collection (all four
+    algorithms) and the periodic evaluations through the true-int8 actor
+    (``rl.actorq``); the learner stays fp32.
+
+    ``topology="actor-learner"`` (DQN/DDPG) runs the paper's distributed
+    ActorQ paradigm with ``num_actors`` replicas and a ``sync_every``
+    staleness cadence — see ``rl.actor_learner``; ``mesh`` optionally
+    shards the actor axis over devices.
     """
     actorq.validate_actor_backend(actor_backend)
+    actor_learner.validate_topology(topology)
     env = make_env(env_name)
     overrides = dict(algo_overrides or {})
-    if algo in ("a2c", "dqn"):
-        overrides.setdefault("actor_backend", actor_backend)
+    overrides.setdefault("actor_backend", actor_backend)
     net, cfg = _build(algo, env, quant, net_kwargs or {}, overrides)
     mod = {"dqn": dqn, "a2c": a2c, "ppo": ppo, "ddpg": ddpg}[algo]
     key = jax.random.PRNGKey(seed)
     k_init, k_env, k_run = jax.random.split(key, 3)
-    state = mod.init(k_init, env, net, cfg)
-    if quant.is_qat:
-        state = state._replace(
-            observers=_bootstrap_observers(algo, env, net, state, quant))
-    iteration, act_fn, benv = mod.make_iteration(env, net, cfg)
+    if topology == "actor-learner":
+        if algo not in actor_learner.ALGOS:
+            raise ValueError(
+                f"topology='actor-learner' needs a replay algorithm "
+                f"{actor_learner.ALGOS}, got {algo!r}")
+        if quant.is_qat:
+            raise ValueError("actor-learner topology does not support QAT "
+                             "(the learner trains fp32; use PTQ eval)")
+        al_cfg = actor_learner.ActorLearnerConfig(num_actors=num_actors,
+                                                  sync_every=sync_every)
+        state = actor_learner.init(k_init, env, net, algo, cfg, al_cfg)
+        iteration, act_fn, benv = actor_learner.make_actor_learner(
+            algo, env, net, cfg, al_cfg, mesh=mesh)
+    elif num_actors != 1 or sync_every != 1 or mesh is not None:
+        raise ValueError(
+            "num_actors/sync_every/mesh are actor-learner knobs — pass "
+            "topology='actor-learner' (the fused driver would silently "
+            "ignore them)")
+    else:
+        state = mod.init(k_init, env, net, cfg)
+        if quant.is_qat:
+            state = state._replace(
+                observers=_bootstrap_observers(algo, env, net, state,
+                                               quant))
+        iteration, act_fn, benv = mod.make_iteration(env, net, cfg)
     env_state, obs = benv.reset(k_env)
 
     kernel_backend = getattr(cfg, "kernel_backend", "auto")
@@ -174,7 +211,7 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
     det_act = _det_act(act_fn)
     chunks: Dict[int, Callable] = {}   # compiled fused drivers by length
 
-    rewards, variances = [], []
+    rewards, variances, divergences = [], [], []
     t0 = time.time()
     i = 0
     while i < iterations:
@@ -189,24 +226,33 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
         i += n
         if i % record_every == 0 or i == iterations:
             last = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+            # actor-learner states carry the fp32 learner inside
+            lview = state.learner \
+                if isinstance(state, actor_learner.ActorLearnerState) \
+                else state
             k_run, k_eval = jax.random.split(k_run)
             if int8_act is not None:
-                qparams = actorq.pack_actor_params(state.params)
+                qparams = actorq.pack_actor_params(lview.params)
                 r = float(evaluate(env, int8_act, qparams, k_eval,
                                    eval_episodes,
                                    max_steps=env.spec.max_steps))
             else:
                 r = float(evaluate(
                     env, det_act,
-                    (state.params, state.observers, state.step), k_eval,
+                    (lview.params, lview.observers, lview.step), k_eval,
                     eval_episodes, max_steps=env.spec.max_steps))
             rewards.append(r)
             variances.append(float(last.get(
                 "action_dist_variance", last.get("mean_q_var", 0.0))))
+            if "divergence" in last:
+                divergences.append(
+                    np.asarray(last["divergence"]).tolist())
     wall = time.time() - t0
+    if isinstance(state, actor_learner.ActorLearnerState):
+        state = state.learner
     return TrainResult(state=state, act_fn=act_fn, env=env, rewards=rewards,
                        action_variances=variances, wall_time_s=wall,
-                       algo_cfg=cfg, net=net)
+                       algo_cfg=cfg, net=net, divergences=divergences)
 
 
 @functools.lru_cache(maxsize=32)

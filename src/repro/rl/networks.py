@@ -20,8 +20,6 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import affine
-from repro.core.qconfig import QuantConfig
 from repro.models.common import P, init_params
 
 

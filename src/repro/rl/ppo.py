@@ -1,15 +1,21 @@
-"""PPO (Schulman et al. 2017): GAE + clipped surrogate, minibatch epochs."""
+"""PPO (Schulman et al. 2017): GAE + clipped surrogate, minibatch epochs.
+
+``actor_backend="int8"`` collects rollouts with the packed int8 actor
+(``rl.actorq``): behaviour logits/values/log-probs all come from the
+quantized head, so the clipped-surrogate importance ratio corrects for the
+int8/fp32 gap exactly as it corrects for ordinary policy lag.  The learner
+(minibatch epochs) stays fp32 — the paper's ActorQ split.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.qconfig import QuantConfig
 from repro.optim.adam import AdamConfig, adam_init, adam_update
-from repro.rl import common
+from repro.rl import actorq, common
 from repro.rl.env import Env, batched_env, rollout
 from repro.rl.networks import Network
 
@@ -27,6 +33,10 @@ class PPOConfig:
     value_coef: float = 0.5
     entropy_coef: float = 0.01
     quant: QuantConfig = QuantConfig.none()
+    # ActorQ: "int8" samples rollout actions (and behaviour logp/values)
+    # from the packed int8 actor; the minibatch learner stays fp32.
+    actor_backend: str = "fp32"
+    kernel_backend: str = "auto"
 
 
 def init(key, env: Env, net: Network, cfg: PPOConfig):
@@ -51,6 +61,7 @@ def gae(rewards, dones, values, last_value, gamma, lam):
 
 
 def make_iteration(env: Env, net: Network, cfg: PPOConfig):
+    actorq.validate_actor_backend(cfg.actor_backend)
     benv = batched_env(env, cfg.n_envs)
     adam_cfg = AdamConfig(lr=cfg.lr)
     n_act = env.spec.n_actions
@@ -60,23 +71,47 @@ def make_iteration(env: Env, net: Network, cfg: PPOConfig):
         out = net.apply(ctx, params, obs)
         return out[..., :n_act], out[..., n_act], ctx.merged_collection()
 
+    def sample_head(logits, k):
+        action = jax.random.categorical(k, logits)
+        logp = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                                   action[..., None], axis=-1)[..., 0]
+        return action.astype(jnp.int32), logp
+
     @jax.jit
     def iteration(state: common.TrainState, env_state, obs, key):
         k_roll, k_perm = jax.random.split(key)
 
-        def policy(params, obs, k):
-            logits, value, _ = heads(params, obs, state.observers,
-                                     state.step)
-            action = jax.random.categorical(k, logits)
-            logp = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
-                                       action[..., None], axis=-1)[..., 0]
-            return action.astype(jnp.int32), (logits, value, logp)
+        if cfg.actor_backend == "int8":
+            # ActorQ hot path: pack once per learner update; every env step
+            # of the rollout scan reuses the int8 cache.  Behaviour logp and
+            # bootstrap values come from the quantized head so the clipped
+            # ratio sees the true behaviour distribution.
+            qparams = actorq.pack_actor_params(state.params)
+
+            def policy(params, obs, k):
+                out = actorq.quantized_apply(qparams, obs,
+                                             backend=cfg.kernel_backend)
+                logits, value = out[..., :n_act], out[..., n_act]
+                action, logp = sample_head(logits, k)
+                return action, (logits, value, logp)
+        else:
+            def policy(params, obs, k):
+                logits, value, _ = heads(params, obs, state.observers,
+                                         state.step)
+                action, logp = sample_head(logits, k)
+                return action, (logits, value, logp)
 
         env_state, last_obs, traj = rollout(
             benv, policy, state.params, env_state, obs, k_roll, cfg.n_steps)
         logits_b, values_b, logp_b = traj.logits_or_value
-        _, last_value, _ = heads(state.params, last_obs, state.observers,
-                                 state.step)
+        if cfg.actor_backend == "int8":
+            # bootstrap from the same (quantized) behaviour value head as
+            # the per-step values so GAE sees one consistent value function
+            last_value = actorq.quantized_apply(
+                qparams, last_obs, backend=cfg.kernel_backend)[..., n_act]
+        else:
+            _, last_value, _ = heads(state.params, last_obs,
+                                     state.observers, state.step)
         advs, returns = gae(traj.reward, traj.done, values_b,
                             last_value, cfg.gamma, cfg.gae_lambda)
         advs_n = (advs - advs.mean()) / (advs.std() + 1e-8)

@@ -117,10 +117,10 @@ def test_full_configs_match_assignment():
         "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
         "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
     }
-    for name, (l, d, h, kv, f, v) in expect.items():
+    for name, (nl, d, h, kv, f, v) in expect.items():
         cfg = cfgs.get(name)
         assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
-                cfg.d_ff, cfg.vocab) == (l, d, h, kv, f, v), name
+                cfg.d_ff, cfg.vocab) == (nl, d, h, kv, f, v), name
     # MoE extras
     assert cfgs.get("mixtral-8x7b").n_experts == 8
     assert cfgs.get("grok-1-314b").moe_top_k == 2

@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 from hypcompat import given, settings, st  # guarded hypothesis import
 
-from repro.optim import (AdamConfig, adam_init, adam_update, BlockQuantized,
+from repro.optim import (AdamConfig, adam_init, adam_update,
                          block_quantize, block_dequantize,
                          clip_by_global_norm, schedule, sgd)
 
@@ -89,8 +89,9 @@ def test_sgd_momentum_descends():
     params = _quadratic_params()
     cfg = sgd.SGDConfig(lr=0.05, momentum=0.9)
     state = sgd.sgd_init(params, cfg)
-    loss = lambda p: sum(jnp.sum(jnp.square(x))
-                         for x in jax.tree_util.tree_leaves(p))
+    def loss(p):
+        return sum(jnp.sum(jnp.square(x))
+                   for x in jax.tree_util.tree_leaves(p))
     for _ in range(100):
         grads = jax.grad(loss)(params)
         params, state = sgd.sgd_update(grads, state, params, cfg)
@@ -104,6 +105,30 @@ def test_schedules():
     assert float(fn(jnp.asarray(100))) < 0.2
     eps = schedule.linear_epsilon(1.0, 0.1, 100)
     np.testing.assert_allclose(float(eps(jnp.asarray(50))), 0.55)
+
+
+# ---------------------------------------------------------------------------
+# Test-suite hygiene: collection must not depend on optional extras
+# ---------------------------------------------------------------------------
+
+def test_no_direct_hypothesis_imports_in_tests():
+    """Tier-1 runs in minimal containers; every property test must import
+    hypothesis through ``tests/hypcompat.py`` so collection stays clean
+    when the package is absent (CI also enforces ``pytest --co -q``)."""
+    tests_dir = os.path.dirname(os.path.abspath(__file__))
+    offenders = []
+    for name in sorted(os.listdir(tests_dir)):
+        if not name.endswith(".py") or name == "hypcompat.py":
+            continue
+        with open(os.path.join(tests_dir, name)) as f:
+            for lineno, line in enumerate(f, 1):
+                stripped = line.strip()
+                if (stripped.startswith("import hypothesis")
+                        or stripped.startswith("from hypothesis")):
+                    offenders.append(f"{name}:{lineno}: {stripped}")
+    assert not offenders, (
+        "direct hypothesis imports found (route them through hypcompat):\n"
+        + "\n".join(offenders))
 
 
 # ---------------------------------------------------------------------------

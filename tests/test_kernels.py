@@ -3,8 +3,6 @@
 Per-kernel shape/dtype sweeps + hypothesis property tests, per the repo's
 kernel contract: every kernel must match its ref.py oracle allclose.
 """
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -8,7 +8,7 @@ from hypcompat import given, settings, st  # guarded hypothesis import
 from repro.core.qconfig import QuantConfig
 from repro.rl import buffer as rb
 from repro.rl import loops
-from repro.rl.env import batched_env, evaluate, rollout
+from repro.rl.env import batched_env, rollout
 from repro.rl.envs import ENVS, make as make_env
 
 
