@@ -6,7 +6,16 @@ cartpole) across the topology matrix
     num_actors x {1, 2, 4}  ×  actor_backend x {fp32, int8}
                             ×  sync_every   x {1, 4}
 
-Two numbers per cell, both measured after compile on the jitted iteration:
+plus a **uniform-vs-prioritized replay column** (ISSUE 3): the same
+throughput cell with ``replay="prioritized"`` for a reduced sub-matrix —
+the learner-samples/sec *cost* of the sum-tree (sampling descent + the
+per-update priority push) — and a convergence section measuring the
+*time-to-reward-threshold gain* of prioritized sampling on the fused DQN
+driver (learner updates until the periodic eval first clears the
+threshold).
+
+Two numbers per throughput cell, both measured after compile on the jitted
+iteration:
 
 * ``env_steps_per_sec``    — environment transitions collected per second
   (``num_actors * n_envs * rollout_steps`` per iteration): the actor-side
@@ -33,11 +42,14 @@ from benchmarks import common as C
 ACTORS = (1, 2, 4)
 BACKENDS = ("fp32", "int8")
 SYNCS = (1, 4)
+# prioritized rides a reduced sub-matrix (the replay discipline is
+# orthogonal to fan-out/staleness; two cells bound the tree overhead)
+PER_CELLS = ((1, "int8", 1), (2, "int8", 1))
 ENV = "cartpole"
 
 
 def _time_topology(num_actors: int, backend: str, sync_every: int,
-                   iters: int) -> Dict:
+                   iters: int, replay: str = "uniform") -> Dict:
     from repro.rl import actor_learner, dqn
     from repro.rl.envs import make as make_env
     from repro.rl.networks import make_network
@@ -45,7 +57,7 @@ def _time_topology(num_actors: int, backend: str, sync_every: int,
     env = make_env(ENV)
     cfg = dqn.DQNConfig(n_envs=16, rollout_steps=8, updates_per_iter=4,
                         buffer_size=4096, batch_size=64, warmup=64,
-                        actor_backend=backend)
+                        actor_backend=backend, replay=replay)
     net = make_network(env.spec.obs_shape, env.spec.n_actions)
     al = actor_learner.ActorLearnerConfig(num_actors=num_actors,
                                           sync_every=sync_every)
@@ -74,6 +86,7 @@ def _time_topology(num_actors: int, backend: str, sync_every: int,
         "num_actors": num_actors,
         "actor_backend": backend,
         "sync_every": sync_every,
+        "replay": replay,
         "iters": iters,
         "wall_s": dt,
         "us_per_iter": dt / iters * 1e6,
@@ -83,32 +96,98 @@ def _time_topology(num_actors: int, backend: str, sync_every: int,
     }
 
 
+THRESHOLD = 2.0         # catch eval return over [-5, 5]; random play ~ -5
+CONV_ENV = "catch"      # sparse-reward pixel env — where PER buys the most
+
+
+def _time_to_threshold(replay: str, iterations: int) -> Dict:
+    """Fused-DQN convergence on sparse-reward Catch: learner updates +
+    wall time until the periodic eval first clears THRESHOLD (-1 = never;
+    under ``--smoke`` budgets neither discipline gets there — the gain
+    shows at full scale, mirroring the slow-marked test in
+    ``tests/test_prioritized_replay.py``)."""
+    from repro.rl import loops
+
+    record_every = 50
+    cfg = dict(n_envs=8, rollout_steps=8, updates_per_iter=4,
+               buffer_size=8192, batch_size=32, warmup=256,
+               eps_decay_updates=800, target_update_every=100)
+    t0 = time.perf_counter()
+    res = loops.train("dqn", CONV_ENV, iterations=iterations,
+                      record_every=record_every, eval_episodes=16, seed=0,
+                      steps_per_call=25, replay=replay,
+                      net_kwargs=dict(conv_filters=(8, 8), fc_width=32),
+                      algo_overrides=cfg)
+    wall = time.perf_counter() - t0
+    # loops.train records at record_every multiples AND at the final
+    # (possibly partial) iteration — mirror that to map the first
+    # threshold crossing back to an exact learner-update count
+    positions = list(range(record_every, iterations + 1, record_every))
+    if not positions or positions[-1] != iterations:
+        positions.append(iterations)
+    hit = next((i for i, r in enumerate(res.rewards) if r >= THRESHOLD),
+               None)
+    updates = -1 if hit is None \
+        else positions[hit] * cfg["updates_per_iter"]
+    return {
+        "section": "replay_convergence",
+        "env": CONV_ENV,
+        "replay": replay,
+        "iterations": iterations,
+        "reward_threshold": THRESHOLD,
+        "rewards": [float(r) for r in res.rewards],
+        "learner_updates_to_threshold": updates,
+        "wall_s": wall,
+    }
+
+
 def run(iters: int = 30) -> List[Dict]:
     iters = C.scaled(iters)
     rows = []
     base = None
-    for num_actors in ACTORS:
-        for backend in BACKENDS:
-            for sync_every in SYNCS:
-                row = _time_topology(num_actors, backend, sync_every, iters)
-                if (num_actors, backend, sync_every) == (1, "fp32", 1):
-                    base = row
-                row["speedup_env_steps_vs_1actor_fp32"] = (
-                    row["env_steps_per_sec"] / base["env_steps_per_sec"]
-                    if base else 1.0)
-                rows.append(row)
-                C.emit(
-                    f"actor_learner/{backend}/a{num_actors}/s{sync_every}",
-                    row["us_per_iter"],
-                    f"env_steps_per_sec={row['env_steps_per_sec']:.0f}"
-                    f";learner_sps={row['learner_samples_per_sec']:.0f}"
-                    f";speedup="
-                    f"{row['speedup_env_steps_vs_1actor_fp32']:.2f}x")
+    matrix = [(a, b, s, "uniform")
+              for a in ACTORS for b in BACKENDS for s in SYNCS]
+    matrix += [(a, b, s, "prioritized") for a, b, s in PER_CELLS]
+    for num_actors, backend, sync_every, replay in matrix:
+        row = _time_topology(num_actors, backend, sync_every, iters,
+                             replay=replay)
+        if (num_actors, backend, sync_every, replay) == \
+                (1, "fp32", 1, "uniform"):
+            base = row
+        row["speedup_env_steps_vs_1actor_fp32"] = (
+            row["env_steps_per_sec"] / base["env_steps_per_sec"]
+            if base else 1.0)
+        rows.append(row)
+        C.emit(
+            f"actor_learner/{backend}/a{num_actors}/s{sync_every}"
+            f"/{replay}",
+            row["us_per_iter"],
+            f"env_steps_per_sec={row['env_steps_per_sec']:.0f}"
+            f";learner_sps={row['learner_samples_per_sec']:.0f}"
+            f";speedup="
+            f"{row['speedup_env_steps_vs_1actor_fp32']:.2f}x")
+
+    # uniform-vs-prioritized convergence (time-to-reward-threshold gain)
+    conv_iters = C.scaled(800)
+    conv = {r: _time_to_threshold(r, conv_iters)
+            for r in ("uniform", "prioritized")}
+    for replay, row in conv.items():
+        rows.append(row)
+        C.emit(f"actor_learner/convergence/{replay}",
+               row["wall_s"] * 1e6,
+               f"updates_to_{THRESHOLD:.0f}="
+               f"{row['learner_updates_to_threshold']}")
+    u, p = (conv[r]["learner_updates_to_threshold"]
+            for r in ("uniform", "prioritized"))
+    if p > 0 and (u < 0 or p < u):
+        print(f"prioritized reached reward {THRESHOLD:.0f} in {p} learner "
+              f"updates vs uniform {'never' if u < 0 else u}")
 
     path = C.save_rows("BENCH_actor_learner", rows)
     print(f"wrote {path}")
     accept = [r for r in rows
-              if r["num_actors"] >= 2 and r["actor_backend"] == "int8"
+              if r.get("section") == "actor_learner"
+              and r["num_actors"] >= 2 and r["actor_backend"] == "int8"
               and r["speedup_env_steps_vs_1actor_fp32"] > 1.0]
     print(f"acceptance: {len(accept)} int8 multi-actor configs beat the "
           f"1-actor fp32 baseline on env-steps/sec")

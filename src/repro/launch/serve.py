@@ -30,6 +30,7 @@ def _serve_policy(args) -> int:
 
     from repro.core import ptq
     from repro.rl import actorq, loops
+    from repro.rl.actor_learner import ALGOS as REPLAY_ALGOS
     from repro.rl.envs import make as make_env
 
     env = make_env(args.rl_env)
@@ -42,10 +43,21 @@ def _serve_policy(args) -> int:
                        sync_every=args.sync_every)
     else:
         algo = "ppo" if not env.spec.continuous else "ddpg"
+    if args.replay != "uniform" and algo not in REPLAY_ALGOS:
+        raise SystemExit(
+            f"--replay {args.replay} needs a replay algorithm; fused "
+            f"discrete envs train {algo} — use --topology actor-learner")
+    if algo in REPLAY_ALGOS:
+        topo_kw.update(replay=args.replay,
+                       priority_exponent=args.priority_exponent,
+                       is_beta=args.is_beta)
     res = loops.train(algo, args.rl_env, iterations=max(args.rl_iters, 1),
                       record_every=max(args.rl_iters, 1), eval_episodes=2,
                       seed=args.seed, steps_per_call=args.steps_per_call,
                       actor_backend=args.actor_backend, **topo_kw)
+    if algo in REPLAY_ALGOS and args.replay == "prioritized":
+        print(f"[serve-rl] prioritized replay: alpha="
+              f"{args.priority_exponent} is_beta={args.is_beta}")
     if args.topology == "actor-learner" and res.divergences:
         div = ", ".join(f"{d:.4f}" for d in res.divergences[-1])
         print(f"[serve-rl] actor-learner ({algo}): {args.num_actors} "
@@ -127,6 +139,14 @@ def main(argv=None) -> int:
                     help="actor replicas for --topology actor-learner")
     ap.add_argument("--sync-every", type=int, default=1,
                     help="learner->actor param push cadence (iterations)")
+    ap.add_argument("--replay", default="uniform",
+                    choices=["uniform", "prioritized"],
+                    help="--rl-env replay discipline (DQN/DDPG): "
+                         "prioritized = sum-tree PER with IS correction")
+    ap.add_argument("--priority-exponent", type=float, default=0.6,
+                    help="PER alpha; 0.0 degrades to bitwise-uniform")
+    ap.add_argument("--is-beta", type=float, default=0.4,
+                    help="initial IS-correction exponent (anneals to 1)")
     args = ap.parse_args(argv)
 
     if args.rl_env:

@@ -17,7 +17,12 @@ analogues):
   vectorized env batch (same math, no collectives).
 * **Sharded replay** — each actor owns one shard of the replay buffer
   (``buffer.replay_init_sharded``; per-shard capacity =
-  ``buffer_size / num_actors``) and writes only its own shard.
+  ``buffer_size / num_actors``) and writes only its own shard.  With
+  ``replay="prioritized"`` every shard carries its own sum-tree
+  (``buffer.per_init_sharded``): the learner samples
+  priority-proportionally per shard with IS-weight correction and pushes
+  refreshed |TD| priorities back to each shard after every update — all
+  inside the shard_map, so the actor axis never gathers.
 * **fp32 learner** — samples ``batch_size / num_actors`` transitions per
   shard, concatenates, and applies the algorithm's TD/actor-critic update
   (``dqn.make_td_update`` / ``ddpg.make_update``).  Under ``shard_map`` the
@@ -98,13 +103,16 @@ def init(key, env: Env, net, algo: str, cfg, al: ActorLearnerConfig
                          f"num_actors {n}")
     mod = {"dqn": dqn, "ddpg": ddpg}[algo]
     state = mod.init(key, env, net, cfg)
+    init_sharded = rb.per_init_sharded \
+        if rb.use_prioritized(cfg.replay, cfg.priority_exponent) \
+        else rb.replay_init_sharded
     if algo == "ddpg":
-        sharded = rb.replay_init_sharded(
+        sharded = init_sharded(
             n, cfg.buffer_size // n, env.spec.obs_shape,
             action_shape=(env.spec.action_dim,), action_dtype=jnp.float32)
     else:
-        sharded = rb.replay_init_sharded(n, cfg.buffer_size // n,
-                                         env.spec.obs_shape)
+        sharded = init_sharded(n, cfg.buffer_size // n,
+                               env.spec.obs_shape)
     state = state._replace(extras=state.extras._replace(replay=sharded))
     actor_params = jax.tree_util.tree_map(jnp.array, state.params)
     return ActorLearnerState(
@@ -144,6 +152,7 @@ def make_actor_learner(algo: str, env: Env, net, cfg,
     if algo not in ALGOS:
         raise ValueError(f"actor-learner supports {ALGOS}, got {algo!r}")
     actorq.validate_actor_backend(cfg.actor_backend)
+    use_per = rb.use_prioritized(cfg.replay, cfg.priority_exponent)
     if al.sync_every < 1:
         raise ValueError(f"sync_every must be >= 1, got {al.sync_every}")
     n = al.num_actors
@@ -229,7 +238,9 @@ def make_actor_learner(algo: str, env: Env, net, cfg,
             y = jnp.moveaxis(y, 1, 0)
             return y.reshape((local_actors, t_dim * envs_per_actor) + trail)
         flat = jax.tree_util.tree_map(to_shards, traj)
-        replay = rb.replay_add_sharded(
+        add_sharded = rb.per_add_sharded if use_per \
+            else rb.replay_add_sharded
+        replay = add_sharded(
             learner.extras.replay,
             rb.Transition(flat.obs, flat.action, flat.reward, flat.done,
                           flat.next_obs))
@@ -243,11 +254,29 @@ def make_actor_learner(algo: str, env: Env, net, cfg,
         def one_update(st, k):
             keys_a = k[None] if local_actors == 1 \
                 else jax.random.split(k, local_actors)
+            if use_per:
+                # same anneal schedule as the fused drivers
+                # (common.per_beta); priority pushes stay per-shard,
+                # inside the shard_map — the actor axis never gathers
+                beta = common.per_beta(st, cfg)
+                shards, idx, w = rb.per_sample_sharded(
+                    st.extras.replay, keys_a, per_actor_batch, beta)
+                batch = jax.tree_util.tree_map(
+                    lambda x: x.reshape((-1,) + x.shape[2:]), shards)
+                st, (loss, td_abs) = learn(st, batch, total_size,
+                                           weights=w.reshape(-1),
+                                           reduce=reduce)
+                per = rb.per_update_priorities_sharded(
+                    st.extras.replay, idx, td_abs.reshape(idx.shape),
+                    cfg.priority_exponent)
+                st = st._replace(extras=st.extras._replace(replay=per))
+                return st, loss
             shards = rb.replay_sample_sharded(st.extras.replay, keys_a,
                                               per_actor_batch)
             batch = jax.tree_util.tree_map(
                 lambda x: x.reshape((-1,) + x.shape[2:]), shards)
-            return learn(st, batch, total_size, reduce=reduce)
+            st, (loss, _) = learn(st, batch, total_size, reduce=reduce)
+            return st, loss
 
         learner, losses = jax.lax.scan(
             one_update, learner,

@@ -1,21 +1,65 @@
-"""Replay buffer (uniform) — fixed-size circular arrays, fully jittable.
+"""Replay buffers — fixed-size circular arrays, fully jittable.
 
-Two layouts:
+Two sampling disciplines:
 
-* single buffer — ``replay_init`` / ``replay_add_batch`` / ``replay_sample``
-  (leading dim = capacity), used by the fused DQN/DDPG loops;
+* **uniform** — ``replay_init`` / ``replay_add_batch`` / ``replay_sample``:
+  every written transition is equally likely;
+* **prioritized** (PER, Schaul et al. 2015) — ``per_init`` / ``per_add`` /
+  ``per_sample`` / ``per_update_priorities``: transitions are drawn with
+  probability proportional to ``(|td_error| + eps) ** alpha`` held in a
+  fully-JAX sum-tree (O(log n) update/sample via ``lax.fori_loop`` over the
+  static tree depth), with importance-sampling weight correction
+  (``beta``-annealed by the caller).  ``alpha=0`` is *defined* as uniform:
+  the wiring layers (``rl.dqn`` / ``rl.ddpg`` / ``rl.actor_learner``)
+  statically dispatch ``priority_exponent=0.0`` onto the uniform code path,
+  so it is bitwise-identical to ``replay="uniform"`` — the same
+  by-construction contract style as ``num_actors=1, sync_every=1`` vs the
+  fused driver.
+
+Two layouts, orthogonal to the discipline:
+
+* single buffer (leading dim = capacity), used by the fused DQN/DDPG loops;
 * sharded buffer — the ``*_sharded`` variants stack ``n_shards`` independent
-  circular buffers along a new leading axis (leading dims =
-  ``(n_shards, capacity)``), one shard per actor replica in the
-  actor–learner topology (``rl.actor_learner``).  The shard axis is what the
-  device mesh partitions: each actor writes only its own shard, the learner
-  samples per-shard and concatenates.  ``replay_stack`` / ``replay_unstack``
-  round-trip between the two layouts.
+  circular buffers (for PER: independent sum-trees) along a new leading
+  axis (leading dims = ``(n_shards, capacity)``), one shard per actor
+  replica in the actor–learner topology (``rl.actor_learner``).  The shard
+  axis is what the device mesh partitions: each actor writes only its own
+  shard, the learner samples per-shard and concatenates, and priority
+  pushes stay shard-local (no gather across the actor axis).
+  ``replay_stack`` / ``replay_unstack`` (and ``per_stack`` /
+  ``per_unstack``) round-trip between the two layouts.
 """
 from typing import List, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+REPLAY_MODES = ("uniform", "prioritized")
+
+
+def validate_replay(replay: str) -> str:
+    if replay not in REPLAY_MODES:
+        raise ValueError(f"replay must be one of {REPLAY_MODES}, "
+                         f"got {replay!r}")
+    return replay
+
+
+def use_prioritized(replay: str, priority_exponent: float) -> bool:
+    """Static dispatch: does this (replay, alpha) pair need the sum-tree?
+
+    ``priority_exponent=0.0`` makes every priority ``p**0 == 1`` — exact
+    uniform sampling — so it routes onto the uniform code path wholesale,
+    which is what makes the ``alpha=0`` parity contract *bitwise* (the PRNG
+    consumption patterns of the two samplers differ; equal masses alone
+    would only give distributional equality).
+    """
+    validate_replay(replay)
+    if replay != "prioritized":
+        return False
+    if priority_exponent < 0.0:
+        raise ValueError(f"priority_exponent must be >= 0, "
+                         f"got {priority_exponent}")
+    return priority_exponent != 0.0
 
 
 class Transition(NamedTuple):
@@ -58,6 +102,16 @@ def replay_add_batch(state: ReplayState, batch: Transition) -> ReplayState:
 
 def replay_sample(state: ReplayState, key: jax.Array, batch_size: int
                   ) -> Transition:
+    """Uniform sample of ``batch_size`` transitions.
+
+    Contract: sampling is **with replacement** — a batch may contain
+    duplicate indices, and at small fill (``size < batch_size``) it
+    certainly will.  Indices are always restricted to the *written* prefix
+    ``[0, size)`` of the circular buffer, so a partially-filled buffer
+    never yields garbage (all-zero) transitions; the degenerate empty
+    buffer (``size == 0``) returns slot 0, whose contents the algorithms'
+    ``warmup`` gate discards.
+    """
     maxval = jnp.maximum(state.size, 1)
     idx = jax.random.randint(key, (batch_size,), 0, maxval)
     return jax.tree_util.tree_map(lambda buf: buf[idx], state.data)
@@ -93,8 +147,14 @@ def replay_sample_sharded(state: ReplayState, keys: jax.Array,
                                                          per_shard)
 
 
-def replay_total_size(state: ReplayState) -> jnp.ndarray:
-    """Total valid entries across shards (scalar for a single buffer)."""
+def replay_total_size(state) -> jnp.ndarray:
+    """Total valid entries across shards (scalar for a single buffer).
+
+    Accepts either layout discipline (``ReplayState`` or
+    ``PrioritizedReplayState``).
+    """
+    if isinstance(state, PrioritizedReplayState):
+        return jnp.sum(state.replay.size)
     return jnp.sum(state.size)
 
 
@@ -106,4 +166,204 @@ def replay_stack(states: List[ReplayState]) -> ReplayState:
 def replay_unstack(state: ReplayState) -> List[ReplayState]:
     """Inverse of ``replay_stack`` — split the shard axis back out."""
     n = state.size.shape[0]
+    return [jax.tree_util.tree_map(lambda x: x[i], state) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Prioritized replay (PER): sum-tree + importance-sampling weights
+# ---------------------------------------------------------------------------
+
+_PRIORITY_EPS = 1e-6       # |td| -> priority floor (no zero-mass slots)
+_MASS_EPS = 1e-12          # guards 0/0 before the first write
+
+
+class PrioritizedReplayState(NamedTuple):
+    """Circular buffer + a sum-tree over per-slot priorities.
+
+    ``tree`` is a flat binary heap of shape ``(2 * tree_size,)`` with
+    ``tree_size = next_pow2(capacity)``: leaf ``i`` lives at
+    ``tree_size + i``, internal node ``k`` holds ``tree[2k] + tree[2k+1]``,
+    the total priority mass is the root ``tree[1]`` (slot 0 is unused).
+    Leaves hold already-exponentiated priorities
+    ``(|td| + eps) ** alpha``; unwritten slots hold 0 so they carry no
+    sampling mass.  ``max_priority`` is the running max leaf value — fresh
+    writes enter at it, the standard PER "replay everything at least once"
+    rule.
+    """
+    replay: ReplayState
+    tree: jnp.ndarray
+    max_priority: jnp.ndarray
+
+
+def _tree_size(capacity: int) -> int:
+    n = 1
+    while n < capacity:
+        n *= 2
+    return n
+
+
+def sum_tree_set(tree: jnp.ndarray, leaf_idx: jnp.ndarray,
+                 values: jnp.ndarray) -> jnp.ndarray:
+    """Set a batch of leaves and repair their ancestor sums.
+
+    O(B log n): one ``fori_loop`` over the static tree depth; at each level
+    every touched parent is recomputed from its two (already-correct)
+    children, so duplicate indices are safe as long as they carry equal
+    values — which PER guarantees (duplicates within a sampled batch are
+    the same transition and get the same TD error).
+    """
+    size = tree.shape[0] // 2
+    depth = size.bit_length() - 1          # log2(size); size is static
+    node = leaf_idx + size
+    tree = tree.at[node].set(values.astype(tree.dtype))
+
+    def repair(_, carry):
+        tree, node = carry
+        parent = node // 2
+        sums = tree[2 * parent] + tree[2 * parent + 1]
+        return tree.at[parent].set(sums), parent
+
+    tree, _ = jax.lax.fori_loop(0, depth, repair, (tree, node))
+    return tree
+
+
+def sum_tree_total(tree: jnp.ndarray) -> jnp.ndarray:
+    """Total priority mass (the root node)."""
+    return tree[1]
+
+
+def sum_tree_leaves(tree: jnp.ndarray) -> jnp.ndarray:
+    """The per-slot priority leaves (length ``tree_size >= capacity``)."""
+    return tree[tree.shape[0] // 2:]
+
+
+def sum_tree_find(tree: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Prefix-sum descent: leaf index whose cumulative span contains ``u``.
+
+    ``u`` is a batch of masses in ``[0, root)``.  Invariant down the
+    descent: ``u < mass(current node)``, so the walk can only end in a
+    leaf with positive priority — i.e. a written slot.  O(B log n), no
+    host sync: a ``fori_loop`` over the static depth with vectorized
+    gathers.
+    """
+    size = tree.shape[0] // 2
+    depth = size.bit_length() - 1
+
+    def descend(_, carry):
+        node, u = carry
+        left = tree[2 * node]
+        go_left = u < left
+        node = jnp.where(go_left, 2 * node, 2 * node + 1)
+        return node, jnp.where(go_left, u, u - left)
+
+    node0 = jnp.ones(u.shape, jnp.int32)
+    node, _ = jax.lax.fori_loop(0, depth, descend, (node0, u))
+    return node - size
+
+
+def per_init(capacity: int, obs_shape, action_shape=(),
+             action_dtype=jnp.int32) -> PrioritizedReplayState:
+    """Empty prioritized buffer (all-zero tree, ``max_priority = 1``)."""
+    replay = replay_init(capacity, obs_shape, action_shape, action_dtype)
+    tree = jnp.zeros((2 * _tree_size(capacity),), jnp.float32)
+    return PrioritizedReplayState(replay, tree, jnp.ones((), jnp.float32))
+
+
+def per_add(state: PrioritizedReplayState, batch: Transition
+            ) -> PrioritizedReplayState:
+    """Add a batch (N, ...) at the cursor; new slots enter at max priority."""
+    capacity = state.replay.data.reward.shape[0]
+    n = batch.reward.shape[0]
+    idx = (state.replay.index + jnp.arange(n)) % capacity
+    replay = replay_add_batch(state.replay, batch)
+    tree = sum_tree_set(state.tree, idx,
+                        jnp.broadcast_to(state.max_priority, (n,)))
+    return PrioritizedReplayState(replay, tree, state.max_priority)
+
+
+def per_sample(state: PrioritizedReplayState, key: jax.Array,
+               batch_size: int, beta):
+    """Priority-proportional sample with IS-weight correction.
+
+    Returns ``(batch, idx, weights)``: ``P(i) = p_i / root`` over written
+    slots only (unwritten leaves carry zero mass, and a belt-and-braces
+    clip to the written prefix absorbs float-boundary edge cases — sampling
+    never returns an unwritten slot); ``weights = (N * P(i)) ** -beta``
+    normalized by the batch max, the Schaul et al. correction for the
+    non-uniform sampling distribution.  Like the uniform sampler this is
+    with-replacement; ``beta`` may be a traced scalar (annealed by the
+    caller).
+    """
+    tree, size = state.tree, state.replay.size
+    tsize = tree.shape[0] // 2
+    root = jnp.maximum(sum_tree_total(tree), _MASS_EPS)
+    u = jax.random.uniform(key, (batch_size,)) * root
+    idx = jnp.clip(sum_tree_find(tree, u), 0, jnp.maximum(size, 1) - 1)
+    prob = jnp.maximum(tree[tsize + idx] / root, _MASS_EPS)
+    n_valid = jnp.maximum(size, 1).astype(jnp.float32)
+    weights = (n_valid * prob) ** (-beta)
+    weights = weights / jnp.maximum(jnp.max(weights), _MASS_EPS)
+    batch = jax.tree_util.tree_map(lambda buf: buf[idx], state.replay.data)
+    return batch, idx, weights
+
+
+def per_update_priorities(state: PrioritizedReplayState, idx: jnp.ndarray,
+                          td_abs: jnp.ndarray, priority_exponent: float
+                          ) -> PrioritizedReplayState:
+    """Push learner TD errors back as priorities ``(|td| + eps) ** alpha``."""
+    p = (jnp.abs(td_abs) + _PRIORITY_EPS) ** priority_exponent
+    tree = sum_tree_set(state.tree, idx, p)
+    max_p = jnp.maximum(state.max_priority, jnp.max(p))
+    return PrioritizedReplayState(state.replay, tree, max_p)
+
+
+# --- sharded PER (one sum-tree per actor shard, stacked on axis 0) ---------
+
+def per_init_sharded(n_shards: int, capacity: int, obs_shape,
+                     action_shape=(), action_dtype=jnp.int32
+                     ) -> PrioritizedReplayState:
+    """``n_shards`` independent prioritized buffers (trees stacked too)."""
+    one = per_init(capacity, obs_shape, action_shape, action_dtype)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n_shards,) + x.shape).copy(), one)
+
+
+def per_add_sharded(state: PrioritizedReplayState, batch: Transition
+                    ) -> PrioritizedReplayState:
+    """Per-shard batched add: ``batch`` leaves are (n_shards, N, ...)."""
+    return jax.vmap(per_add)(state, batch)
+
+
+def per_sample_sharded(state: PrioritizedReplayState, keys: jax.Array,
+                       per_shard: int, beta):
+    """Sample ``per_shard`` transitions from every shard's own tree.
+
+    IS weights are normalized *per shard* (each shard's batch max), so the
+    correction stays shard-local — under ``shard_map`` no cross-actor
+    collective is needed.
+    """
+    return jax.vmap(per_sample, in_axes=(0, 0, None, None))(
+        state, keys, per_shard, beta)
+
+
+def per_update_priorities_sharded(state: PrioritizedReplayState,
+                                  idx: jnp.ndarray, td_abs: jnp.ndarray,
+                                  priority_exponent: float
+                                  ) -> PrioritizedReplayState:
+    """Per-shard priority push; ``idx``/``td_abs`` are (n_shards, B)."""
+    return jax.vmap(per_update_priorities, in_axes=(0, 0, 0, None))(
+        state, idx, td_abs, priority_exponent)
+
+
+def per_stack(states: List[PrioritizedReplayState]
+              ) -> PrioritizedReplayState:
+    """Stack independent prioritized buffers into the sharded layout
+    (``replay_stack`` is pytree-generic — this is the same operation)."""
+    return replay_stack(states)
+
+
+def per_unstack(state: PrioritizedReplayState
+                ) -> List[PrioritizedReplayState]:
+    """Inverse of ``per_stack`` — split the shard axis back out."""
+    n = state.replay.size.shape[0]
     return [jax.tree_util.tree_map(lambda x: x[i], state) for i in range(n)]

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 from repro.core import fake_quant, ptq
 from repro.core.qconfig import QuantConfig
 from repro.optim.adam import AdamState
+from repro.rl import buffer as rb
 
 
 class TrainState(NamedTuple):
@@ -69,6 +70,40 @@ def eval_params(params: Any, quant: QuantConfig) -> Any:
             return leaf
         return jax.tree_util.tree_map_with_path(one, params)
     return params
+
+
+def per_beta(state: TrainState, cfg) -> jnp.ndarray:
+    """IS-correction exponent for this learner step.
+
+    Anneals ``cfg.is_beta -> 1`` linearly over ``is_beta_anneal_updates``
+    counted on ``state.step`` — the unconditional learner-step counter both
+    DQN and DDPG carry, so the same knobs give the same effective schedule
+    for every algorithm (warmup steps, whose parameter updates are
+    discarded, count too; warmup is short relative to the anneal horizon).
+    """
+    return linear_epsilon(state.step, cfg.is_beta, 1.0,
+                          cfg.is_beta_anneal_updates)
+
+
+def per_learner_step(state: TrainState, key, cfg, update_fn):
+    """One prioritized learner step on the single (fused) buffer.
+
+    The shared sample -> weighted update -> priority-push protocol used by
+    both fused replay algorithms: anneal beta (``per_beta``), draw a
+    priority-proportional batch with IS weights, run the algorithm's
+    update, and push the refreshed per-transition |TD| back into the
+    sum-tree.  (The actor–learner topology runs the same protocol with the
+    ``*_sharded`` buffer ops — see ``rl.actor_learner``.)
+    """
+    beta = per_beta(state, cfg)
+    batch, idx, w = rb.per_sample(state.extras.replay, key,
+                                  cfg.batch_size, beta)
+    state, (loss, td_abs) = update_fn(
+        state, batch, state.extras.replay.replay.size, weights=w)
+    per = rb.per_update_priorities(state.extras.replay, idx, td_abs,
+                                   cfg.priority_exponent)
+    return state._replace(
+        extras=state.extras._replace(replay=per)), loss
 
 
 def linear_epsilon(step, start: float, end: float, decay_steps: int):

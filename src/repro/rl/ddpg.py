@@ -37,6 +37,13 @@ class DDPGConfig:
     # paths stay fp32 — the paper's D4PG-style ActorQ split.
     actor_backend: str = "fp32"
     kernel_backend: str = "auto"
+    # Replay discipline (see rl.buffer): priorities come from the critic's
+    # per-transition |TD error| — the paper's prioritized D4PG analogue.
+    # priority_exponent=0.0 is bitwise-uniform (static dispatch).
+    replay: str = "uniform"
+    priority_exponent: float = 0.6
+    is_beta: float = 0.4
+    is_beta_anneal_updates: int = 4000
 
 
 class DDPGExtras(NamedTuple):
@@ -67,9 +74,12 @@ def init(key, env: Env, nets: DDPGNets, cfg: DDPGConfig):
     critic_params = nets.critic.init(k2)
     opt = adam_init(actor_params, AdamConfig(lr=cfg.actor_lr))
     copt = adam_init(critic_params, AdamConfig(lr=cfg.critic_lr))
-    replay = rb.replay_init(cfg.buffer_size, env.spec.obs_shape,
-                            action_shape=(env.spec.action_dim,),
-                            action_dtype=jnp.float32)
+    replay_init = rb.per_init \
+        if rb.use_prioritized(cfg.replay, cfg.priority_exponent) \
+        else rb.replay_init
+    replay = replay_init(cfg.buffer_size, env.spec.obs_shape,
+                         action_shape=(env.spec.action_dim,),
+                         action_dtype=jnp.float32)
     # copies, not aliases: the scan-fused driver donates the TrainState and
     # donation rejects the same buffer appearing twice
     target_actor = jax.tree_util.tree_map(jnp.array, actor_params)
@@ -119,12 +129,19 @@ def make_behaviour_policy(env: Env, nets: DDPGNets, cfg: DDPGConfig):
 
 
 def make_update(env: Env, nets: DDPGNets, cfg: DDPGConfig):
-    """``update(state, batch, replay_size, reduce) -> (state, loss)``.
+    """``update(state, batch, replay_size, weights, reduce) ->
+    (state, (loss, td_abs))``.
 
     One critic + actor learner step on an already-sampled batch; ``reduce``
     (identity / ``lax.pmean``) is applied to each gradient before its Adam
     update so the same function serves the fused loop and the data-parallel
-    learner of the actor–learner topology.
+    learner of the actor–learner topology.  ``weights`` are optional
+    per-transition IS weights (prioritized replay) applied to the *critic*
+    loss — the TD-learning half, where the sampling bias matters; the
+    actor's deterministic-policy-gradient term stays an unweighted mean
+    (standard prioritized-D4PG practice).  ``td_abs`` is the critic's
+    per-transition |TD error| (never ``reduce``-averaged — priorities are
+    shard-local in the actor–learner topology).
     """
     a_cfg = AdamConfig(lr=cfg.actor_lr)
     c_cfg = AdamConfig(lr=cfg.critic_lr)
@@ -142,7 +159,7 @@ def make_update(env: Env, nets: DDPGNets, cfg: DDPGConfig):
             base.merged_collection()
 
     def update(state: common.TrainState, batch: rb.Transition,
-               replay_size, reduce=lambda x: x):
+               replay_size, weights=None, reduce=lambda x: x):
         ex = state.extras
 
         def critic_loss(cp):
@@ -153,10 +170,14 @@ def make_update(env: Env, nets: DDPGNets, cfg: DDPGConfig):
             target = batch.reward + cfg.gamma * (1 - batch.done) * q_next
             q, new_coll = critic_out(cp, batch.obs, batch.action,
                                      state.observers, state.step)
-            return jnp.mean(jnp.square(
-                q - jax.lax.stop_gradient(target))), new_coll
+            td = q - jax.lax.stop_gradient(target)
+            if weights is None:
+                loss = jnp.mean(jnp.square(td))
+            else:
+                loss = jnp.mean(weights * jnp.square(td))
+            return loss, (new_coll, jnp.abs(td))
 
-        (closs, new_coll), cgrads = jax.value_and_grad(
+        (closs, (new_coll, td_abs)), cgrads = jax.value_and_grad(
             critic_loss, has_aux=True)(ex.critic_params)
         cgrads, closs, new_coll = reduce(cgrads), reduce(closs), \
             reduce(new_coll)
@@ -192,13 +213,14 @@ def make_update(env: Env, nets: DDPGNets, cfg: DDPGConfig):
             actor_params, actor_opt, new_coll2, state.step + 1,
             DDPGExtras(critic_params, target_actor, target_critic,
                        critic_opt, ex.replay))
-        return state, closs + aloss
+        return state, (closs + aloss, td_abs)
 
     return update
 
 
 def make_iteration(env: Env, nets: DDPGNets, cfg: DDPGConfig):
     actorq.validate_actor_backend(cfg.actor_backend)
+    use_per = rb.use_prioritized(cfg.replay, cfg.priority_exponent)
     benv = batched_env(env, cfg.n_envs)
     build_policy = make_behaviour_policy(env, nets, cfg)
     update = make_update(env, nets, cfg)
@@ -212,15 +234,19 @@ def make_iteration(env: Env, nets: DDPGNets, cfg: DDPGConfig):
                                        cfg.rollout_steps)
         flat = jax.tree_util.tree_map(
             lambda x: x.reshape((-1,) + x.shape[2:]), traj)
-        replay = rb.replay_add_batch(
+        add = rb.per_add if use_per else rb.replay_add_batch
+        replay = add(
             state.extras.replay,
             rb.Transition(flat.obs, flat.action, flat.reward, flat.done,
                           flat.next_obs))
         state = state._replace(extras=state.extras._replace(replay=replay))
 
         def one_update(st, k):
+            if use_per:
+                return common.per_learner_step(st, k, cfg, update)
             batch = rb.replay_sample(st.extras.replay, k, cfg.batch_size)
-            return update(st, batch, st.extras.replay.size)
+            st, (loss, _) = update(st, batch, st.extras.replay.size)
+            return st, loss
         state, losses = jax.lax.scan(
             one_update, state, jax.random.split(k_up, cfg.updates_per_iter))
         metrics = {"loss": jnp.mean(losses),

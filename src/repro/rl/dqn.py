@@ -40,6 +40,15 @@ class DQNConfig:
     # actor (refreshed once per learner update); TD learning stays fp32.
     actor_backend: str = "fp32"
     kernel_backend: str = "auto"
+    # Replay discipline: "prioritized" samples proportionally to
+    # (|td| + eps) ** priority_exponent with IS-weight correction whose
+    # exponent anneals is_beta -> 1 over is_beta_anneal_updates learner
+    # updates.  priority_exponent=0.0 is bitwise-uniform (static dispatch
+    # onto the uniform path — see rl.buffer.use_prioritized).
+    replay: str = "uniform"
+    priority_exponent: float = 0.6
+    is_beta: float = 0.4
+    is_beta_anneal_updates: int = 4000
 
 
 class DQNExtras(NamedTuple):
@@ -52,7 +61,10 @@ def init(key, env: Env, net: Network, cfg: DQNConfig):
     k1, k2 = jax.random.split(key)
     params = net.init(k1)
     opt = adam_init(params, AdamConfig(lr=cfg.lr))
-    replay = rb.replay_init(cfg.buffer_size, env.spec.obs_shape)
+    if rb.use_prioritized(cfg.replay, cfg.priority_exponent):
+        replay = rb.per_init(cfg.buffer_size, env.spec.obs_shape)
+    else:
+        replay = rb.replay_init(cfg.buffer_size, env.spec.obs_shape)
     # target params start equal but must not alias the online buffers:
     # the scan-fused driver donates the whole TrainState, and donation
     # rejects the same buffer appearing twice.
@@ -108,13 +120,19 @@ def make_behaviour_policy(env: Env, net: Network, cfg: DQNConfig):
 
 
 def make_td_update(env: Env, net: Network, cfg: DQNConfig):
-    """``td_update(state, batch, replay_size, reduce) -> (state, loss)``.
+    """``td_update(state, batch, replay_size, weights, reduce) ->
+    (state, (loss, td_abs))``.
 
     One fp32 learner step on an already-sampled batch.  ``replay_size``
-    gates the warmup; ``reduce`` is applied to gradients/metrics before the
+    gates the warmup; ``weights`` are optional per-transition
+    importance-sampling weights (prioritized replay) applied to the Huber
+    loss — ``None`` keeps the plain mean, bitwise-identical to the
+    pre-PER update; ``reduce`` is applied to gradients/metrics before the
     optimizer (identity on a single host, ``lax.pmean`` over the actor axis
     inside a ``shard_map`` — the data-parallel learner of the actor–learner
-    topology).  Sampling lives with the caller so the sharded replay of
+    topology).  ``td_abs`` is the per-transition |TD error| (never
+    ``reduce``-averaged: in the sharded topology each shard pushes its own
+    priorities).  Sampling lives with the caller so the sharded replay of
     ``rl.actor_learner`` and the single fused buffer share this update.
     """
     adam_cfg = AdamConfig(lr=cfg.lr)
@@ -123,8 +141,9 @@ def make_td_update(env: Env, net: Network, cfg: DQNConfig):
         return _q_values(net, cfg, params, obs, observers, step)
 
     def td_update(state: common.TrainState, batch: rb.Transition,
-                  replay_size, reduce=lambda x: x
-                  ) -> Tuple[common.TrainState, jnp.ndarray]:
+                  replay_size, weights=None, reduce=lambda x: x
+                  ) -> Tuple[common.TrainState, Tuple[jnp.ndarray,
+                                                      jnp.ndarray]]:
         def loss_fn(params):
             q, new_obs_coll = q_values(params, batch.obs, state.observers,
                                        state.step)
@@ -134,11 +153,14 @@ def make_td_update(env: Env, net: Network, cfg: DQNConfig):
                                  state.observers, state.step)
             target = batch.reward + cfg.gamma * (1 - batch.done) \
                 * jnp.max(q_next, axis=-1)
-            loss = jnp.mean(common.huber(
-                q_sel - jax.lax.stop_gradient(target)))
-            return loss, new_obs_coll
+            td = q_sel - jax.lax.stop_gradient(target)
+            if weights is None:
+                loss = jnp.mean(common.huber(td))
+            else:
+                loss = jnp.mean(weights * common.huber(td))
+            return loss, (new_obs_coll, jnp.abs(td))
 
-        (loss, new_coll), grads = jax.value_and_grad(
+        (loss, (new_coll, td_abs)), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(state.params)
         grads, loss, new_coll = reduce(grads), reduce(loss), reduce(new_coll)
         new_params, new_opt, _ = adam_update(grads, state.opt, state.params,
@@ -157,13 +179,14 @@ def make_td_update(env: Env, net: Network, cfg: DQNConfig):
             step=state.step + 1,
             extras=DQNExtras(target, state.extras.replay,
                              jnp.where(warm, updates, state.extras.updates)))
-        return state, loss
+        return state, (loss, td_abs)
 
     return td_update
 
 
 def make_iteration(env: Env, net: Network, cfg: DQNConfig):
     actorq.validate_actor_backend(cfg.actor_backend)
+    use_per = rb.use_prioritized(cfg.replay, cfg.priority_exponent)
     benv = batched_env(env, cfg.n_envs)
     build_policy = make_behaviour_policy(env, net, cfg)
     td_update = make_td_update(env, net, cfg)
@@ -178,15 +201,19 @@ def make_iteration(env: Env, net: Network, cfg: DQNConfig):
             cfg.rollout_steps)
         flat = jax.tree_util.tree_map(
             lambda x: x.reshape((-1,) + x.shape[2:]), traj)
-        replay = rb.replay_add_batch(
+        add = rb.per_add if use_per else rb.replay_add_batch
+        replay = add(
             state.extras.replay,
             rb.Transition(flat.obs, flat.action, flat.reward, flat.done,
                           flat.next_obs))
         state = state._replace(extras=state.extras._replace(replay=replay))
 
         def one_update(st, k):
+            if use_per:
+                return common.per_learner_step(st, k, cfg, td_update)
             batch = rb.replay_sample(st.extras.replay, k, cfg.batch_size)
-            return td_update(st, batch, st.extras.replay.size)
+            st, (loss, _) = td_update(st, batch, st.extras.replay.size)
+            return st, loss
         state, losses = jax.lax.scan(
             one_update, state, jax.random.split(k_updates,
                                                 cfg.updates_per_iter))

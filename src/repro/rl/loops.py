@@ -32,6 +32,16 @@ Hot-path knobs (ActorQ):
   reach the actors every ``sync_every`` iterations (the staleness knob).
   Per-actor int8-vs-fp32 divergence is recorded in
   ``TrainResult.divergences``.
+* ``replay`` — ``"uniform"`` (default) or ``"prioritized"`` (DQN/DDPG).
+  Prioritized experience replay on a fully-JAX sum-tree (``rl.buffer``):
+  the learner samples proportionally to
+  ``(|td| + eps) ** priority_exponent``, corrects the bias with
+  importance-sampling weights annealed from ``is_beta`` to 1, and pushes
+  refreshed |TD| priorities after every update.  Under the actor–learner
+  topology every shard owns its own tree and priority pushes stay inside
+  the shard_map.  ``priority_exponent=0.0`` is bitwise-uniform (static
+  dispatch onto the uniform path — the ``num_actors=1, sync_every=1``
+  contract style).
 """
 from __future__ import annotations
 
@@ -47,6 +57,7 @@ import numpy as np
 from repro.core import metrics as metrics_lib
 from repro.core.qconfig import QuantConfig, QuantMode
 from repro.rl import a2c, actor_learner, actorq, common, ddpg, dqn, ppo
+from repro.rl import buffer as rb
 from repro.rl.env import Env, evaluate
 from repro.rl.envs import make as make_env
 from repro.rl.networks import make_network
@@ -150,7 +161,9 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
           steps_per_call: int = 1,
           actor_backend: str = "fp32",
           topology: str = "fused", num_actors: int = 1,
-          sync_every: int = 1, mesh=None) -> TrainResult:
+          sync_every: int = 1, mesh=None,
+          replay: str = "uniform", priority_exponent: float = 0.6,
+          is_beta: float = 0.4) -> TrainResult:
     """Train ``algo`` on ``env_name``.
 
     ``steps_per_call > 1`` enables the scan-fused driver (see module
@@ -166,12 +179,28 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
     ActorQ paradigm with ``num_actors`` replicas and a ``sync_every``
     staleness cadence — see ``rl.actor_learner``; ``mesh`` optionally
     shards the actor axis over devices.
+
+    ``replay="prioritized"`` (DQN/DDPG) samples learner batches
+    proportionally to per-transition ``(|td| + eps) ** priority_exponent``
+    from a fully-JAX sum-tree (per actor shard under the actor–learner
+    topology) with importance-sampling correction annealed from
+    ``is_beta`` to 1 — see ``rl.buffer``.  ``priority_exponent=0.0``
+    degrades to bitwise-uniform sampling.
     """
     actorq.validate_actor_backend(actor_backend)
     actor_learner.validate_topology(topology)
+    rb.validate_replay(replay)
     env = make_env(env_name)
     overrides = dict(algo_overrides or {})
     overrides.setdefault("actor_backend", actor_backend)
+    if algo in actor_learner.ALGOS:      # the replay algorithms (DQN/DDPG)
+        overrides.setdefault("replay", replay)
+        overrides.setdefault("priority_exponent", priority_exponent)
+        overrides.setdefault("is_beta", is_beta)
+    elif rb.validate_replay(overrides.get("replay", replay)) != "uniform":
+        raise ValueError(
+            f"replay='prioritized' needs a replay algorithm "
+            f"{actor_learner.ALGOS}; {algo!r} is on-policy")
     net, cfg = _build(algo, env, quant, net_kwargs or {}, overrides)
     mod = {"dqn": dqn, "a2c": a2c, "ppo": ppo, "ddpg": ddpg}[algo]
     key = jax.random.PRNGKey(seed)

@@ -1,0 +1,217 @@
+"""Prioritized replay wiring tests (ISSUE 3 acceptance contract).
+
+* ``priority_exponent=0.0`` parity — ``replay="prioritized"`` with a zero
+  exponent is *bitwise identical* to ``replay="uniform"`` for DQN and DDPG
+  under both topologies, including the scan-fused driver and int8 actors
+  (the wiring statically dispatches alpha=0 onto the uniform path, the
+  same by-construction contract as ``num_actors=1, sync_every=1``),
+* seed determinism — identical seeds give identical ``TrainResult``
+  (params, rewards, divergences) for ``kernel_backend`` in
+  {ref, interpret}: the while/fori-loop tree sampling draws every bit from
+  the traced PRNG chain, no hidden host-side RNG,
+* prioritized sampling genuinely changes (and on sparse-reward Catch,
+  accelerates) learning — the slow-marked convergence test,
+* the sharded trees run inside an 8-device shard_map (slow, subprocess).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.rl import loops
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SMALL_DQN = dict(n_envs=4, rollout_steps=4, updates_per_iter=2,
+                 buffer_size=512, batch_size=16, warmup=8)
+SMALL_DDPG = dict(n_envs=4, rollout_steps=4, updates_per_iter=2,
+                  buffer_size=512, batch_size=16, warmup=8)
+
+
+def _leaves(tree):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+
+
+def _assert_bitwise_equal(a: loops.TrainResult, b: loops.TrainResult):
+    for x, y in zip(_leaves(a.state.params), _leaves(b.state.params)):
+        np.testing.assert_array_equal(x, y)
+    assert a.rewards == b.rewards
+    assert a.divergences == b.divergences
+
+
+# ---------------------------------------------------------------------------
+# alpha=0 parity: prioritized degrades to bitwise-uniform
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo,env,overrides,topo_kw,extra", [
+    ("dqn", "cartpole", SMALL_DQN, {}, {}),
+    ("dqn", "cartpole", SMALL_DQN,
+     dict(topology="actor-learner", num_actors=2, sync_every=2), {}),
+    ("ddpg", "pendulum", SMALL_DDPG, {}, {}),
+    ("ddpg", "pendulum", SMALL_DDPG,
+     dict(topology="actor-learner", num_actors=2, sync_every=2), {}),
+    # scan-fused driver + int8 actors keep the contract
+    ("dqn", "cartpole", SMALL_DQN,
+     dict(topology="actor-learner", num_actors=2, sync_every=1),
+     dict(steps_per_call=3, actor_backend="int8")),
+    ("ddpg", "pendulum", SMALL_DDPG, {},
+     dict(steps_per_call=3, actor_backend="int8")),
+])
+def test_priority_exponent_zero_is_bitwise_uniform(algo, env, overrides,
+                                                   topo_kw, extra):
+    kw = dict(iterations=6, record_every=3, eval_episodes=2, seed=13,
+              algo_overrides=dict(overrides), **topo_kw, **extra)
+    uniform = loops.train(algo, env, replay="uniform", **kw)
+    alpha0 = loops.train(algo, env, replay="prioritized",
+                         priority_exponent=0.0, **kw)
+    _assert_bitwise_equal(uniform, alpha0)
+
+
+def test_priority_exponent_nonzero_changes_sampling():
+    """Sanity counterpart: alpha > 0 must NOT match the uniform run."""
+    kw = dict(iterations=6, record_every=3, eval_episodes=2, seed=13,
+              algo_overrides=dict(SMALL_DQN, warmup=8))
+    uniform = loops.train("dqn", "cartpole", replay="uniform", **kw)
+    per = loops.train("dqn", "cartpole", replay="prioritized",
+                      priority_exponent=0.6, **kw)
+    assert any(not np.array_equal(x, y) for x, y in
+               zip(_leaves(uniform.state.params),
+                   _leaves(per.state.params)))
+
+
+def test_prioritized_state_carries_sum_tree():
+    from repro.rl import buffer as rb
+    res = loops.train("dqn", "cartpole", replay="prioritized",
+                      iterations=4, record_every=2, eval_episodes=2,
+                      seed=0, algo_overrides=dict(SMALL_DQN))
+    per = res.state.extras.replay
+    assert isinstance(per, rb.PrioritizedReplayState)
+    root = float(rb.sum_tree_total(per.tree))
+    leaves = np.asarray(rb.sum_tree_leaves(per.tree))
+    assert root > 0 and np.isfinite(leaves).all()
+    np.testing.assert_allclose(root, leaves.sum(), rtol=1e-4)
+    # priorities were actually pushed: not all leaves still at max_priority
+    written = leaves[:int(per.replay.size)]
+    assert len(np.unique(np.round(written, 6))) > 1
+
+
+# ---------------------------------------------------------------------------
+# seed determinism: no hidden host-side RNG in the tree sampling
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel_backend", ["ref", "interpret"])
+def test_seed_determinism_across_backends(kernel_backend):
+    kw = dict(iterations=4, record_every=2, eval_episodes=2, seed=5,
+              replay="prioritized", topology="actor-learner", num_actors=2,
+              sync_every=2, actor_backend="int8",
+              algo_overrides=dict(SMALL_DQN,
+                                  kernel_backend=kernel_backend))
+    a = loops.train("dqn", "cartpole", **kw)
+    b = loops.train("dqn", "cartpole", **kw)
+    _assert_bitwise_equal(a, b)
+    for x, y in zip(_leaves(a.state.extras.replay),
+                    _leaves(b.state.extras.replay)):
+        np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# convergence: prioritized beats uniform on sparse-reward Catch
+# ---------------------------------------------------------------------------
+
+CATCH_CFG = dict(n_envs=8, rollout_steps=8, updates_per_iter=4,
+                 buffer_size=8192, batch_size=32, warmup=256,
+                 eps_decay_updates=800, target_update_every=100)
+CATCH_NET = dict(conv_filters=(8, 8), fc_width=32)
+
+
+def _updates_to_threshold(rewards, record_every, updates_per_iter,
+                          threshold):
+    """Learner updates consumed until the eval reward first clears the
+    threshold (np.inf if it never does)."""
+    for i, r in enumerate(rewards):
+        if r >= threshold:
+            return (i + 1) * record_every * updates_per_iter
+    return np.inf
+
+
+@pytest.mark.slow
+def test_prioritized_reaches_catch_threshold_in_fewer_updates():
+    """ISSUE acceptance: on sparse-reward Catch the prioritized learner
+    clears the reward threshold in fewer learner updates than uniform.
+
+    Measured margin at this seed/config (jax 0.4.37, CPU): prioritized
+    crosses +2.0 around iteration 450, uniform around 600 (of 800) — a
+    ~3-record-point gap on both of the seeds probed.
+    """
+    threshold = 2.0    # mean eval return over [-5, 5]; random play ~ -5
+    kw = dict(iterations=800, record_every=50, eval_episodes=16, seed=0,
+              steps_per_call=25, net_kwargs=dict(CATCH_NET),
+              algo_overrides=dict(CATCH_CFG))
+    uniform = loops.train("dqn", "catch", replay="uniform", **kw)
+    per = loops.train("dqn", "catch", replay="prioritized", **kw)
+    n_uniform = _updates_to_threshold(
+        uniform.rewards, 50, CATCH_CFG["updates_per_iter"], threshold)
+    n_per = _updates_to_threshold(
+        per.rewards, 50, CATCH_CFG["updates_per_iter"], threshold)
+    assert np.isfinite(n_per), f"prioritized never reached {threshold}: " \
+        f"{per.rewards}"
+    assert n_per < n_uniform, (
+        f"prioritized needed {n_per} learner updates, uniform {n_uniform} "
+        f"(uniform {uniform.rewards} vs prioritized {per.rewards})")
+
+
+# ---------------------------------------------------------------------------
+# sharded trees under a real device mesh (shard_map)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_prioritized_actor_learner_mesh():
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import contextlib
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.rl import actor_learner, dqn
+        from repro.rl.envs import make as make_env
+        from repro.rl.networks import make_network
+
+        def mesh_ctx(mesh):
+            for name in ("set_mesh", "use_mesh"):
+                if hasattr(jax.sharding, name):
+                    return getattr(jax.sharding, name)(mesh)
+            return contextlib.nullcontext()
+
+        env = make_env("cartpole")
+        cfg = dqn.DQNConfig(n_envs=4, rollout_steps=4, updates_per_iter=2,
+                            buffer_size=512, batch_size=32, warmup=16,
+                            replay="prioritized")
+        net = make_network(env.spec.obs_shape, env.spec.n_actions)
+        al = actor_learner.ActorLearnerConfig(num_actors=4, sync_every=2)
+        mesh = jax.make_mesh((4,), ("actor",))
+        state = actor_learner.init(jax.random.PRNGKey(0), env, net, "dqn",
+                                   cfg, al)
+        iteration, act_fn, benv = actor_learner.make_actor_learner(
+            "dqn", env, net, cfg, al, mesh=mesh)
+        env_state, obs = benv.reset(jax.random.PRNGKey(1))
+        key = jax.random.PRNGKey(2)
+        with mesh_ctx(mesh):
+            for i in range(3):
+                key, k = jax.random.split(key)
+                state, env_state, obs, m = iteration(state, env_state, obs,
+                                                     k)
+                assert jnp.isfinite(m["loss"]), m
+        roots = np.asarray(state.learner.extras.replay.tree[:, 1])
+        assert roots.shape == (4,)
+        assert np.isfinite(roots).all() and (roots > 0).all(), roots
+        print("PER_MESH_OK", roots)
+    """)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, env=env,
+                         timeout=400)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "PER_MESH_OK" in out.stdout

@@ -1,0 +1,256 @@
+"""Property-based tests for the prioritized replay sum-tree (ISSUE 3).
+
+Replay invariants are exactly what example-based tests miss, so the whole
+surface is driven by hypothesis (via ``tests/hypcompat.py`` — property
+tests skip cleanly where hypothesis is not installed) plus deterministic
+anchors that always run:
+
+* total priority mass equals the root after arbitrary add/update sequences,
+* the sampled index distribution matches the normalized priorities
+  (chi-squared tolerance),
+* ``per_sample`` never returns an unwritten slot, at any fill level,
+* sharded stack/unstack round-trips preserve the trees bitwise.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypcompat import given, settings, st  # guarded hypothesis import
+
+from repro.rl import buffer as rb
+
+
+def _transitions(n, obs_dim=3, offset=0):
+    r = np.arange(offset, offset + n, dtype=np.float32)
+    return rb.Transition(
+        obs=jnp.asarray(np.tile(r[:, None], (1, obs_dim))),
+        action=jnp.asarray(r.astype(np.int32)),
+        reward=jnp.asarray(r),
+        done=jnp.zeros((n,), jnp.float32),
+        next_obs=jnp.asarray(np.tile(r[:, None] + 0.5, (1, obs_dim))))
+
+
+def _leaves(tree):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+
+
+# ---------------------------------------------------------------------------
+# mass conservation: root == sum of leaves == oracle, under arbitrary ops
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(3, 17),
+       st.lists(st.one_of(
+           st.tuples(st.just("add"), st.integers(1, 7)),
+           st.tuples(st.just("update"),
+                     st.lists(st.tuples(st.integers(0, 30),
+                                        st.floats(0.0, 10.0)),
+                              min_size=1, max_size=5))),
+           min_size=1, max_size=12))
+def test_total_mass_equals_root_after_arbitrary_ops(capacity, ops):
+    """Numpy oracle replays the same op sequence; root must track it."""
+    state = rb.per_init(capacity, (3,))
+    tsize = state.tree.shape[0] // 2
+    oracle = np.zeros(tsize, np.float64)
+    max_p, cursor, written = 1.0, 0, 0
+    for op, arg in ops:
+        if op == "add":
+            state = rb.per_add(state, _transitions(arg, offset=cursor))
+            for j in range(arg):
+                oracle[(cursor + j) % capacity] = max_p
+            cursor += arg
+            written = min(written + arg, capacity)
+        else:
+            # only update slots that exist (the learner only ever pushes
+            # priorities for indices it sampled, i.e. written ones)
+            if written == 0:
+                continue
+            idx = np.asarray([i % written for i, _ in arg], np.int32)
+            td = np.asarray([t for _, t in arg], np.float32)
+            # duplicate indices must carry equal values (the PER contract:
+            # duplicates in a batch are the same transition / same TD)
+            seen = {}
+            for k, i in enumerate(idx):
+                td[k] = seen.setdefault(int(i), td[k])
+            state = rb.per_update_priorities(state, jnp.asarray(idx),
+                                             jnp.asarray(td), 0.6)
+            p = (np.abs(td) + 1e-6) ** 0.6
+            oracle[idx] = p
+            max_p = max(max_p, float(p.max()))
+    root = float(rb.sum_tree_total(state.tree))
+    leaves = np.asarray(rb.sum_tree_leaves(state.tree), np.float64)
+    np.testing.assert_allclose(root, leaves.sum(), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(leaves, oracle, rtol=1e-4, atol=1e-5)
+    assert int(state.replay.size) == written
+
+
+def test_total_mass_anchor_deterministic():
+    """Non-hypothesis anchor for containers without hypothesis installed."""
+    state = rb.per_init(10, (3,))
+    state = rb.per_add(state, _transitions(7))
+    assert np.isclose(float(rb.sum_tree_total(state.tree)), 7.0)
+    state = rb.per_update_priorities(
+        state, jnp.asarray([0, 3, 6]), jnp.asarray([2.0, 0.25, 1.0]), 0.6)
+    leaves = np.asarray(rb.sum_tree_leaves(state.tree))
+    np.testing.assert_allclose(float(rb.sum_tree_total(state.tree)),
+                               leaves.sum(), rtol=1e-6)
+    want = (np.abs([2.0, 0.25, 1.0]) + 1e-6) ** 0.6
+    np.testing.assert_allclose(leaves[[0, 3, 6]], want, rtol=1e-5)
+    # wrap-around: 5 more adds overwrite slots 7,8,9,0,1 at max_priority
+    state = rb.per_add(state, _transitions(5, offset=7))
+    leaves = np.asarray(rb.sum_tree_leaves(state.tree))
+    np.testing.assert_allclose(float(rb.sum_tree_total(state.tree)),
+                               leaves.sum(), rtol=1e-6)
+    mp = float(state.max_priority)
+    np.testing.assert_allclose(leaves[[7, 8, 9, 0, 1]], mp, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sampled distribution matches normalized priorities (chi-squared)
+# ---------------------------------------------------------------------------
+
+def _chi_squared(counts, probs):
+    n = counts.sum()
+    expected = probs * n
+    mask = expected > 0
+    return float(((counts[mask] - expected[mask]) ** 2
+                  / expected[mask]).sum())
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.floats(0.05, 5.0), min_size=4, max_size=12),
+       st.integers(0, 2 ** 31 - 1))
+def test_sample_distribution_matches_priorities(priorities, seed):
+    state = rb.per_init(len(priorities), (2,))
+    state = rb.per_add(state, _transitions(len(priorities), obs_dim=2))
+    td = jnp.asarray(priorities, jnp.float32)
+    # alpha=1 so the tree holds (p + eps) directly
+    state = rb.per_update_priorities(
+        state, jnp.arange(len(priorities)), td, 1.0)
+    n_samples = 40_000
+    _, idx, _ = rb.per_sample(state, jax.random.PRNGKey(seed), n_samples,
+                              1.0)
+    counts = np.bincount(np.asarray(idx), minlength=len(priorities))
+    leaves = np.asarray(rb.sum_tree_leaves(state.tree))[:len(priorities)]
+    probs = leaves / leaves.sum()
+    # chi-squared 99.9%-ile for df <= 11 is < 32; allow slack for the
+    # float32 tree
+    assert _chi_squared(counts.astype(np.float64), probs) < 45.0, (
+        counts, probs)
+
+
+def test_sample_distribution_anchor_deterministic():
+    state = rb.per_init(8, (2,))
+    state = rb.per_add(state, _transitions(8, obs_dim=2))
+    td = jnp.asarray([8.0, 4.0, 2.0, 1.0, 1.0, 2.0, 4.0, 8.0])
+    state = rb.per_update_priorities(state, jnp.arange(8), td, 1.0)
+    _, idx, _ = rb.per_sample(state, jax.random.PRNGKey(0), 60_000, 1.0)
+    counts = np.bincount(np.asarray(idx), minlength=8)
+    leaves = np.asarray(rb.sum_tree_leaves(state.tree))[:8]
+    probs = leaves / leaves.sum()
+    assert _chi_squared(counts.astype(np.float64), probs) < 40.0, (
+        counts / counts.sum(), probs)
+    # the sampled batch carries the right transitions for its indices
+    batch, idx, _ = rb.per_sample(state, jax.random.PRNGKey(1), 64, 1.0)
+    np.testing.assert_array_equal(np.asarray(batch.action),
+                                  np.asarray(idx))
+
+
+def test_is_weights_uniform_at_equal_priorities_and_beta_scaling():
+    state = rb.per_init(8, (2,))
+    state = rb.per_add(state, _transitions(8, obs_dim=2))
+    state = rb.per_update_priorities(state, jnp.arange(8),
+                                     jnp.ones((8,)), 1.0)
+    _, _, w = rb.per_sample(state, jax.random.PRNGKey(0), 32, 0.7)
+    np.testing.assert_allclose(np.asarray(w), 1.0, rtol=1e-5)
+    # skewed priorities: rarer transitions get larger IS weights
+    state = rb.per_update_priorities(
+        state, jnp.arange(8),
+        jnp.asarray([9.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0]), 1.0)
+    _, idx, w = rb.per_sample(state, jax.random.PRNGKey(1), 256, 1.0)
+    idx, w = np.asarray(idx), np.asarray(w)
+    if (idx == 0).any() and (idx != 0).any():
+        assert w[idx == 0].max() < w[idx != 0].min()
+
+
+# ---------------------------------------------------------------------------
+# no unwritten slots, at any fill level
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 16), st.integers(1, 40), st.integers(0, 2 ** 31 - 1))
+def test_per_sample_never_returns_unwritten_slot(capacity, n_add, seed):
+    state = rb.per_init(capacity, (3,))
+    state = rb.per_add(state, _transitions(n_add))
+    size = int(state.replay.size)
+    assert size == min(n_add, capacity)
+    _, idx, w = rb.per_sample(state, jax.random.PRNGKey(seed), 64, 0.4)
+    idx = np.asarray(idx)
+    assert (idx >= 0).all() and (idx < size).all(), (idx, size)
+    assert np.isfinite(np.asarray(w)).all()
+
+
+def test_per_sample_unwritten_anchor_deterministic():
+    for n_add in (1, 3, 5):
+        state = rb.per_init(8, (3,))
+        state = rb.per_add(state, _transitions(n_add))
+        for seed in range(4):
+            _, idx, _ = rb.per_sample(state, jax.random.PRNGKey(seed),
+                                      128, 0.4)
+            assert np.asarray(idx).max() < n_add
+    # empty buffer: clamped to slot 0, finite weights (warmup discards it)
+    state = rb.per_init(8, (3,))
+    _, idx, w = rb.per_sample(state, jax.random.PRNGKey(0), 16, 0.4)
+    assert (np.asarray(idx) == 0).all()
+    assert np.isfinite(np.asarray(w)).all()
+
+
+# ---------------------------------------------------------------------------
+# sharded stack/unstack round-trips preserve trees
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 4), st.lists(st.integers(0, 9), min_size=1,
+                                   max_size=4))
+def test_sharded_stack_unstack_round_trip(n_shards, fills):
+    shards = []
+    for i in range(n_shards):
+        s = rb.per_init(8, (3,))
+        n = fills[i % len(fills)]
+        if n:
+            s = rb.per_add(s, _transitions(n, offset=10 * i))
+            s = rb.per_update_priorities(
+                s, jnp.zeros((1,), jnp.int32),
+                jnp.full((1,), 1.0 + i), 0.6)
+        shards.append(s)
+    stacked = rb.per_stack(shards)
+    assert stacked.replay.size.shape == (n_shards,)
+    assert stacked.tree.shape == (n_shards, 2 * 8)
+    back = rb.per_unstack(stacked)
+    assert len(back) == n_shards
+    for orig, got in zip(shards, back):
+        for a, b in zip(_leaves(orig), _leaves(got)):
+            np.testing.assert_array_equal(a, b)
+    # per-shard roots survive the round trip through the stacked layout
+    for i, orig in enumerate(shards):
+        np.testing.assert_array_equal(
+            np.asarray(stacked.tree[i, 1]),
+            np.asarray(rb.sum_tree_total(orig.tree)))
+
+
+def test_sharded_ops_match_independent_shards():
+    """vmap'd sharded ops == running each shard's ops independently."""
+    sharded = rb.per_init_sharded(2, 8, (3,))
+    batch = jax.tree_util.tree_map(
+        lambda a, b: jnp.stack([a, b]), _transitions(5), _transitions(5, offset=5))
+    sharded = rb.per_add_sharded(sharded, batch)
+    idx = jnp.asarray([[0, 2], [1, 3]])
+    td = jnp.asarray([[1.0, 2.0], [3.0, 0.5]])
+    sharded = rb.per_update_priorities_sharded(sharded, idx, td, 0.6)
+    for i in range(2):
+        solo = rb.per_init(8, (3,))
+        solo = rb.per_add(
+            solo, jax.tree_util.tree_map(lambda x, i=i: x[i], batch))
+        solo = rb.per_update_priorities(solo, idx[i], td[i], 0.6)
+        got = jax.tree_util.tree_map(lambda x, i=i: x[i], sharded)
+        for a, b in zip(_leaves(solo), _leaves(got)):
+            np.testing.assert_array_equal(a, b)

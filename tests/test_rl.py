@@ -134,6 +134,40 @@ def test_prop_replay_size_invariant(n1, n2):
     assert int(state.index) == (n1 + n2) % cap
 
 
+def test_uniform_sample_restricted_to_written_prefix():
+    """At ``size < capacity`` sampling must stay inside the written prefix
+    — a partially-filled buffer never yields garbage (all-zero) slots."""
+    cap = 64
+    for n_written in (1, 3, 17):
+        state = rb.replay_init(cap, (2,))
+        batch = rb.Transition(
+            obs=jnp.ones((n_written, 2)),
+            action=jnp.arange(n_written, dtype=jnp.int32),
+            reward=1.0 + jnp.arange(n_written, dtype=jnp.float32),
+            done=jnp.zeros(n_written), next_obs=jnp.ones((n_written, 2)))
+        state = rb.replay_add_batch(state, batch)
+        for seed in range(4):
+            s = rb.replay_sample(state, jax.random.PRNGKey(seed), 32)
+            # rewards were written strictly positive; an out-of-prefix
+            # draw would surface as a 0.0 reward
+            assert float(np.asarray(s.reward).min()) >= 1.0
+            assert int(np.asarray(s.action).max()) < n_written
+
+
+def test_uniform_sample_duplicates_by_contract():
+    """Sampling is with replacement: batch_size > size must produce
+    duplicates (documented contract, not a bug)."""
+    state = rb.replay_init(8, (1,))
+    batch = rb.Transition(jnp.zeros((2, 1)), jnp.arange(2, dtype=jnp.int32),
+                          jnp.zeros((2,)), jnp.zeros((2,)),
+                          jnp.zeros((2, 1)))
+    state = rb.replay_add_batch(state, batch)
+    s = rb.replay_sample(state, jax.random.PRNGKey(0), 16)
+    actions = np.asarray(s.action)
+    assert len(np.unique(actions)) <= 2
+    assert len(actions) == 16
+
+
 # ---------------------------------------------------------------------------
 # Algorithms (short runs: learning signal, not convergence)
 # ---------------------------------------------------------------------------
