@@ -20,6 +20,35 @@ sys.path.insert(0, _ROOT)                       # the benchmarks package
 sys.path.insert(0, os.path.join(_ROOT, "src"))  # the repro package
 
 
+def _check_actor_learner_schema() -> None:
+    """Schema gate on the emitted ``BENCH_actor_learner.json`` (ISSUE 4):
+    the async overlap section must be present, every throughput field must
+    be finite and positive (a NaN/zero rate means a cell silently broke),
+    and every async row must carry both concurrently-measured rates."""
+    import json
+    import math
+
+    path = os.path.join(_ROOT, "artifacts", "bench",
+                        "BENCH_actor_learner.json")
+    with open(path) as f:
+        rows = json.load(f)
+    async_rows = [r for r in rows
+                  if r.get("section") == "actor_learner_async"]
+    assert async_rows, "async overlap section missing from " + path
+    for r in rows:
+        for k in ("env_steps_per_sec", "learner_samples_per_sec",
+                  "learner_updates_per_sec"):
+            if k in r:
+                v = float(r[k])
+                assert math.isfinite(v) and v > 0, (k, r)
+    for r in async_rows:
+        for k in ("env_steps_per_sec", "learner_updates_per_sec",
+                  "speedup_env_steps_vs_sync"):
+            assert k in r and math.isfinite(float(r[k])), (k, r)
+    print(f"BENCH_actor_learner.json schema OK "
+          f"({len(async_rows)} async overlap rows)")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--fast", action="store_true",
@@ -60,7 +89,9 @@ def main(argv=None) -> None:
             ("table5_deployment", lambda: deployment.run(iterations=100)),
             ("actorq_throughput",
              lambda: actor_throughput.run(train_iterations=30)),
-            ("actor_learner_topology", lambda: actor_learner.run(iters=10)),
+            ("actor_learner_topology",
+             lambda: (actor_learner.run(iters=10),
+                      _check_actor_learner_schema())),
         ]
     else:
         jobs = [
@@ -72,7 +103,9 @@ def main(argv=None) -> None:
             ("fig5_mp_convergence", mixed_precision.convergence_check),
             ("table5_deployment", deployment.run),
             ("actorq_throughput", actor_throughput.run),
-            ("actor_learner_topology", actor_learner.run),
+            ("actor_learner_topology",
+             lambda: (actor_learner.run(),
+                      _check_actor_learner_schema())),
         ]
     jobs.append(("roofline", roofline.main))
 

@@ -35,10 +35,10 @@ def _serve_policy(args) -> int:
 
     env = make_env(args.rl_env)
     topo_kw = {}
-    if args.topology == "actor-learner":
+    if args.topology in ("actor-learner", "async"):
         # replay algorithms only (the paper's DQN/D4PG analogues)
         algo = "dqn" if not env.spec.continuous else "ddpg"
-        topo_kw = dict(topology="actor-learner",
+        topo_kw = dict(topology=args.topology,
                        num_actors=args.num_actors,
                        sync_every=args.sync_every)
     else:
@@ -58,11 +58,18 @@ def _serve_policy(args) -> int:
     if algo in REPLAY_ALGOS and args.replay == "prioritized":
         print(f"[serve-rl] prioritized replay: alpha="
               f"{args.priority_exponent} is_beta={args.is_beta}")
-    if args.topology == "actor-learner" and res.divergences:
+    if args.topology in ("actor-learner", "async") and res.divergences:
         div = ", ".join(f"{d:.4f}" for d in res.divergences[-1])
-        print(f"[serve-rl] actor-learner ({algo}): {args.num_actors} "
-              f"actors, sync_every={args.sync_every}, last per-actor "
-              f"divergence [{div}]")
+        unit = "learner updates" if args.topology == "async" \
+            else "iterations"
+        print(f"[serve-rl] {args.topology} ({algo}): {args.num_actors} "
+              f"actors, sync_every={args.sync_every} {unit}, last "
+              f"per-actor divergence [{div}]")
+    if args.topology == "async" and res.actor_lags:
+        print(f"[serve-rl] async overlap: {len(res.actor_lags)} param "
+              f"pushes, mean actor lag "
+              f"{sum(res.actor_lags) / len(res.actor_lags):.1f} learner "
+              f"updates")
     params = res.state.params
     fp32_bytes = ptq.tree_nbytes(params)
 
@@ -129,16 +136,20 @@ def main(argv=None) -> int:
     ap.add_argument("--steps-per-call", type=int, default=10,
                     help="scan-fused driver chunk for --rl-env training")
     ap.add_argument("--topology", default="fused",
-                    choices=["fused", "actor-learner"],
+                    choices=["fused", "actor-learner", "async"],
                     help="--rl-env training topology. actor-learner = the "
-                         "paper's distributed ActorQ paradigm; NB it needs "
-                         "a replay algorithm, so discrete envs train DQN "
-                         "there vs PPO under fused (the printed summary "
-                         "names the algo)")
+                         "paper's distributed ActorQ paradigm "
+                         "(bulk-synchronous); async = overlapped actors/"
+                         "learner over a double-buffered replay (no "
+                         "host barrier). Both need a replay algorithm, so "
+                         "discrete envs train DQN there vs PPO under "
+                         "fused (the printed summary names the algo)")
     ap.add_argument("--num-actors", type=int, default=2,
-                    help="actor replicas for --topology actor-learner")
+                    help="actor replicas for the actor-learner topologies")
     ap.add_argument("--sync-every", type=int, default=1,
-                    help="learner->actor param push cadence (iterations)")
+                    help="learner->actor param push cadence: iterations "
+                         "under --topology actor-learner, learner "
+                         "*updates* under --topology async")
     ap.add_argument("--replay", default="uniform",
                     choices=["uniform", "prioritized"],
                     help="--rl-env replay discipline (DQN/DDPG): "

@@ -1,9 +1,9 @@
 """RL substrate: pure-JAX envs + DQN/A2C/PPO/DDPG + the QuaRL pipelines."""
-from repro.rl import (a2c, buffer, common, ddpg, distributed, dqn, env,
-                      loops, networks, ppo)
+from repro.rl import (a2c, actor_learner, actorq, buffer, common, ddpg,
+                      distributed, dqn, env, loops, networks, ppo)
 from repro.rl.loops import train, quarl_ptq, quarl_qat, QuarlResult
 
-__all__ = ["a2c", "buffer", "common", "ddpg", "distributed", "dqn",
-           "env", "loops",
+__all__ = ["a2c", "actor_learner", "actorq", "buffer", "common", "ddpg",
+           "distributed", "dqn", "env", "loops",
            "networks", "ppo", "train", "quarl_ptq", "quarl_qat",
            "QuarlResult"]

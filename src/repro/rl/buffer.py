@@ -28,8 +28,18 @@ Two layouts, orthogonal to the discipline:
   pushes stay shard-local (no gather across the actor axis).
   ``replay_stack`` / ``replay_unstack`` (and ``per_stack`` /
   ``per_unstack``) round-trip between the two layouts.
+
+Plus the **double-buffer layout** for the async actor–learner topology
+(``DoubleBuffer``): two *independent* sharded buffers — a write slot the
+actors fill and a read slot the learner drains — swapped at sync points.
+The two slots are deliberately separate pytrees (NOT stacked on a new
+axis): the async driver carries the write slot through the actor jit
+program and the read slot through the learner jit program, so the two
+dispatch chains share no buffers and the runtime is free to overlap them.
+``double_buffer_swap`` is a host-level reference exchange — no device op,
+no synchronization.
 """
-from typing import List, NamedTuple
+from typing import Any, List, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -167,6 +177,56 @@ def replay_unstack(state: ReplayState) -> List[ReplayState]:
     """Inverse of ``replay_stack`` — split the shard axis back out."""
     n = state.size.shape[0]
     return [jax.tree_util.tree_map(lambda x: x[i], state) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Double-buffer layout (async actor-learner: write slot / read slot)
+# ---------------------------------------------------------------------------
+
+class DoubleBuffer(NamedTuple):
+    """Two independent buffer pytrees: actors fill ``write``, the learner
+    drains ``read``.
+
+    Both slots keep the circular/sharded semantics of whatever discipline
+    they hold (``ReplayState`` or ``PrioritizedReplayState``, single or
+    sharded layout).  Invariants the async driver relies on:
+
+    * the slots never share a single array — they are created by two
+      separate ``*_init`` calls, so the actor program (which consumes and
+      donates ``write``) and the learner program (which consumes and
+      donates ``read`` inside the learner state) have disjoint buffer
+      sets and therefore no cross-program data dependency within a sync
+      period;
+    * ``double_buffer_swap`` exchanges the *references* on the host — the
+      freshly-written slot becomes the learner's next read slot and the
+      drained slot becomes the actors' next write slot.  It dispatches no
+      device work and never blocks, so it is safe to call between two
+      in-flight jit programs (the swap just rewires which futures feed
+      which next dispatch);
+    * each slot holds half the total replay capacity, so transitions
+      written during one sync period become sampleable in the next —
+      one-period data latency is the price of the overlap.
+    """
+    read: Any
+    write: Any
+
+
+def double_buffer_init(init_fn, n_shards: int, capacity: int, *args,
+                       **kwargs) -> DoubleBuffer:
+    """Two independent slots of ``capacity`` each via ``init_fn``
+    (``replay_init_sharded`` / ``per_init_sharded``)."""
+    return DoubleBuffer(read=init_fn(n_shards, capacity, *args, **kwargs),
+                        write=init_fn(n_shards, capacity, *args, **kwargs))
+
+
+def double_buffer_swap(db: DoubleBuffer) -> DoubleBuffer:
+    """Host-level reference exchange (see ``DoubleBuffer``); free."""
+    return DoubleBuffer(read=db.write, write=db.read)
+
+
+def double_buffer_total_size(db: DoubleBuffer) -> jnp.ndarray:
+    """Valid entries across both slots (and all shards)."""
+    return replay_total_size(db.read) + replay_total_size(db.write)
 
 
 # ---------------------------------------------------------------------------

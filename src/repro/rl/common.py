@@ -76,12 +76,17 @@ def per_beta(state: TrainState, cfg) -> jnp.ndarray:
     """IS-correction exponent for this learner step.
 
     Anneals ``cfg.is_beta -> 1`` linearly over ``is_beta_anneal_updates``
-    counted on ``state.step`` — the unconditional learner-step counter both
-    DQN and DDPG carry, so the same knobs give the same effective schedule
-    for every algorithm (warmup steps, whose parameter updates are
-    discarded, count too; warmup is short relative to the anneal horizon).
+    counted on ``state.extras.updates`` — the *learner-update* counter both
+    DQN and DDPG carry in their extras, which advances only when an update
+    actually lands (warmup steps, whose parameter updates are discarded,
+    do not move the schedule).  Counting real updates makes the schedule
+    driver-independent: the fused per-step loop, the scan-fused driver
+    (``steps_per_call > 1``) and both actor–learner topologies all reach
+    ``beta == 1.0`` at exactly ``is_beta_anneal_updates`` learner updates.
+    (``state.step``, the unconditional per-call counter, would instead
+    anneal on attempted calls — warmup- and chunking-dependent.)
     """
-    return linear_epsilon(state.step, cfg.is_beta, 1.0,
+    return linear_epsilon(state.extras.updates, cfg.is_beta, 1.0,
                           cfg.is_beta_anneal_updates)
 
 

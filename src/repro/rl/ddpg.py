@@ -52,6 +52,10 @@ class DDPGExtras(NamedTuple):
     target_critic: Any
     critic_opt: AdamState
     replay: rb.ReplayState
+    # learner updates that actually landed (warmup-discarded calls excluded);
+    # drives the IS-beta anneal (common.per_beta) and the async staleness
+    # accounting — the counter every replay algorithm's extras must carry
+    updates: jnp.ndarray
 
 
 class DDPGNets(NamedTuple):
@@ -88,7 +92,7 @@ def init(key, env: Env, nets: DDPGNets, cfg: DDPGConfig):
         params=actor_params, opt=opt, observers={},
         step=jnp.zeros((), jnp.int32),
         extras=DDPGExtras(critic_params, target_actor, target_critic,
-                          copt, replay))
+                          copt, replay, jnp.zeros((), jnp.int32)))
 
 
 def _actor_out(nets, cfg, params, obs, observers, step):
@@ -99,17 +103,20 @@ def _actor_out(nets, cfg, params, obs, observers, step):
 
 
 def make_behaviour_policy(env: Env, nets: DDPGNets, cfg: DDPGConfig):
-    """``build(params, observers, step) -> policy(_, obs, key)``.
+    """``build(params, observers, step, qparams=None) -> policy(_, obs, key)``.
 
     Gaussian-noise exploration over the deterministic actor.  With
     ``actor_backend="int8"`` the mu head runs through the packed int8 actor
-    (one pack per build = per learner update); noise/clip/scale stay fp32.
+    (one pack per build = per learner update, or the caller's carried
+    ``qparams`` cache — see ``dqn.make_behaviour_policy``); noise/clip/scale
+    stay fp32.
     """
     scale = env.spec.action_scale
 
-    def build(params, observers, step):
+    def build(params, observers, step, qparams=None):
         if cfg.actor_backend == "int8":
-            qparams = actorq.pack_actor_params(params)
+            if qparams is None:
+                qparams = actorq.pack_actor_params(params)
 
             def mu_fn(obs):
                 mu = actorq.quantized_apply(qparams, obs,
@@ -212,7 +219,8 @@ def make_update(env: Env, nets: DDPGNets, cfg: DDPGConfig):
         state = common.TrainState(
             actor_params, actor_opt, new_coll2, state.step + 1,
             DDPGExtras(critic_params, target_actor, target_critic,
-                       critic_opt, ex.replay))
+                       critic_opt, ex.replay,
+                       jnp.where(warm, ex.updates + 1, ex.updates)))
         return state, (closs + aloss, td_abs)
 
     return update

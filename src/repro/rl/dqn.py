@@ -83,22 +83,26 @@ def _q_values(net, cfg, params, obs, observers, step):
 
 
 def make_behaviour_policy(env: Env, net: Network, cfg: DQNConfig):
-    """``build(params, observers, step, updates) -> policy(_, obs, key)``.
+    """``build(params, observers, step, updates, qparams=None) ->
+    policy(_, obs, key)``.
 
     The behaviour (data-collection) policy closes over the params it is
     built from — in the fused loop that is the live learner state; in the
-    actor–learner topology (``rl.actor_learner``) it is the actors' possibly
-    stale synced copy.  ``actor_backend="int8"`` packs those params into the
-    int8 cache once per build (= once per learner update), the ActorQ hot
-    path.
+    actor–learner topologies (``rl.actor_learner``) it is the actors'
+    possibly stale synced copy.  ``actor_backend="int8"`` packs those
+    params into the int8 cache once per build (= once per learner update),
+    the ActorQ hot path — unless the caller hands in an already-packed
+    ``qparams`` cache (the actor–learner topologies carry the cache across
+    iterations and repack only at sync points).
     """
-    def build(params, observers, step, updates):
+    def build(params, observers, step, updates, qparams=None):
         eps = common.linear_epsilon(updates, cfg.eps_start,
                                     cfg.eps_end, cfg.eps_decay_updates)
         if cfg.actor_backend == "int8":
             # ActorQ hot path: int8 cache packed once per learner update,
             # reused by every env step of the rollout scan.
-            qparams = actorq.pack_actor_params(params)
+            if qparams is None:
+                qparams = actorq.pack_actor_params(params)
 
             def behaviour_q(obs):
                 return actorq.quantized_apply(qparams, obs,

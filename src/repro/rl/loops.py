@@ -24,14 +24,22 @@ Hot-path knobs (ActorQ):
   pallas/interpret/ref/auto).  Rollout data collection uses the int8 actor
   for all four algorithms; evaluation uses it for every algorithm.  The
   learner's gradient path stays fp32 — exactly the paper's ActorQ split.
-* ``topology`` — ``"fused"`` (default) or ``"actor-learner"``.  The latter
-  runs the paper's distributed ActorQ paradigm (``rl.actor_learner``) for
-  the replay algorithms (DQN/DDPG): ``num_actors`` actor replicas collect
-  rollouts (int8 under ``actor_backend="int8"``) into a sharded replay
-  buffer, the fp32 learner samples per-shard batches, and refreshed params
-  reach the actors every ``sync_every`` iterations (the staleness knob).
-  Per-actor int8-vs-fp32 divergence is recorded in
-  ``TrainResult.divergences``.
+* ``topology`` — ``"fused"`` (default), ``"actor-learner"``, or
+  ``"async"``.  ``"actor-learner"`` runs the paper's distributed ActorQ
+  paradigm (``rl.actor_learner``) for the replay algorithms (DQN/DDPG):
+  ``num_actors`` actor replicas collect rollouts (int8 under
+  ``actor_backend="int8"``) into a sharded replay buffer, the fp32
+  learner samples per-shard batches, and refreshed params reach the
+  actors every ``sync_every`` iterations (the staleness knob) — one
+  iteration is bulk-synchronous.  ``"async"`` is the overlapped regime
+  the paper's speedups come from: actors and learner compile to two
+  independent jit programs over a double-buffered replay
+  (``rl.buffer.DoubleBuffer``), the host dispatches both with no
+  ``block_until_ready`` barrier, swaps the write/read slots at sync
+  points, and ``sync_every`` counts *learner updates* between param
+  pushes.  Per-actor int8-vs-fp32 divergence is recorded in
+  ``TrainResult.divergences`` at true pushes only; ``"async"``
+  additionally records per-sync actor lag (``TrainResult.actor_lags``).
 * ``replay`` — ``"uniform"`` (default) or ``"prioritized"`` (DQN/DDPG).
   Prioritized experience replay on a fully-JAX sum-tree (``rl.buffer``):
   the learner samples proportionally to
@@ -94,9 +102,15 @@ class TrainResult:
     wall_time_s: float
     algo_cfg: Any
     net: Any
-    # actor-learner topology only: per-record-point [per-actor mean-abs
-    # divergence between the actors' behaviour head and the fp32 learner]
+    # actor-learner topologies only: [per-actor mean-abs divergence between
+    # the actors' behaviour head and the fp32 learner], sampled at true
+    # param pushes only — per record point for topology="actor-learner"
+    # (the last push's value carries between records; nothing is recorded
+    # before the first push), per sync for topology="async"
     divergences: List[List[float]] = dataclasses.field(default_factory=list)
+    # topology="async" only: per sync, how many learner updates the retired
+    # actor snapshot served for (the realized staleness, >= sync_every)
+    actor_lags: List[int] = dataclasses.field(default_factory=list)
 
 
 def make_scan_iteration(iteration: Callable, steps_per_call: int):
@@ -161,7 +175,7 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
           steps_per_call: int = 1,
           actor_backend: str = "fp32",
           topology: str = "fused", num_actors: int = 1,
-          sync_every: int = 1, mesh=None,
+          sync_every: int = 1, mesh=None, async_barrier: bool = False,
           replay: str = "uniform", priority_exponent: float = 0.6,
           is_beta: float = 0.4) -> TrainResult:
     """Train ``algo`` on ``env_name``.
@@ -179,6 +193,19 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
     ActorQ paradigm with ``num_actors`` replicas and a ``sync_every``
     staleness cadence — see ``rl.actor_learner``; ``mesh`` optionally
     shards the actor axis over devices.
+
+    ``topology="async"`` (DQN/DDPG) overlaps the two: actor rollout chunks
+    (``steps_per_call`` rollouts per dispatch) and learner update chunks
+    run as independent jit programs over a double-buffered replay with no
+    host barrier between them; ``sync_every`` counts *learner updates*
+    between param pushes (each round runs
+    ``steps_per_call * updates_per_iter`` updates, so pushes land on the
+    first round boundary reaching the cadence).  ``async_barrier=True`` is
+    the equivalence-contract mode: a single replay slot threaded
+    actor -> learner serializes each round by dataflow, and with
+    ``steps_per_call=1`` + ``sync_every=updates_per_iter`` the learner
+    trajectory is bitwise identical to ``topology="actor-learner"`` with
+    ``sync_every=1`` (the anchor test).
 
     ``replay="prioritized"`` (DQN/DDPG) samples learner batches
     proportionally to per-transition ``(|td| + eps) ** priority_exponent``
@@ -205,6 +232,24 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
     mod = {"dqn": dqn, "a2c": a2c, "ppo": ppo, "ddpg": ddpg}[algo]
     key = jax.random.PRNGKey(seed)
     k_init, k_env, k_run = jax.random.split(key, 3)
+    if topology == "async":
+        if algo not in actor_learner.ALGOS:
+            raise ValueError(
+                f"topology='async' needs a replay algorithm "
+                f"{actor_learner.ALGOS}, got {algo!r}")
+        if quant.is_qat:
+            raise ValueError("async topology does not support QAT "
+                             "(the learner trains fp32; use PTQ eval)")
+        return _train_async(
+            algo, env, net, cfg, iterations=iterations,
+            record_every=record_every, eval_episodes=eval_episodes,
+            steps_per_call=steps_per_call, num_actors=num_actors,
+            sync_every=sync_every, mesh=mesh, barrier=async_barrier,
+            actor_backend=actor_backend, k_init=k_init, k_env=k_env,
+            k_run=k_run)
+    if async_barrier:
+        raise ValueError("async_barrier is an async-topology knob — pass "
+                         "topology='async'")
     if topology == "actor-learner":
         if algo not in actor_learner.ALGOS:
             raise ValueError(
@@ -273,7 +318,11 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
             rewards.append(r)
             variances.append(float(last.get(
                 "action_dist_variance", last.get("mean_q_var", 0.0))))
-            if "divergence" in last:
+            # staleness contract: the first true push happens at iteration
+            # sync_every, so record points before it would only see the
+            # init-time zeros (t=0 is not a sync — the actors hold a fresh
+            # copy by construction) and are skipped
+            if "divergence" in last and i >= sync_every:
                 divergences.append(
                     np.asarray(last["divergence"]).tolist())
     wall = time.time() - t0
@@ -282,6 +331,106 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
     return TrainResult(state=state, act_fn=act_fn, env=env, rewards=rewards,
                        action_variances=variances, wall_time_s=wall,
                        algo_cfg=cfg, net=net, divergences=divergences)
+
+
+def _train_async(algo, env, net, cfg, *, iterations, record_every,
+                 eval_episodes, steps_per_call, num_actors, sync_every,
+                 mesh, barrier, actor_backend, k_init, k_env, k_run
+                 ) -> TrainResult:
+    """The ``topology="async"`` host driver: overlapped dispatch.
+
+    Each round dispatches one actor chunk (``steps_per_call`` rollouts
+    into the write slot) and one learner chunk
+    (``steps_per_call * updates_per_iter`` updates against the read slot)
+    back-to-back — JAX's async dispatch queues both with **no**
+    ``block_until_ready`` between them; within a sync period the two
+    program chains share no buffers, so the runtime is free to overlap
+    them.  At sync points the host swaps the slots (a reference exchange,
+    no device op) and pushes a fresh param snapshot; the divergence
+    program is dispatched there too and only materialized at the end.
+    The periodic evaluation at ``record_every`` boundaries is the one
+    place the driver synchronizes (it reads rewards back to the host) —
+    between records the loop never blocks.
+
+    ``barrier=True`` threads a single replay slot actor -> learner, which
+    serializes each round by dataflow — the equivalence-contract mode
+    (see ``train``).
+    """
+    al_cfg = actor_learner.ActorLearnerConfig(num_actors=num_actors,
+                                              sync_every=sync_every)
+    progs = actor_learner.make_async_actor_learner(algo, env, net, cfg,
+                                                   al_cfg, mesh=mesh)
+    learner, wbuf = actor_learner.init_async(k_init, env, net, algo, cfg,
+                                             al_cfg, double=not barrier)
+    snap = progs.make_snapshot(learner)
+    env_state, obs = progs.benv_global.reset(k_env)
+
+    kernel_backend = getattr(cfg, "kernel_backend", "auto")
+    int8_act = actorq.make_act_fn(env.spec, backend=kernel_backend) \
+        if actor_backend == "int8" else None
+    det_act = _det_act(progs.act_fn)
+
+    rewards, variances, actor_lags = [], [], []
+    div_futs: List[Any] = []      # per-sync futures, materialized at the end
+    updates_since_push = 0
+    total_updates = 0             # learner updates dispatched (host-side)
+    snap_minted_at = 0
+    t0 = time.time()
+    i = 0
+    while i < iterations:
+        # clip rounds to record boundaries so evals land at the same
+        # iteration counts whatever the chunk size.  NB unlike the
+        # scan-fused driver the PRNG chain here is per-ROUND (one split
+        # serves the whole chunk), so different steps_per_call values are
+        # different — equally valid — trajectories; only the barrier
+        # anchor mode at steps_per_call=1 is bitwise-pinned to the
+        # synchronous topology
+        next_stop = min((i // record_every + 1) * record_every, iterations)
+        c = min(max(steps_per_call, 1), next_stop - i)
+        k_run, k_it = jax.random.split(k_run)
+        k_roll, k_up = jax.random.split(k_it)
+        if barrier:
+            wbuf = learner.extras.replay
+        env_state, obs, wbuf, _ = progs.actor_chunk(
+            snap, env_state, obs, wbuf, k_roll, n_chunks=c)
+        if barrier:
+            learner = learner._replace(
+                extras=learner.extras._replace(replay=wbuf))
+        learner, _ = progs.learner_chunk(
+            learner, k_up, n_updates=c * cfg.updates_per_iter)
+        total_updates += c * cfg.updates_per_iter
+        updates_since_push += c * cfg.updates_per_iter
+        if updates_since_push >= sync_every:
+            if not barrier:
+                learner, wbuf = actor_learner.swap_read_slot(learner, wbuf)
+            actor_lags.append(total_updates - snap_minted_at)
+            snap = progs.make_snapshot(learner)
+            snap_minted_at = total_updates
+            div_futs.append(progs.divergence(learner, snap, obs))
+            updates_since_push = 0
+        i += c
+        if i % record_every == 0 or i == iterations:
+            k_run, k_eval = jax.random.split(k_run)
+            if int8_act is not None:
+                qparams = actorq.pack_actor_params(learner.params)
+                r = float(evaluate(env, int8_act, qparams, k_eval,
+                                   eval_episodes,
+                                   max_steps=env.spec.max_steps))
+            else:
+                r = float(evaluate(
+                    env, det_act,
+                    (learner.params, learner.observers, learner.step),
+                    k_eval, eval_episodes, max_steps=env.spec.max_steps))
+            rewards.append(r)
+            # neither async program surfaces an action-variance metric
+            # (same zeros the synchronous actor-learner topology records)
+            variances.append(0.0)
+    wall = time.time() - t0
+    divergences = [np.asarray(d).tolist() for d in div_futs]
+    return TrainResult(state=learner, act_fn=progs.act_fn, env=env,
+                       rewards=rewards, action_variances=variances,
+                       wall_time_s=wall, algo_cfg=cfg, net=net,
+                       divergences=divergences, actor_lags=actor_lags)
 
 
 @functools.lru_cache(maxsize=32)

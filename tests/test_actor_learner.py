@@ -120,6 +120,54 @@ def test_sync_every_staleness_contract():
                 np.testing.assert_array_equal(a, b)
 
 
+def test_divergence_recorded_only_at_true_pushes():
+    """Staleness-contract regression: with ``sync_every=K`` the first real
+    param push happens at iteration K — record points before it must NOT
+    emit the init-time zero divergence sample (the actors hold a fresh
+    copy at t=0 by construction; that is not a sync)."""
+    res = loops.train("dqn", "cartpole", topology="actor-learner",
+                      num_actors=2, sync_every=4, actor_backend="int8",
+                      iterations=8, record_every=2, eval_episodes=2,
+                      seed=3, algo_overrides=dict(SMALL_DQN))
+    # record points at i = 2, 4, 6, 8; pushes at t = 4, 8 -> the i=2
+    # sample (pre-first-push zeros) is skipped
+    assert len(res.divergences) == 3
+    # every recorded sample comes from a true push of int8-packed params
+    assert all(any(v > 0 for v in d) for d in res.divergences)
+
+
+def test_int8_cache_is_bitwise_stable_between_syncs():
+    """Repack-gating regression: the packed int8 actor cache is carried in
+    state and repacked under ``lax.cond`` only at sync points — between
+    pushes the actor params are unchanged, so the cache must be bitwise
+    identical; the sync at t=K repacks from the freshly-pushed params."""
+    env = make_env("cartpole")
+    cfg = dqn.DQNConfig(**dict(SMALL_DQN, warmup=1, actor_backend="int8"))
+    net = make_network(env.spec.obs_shape, env.spec.n_actions)
+    al = actor_learner.ActorLearnerConfig(num_actors=2, sync_every=3)
+    state = actor_learner.init(jax.random.PRNGKey(0), env, net, "dqn",
+                               cfg, al)
+    iteration, _, benv = actor_learner.make_actor_learner(
+        "dqn", env, net, cfg, al)
+    env_state, obs = benv.reset(jax.random.PRNGKey(1))
+    cache0 = _leaves(state.actor_cache)
+    key = jax.random.PRNGKey(2)
+    for t in range(1, 4):
+        key, k = jax.random.split(key)
+        state, env_state, obs, _ = iteration(state, env_state, obs, k)
+        cache_t = _leaves(state.actor_cache)
+        if t < 3:    # no sync yet: the carried cache is bitwise-stable
+            for a, b in zip(cache_t, cache0):
+                np.testing.assert_array_equal(a, b)
+        else:        # t == sync_every: repacked from the pushed params
+            assert any(not np.array_equal(a, b)
+                       for a, b in zip(cache_t, cache0))
+            # and it matches a fresh pack of the synced actor params
+            fresh = _leaves(actorq.pack_actor_params(state.actor_params))
+            for a, b in zip(cache_t, fresh):
+                np.testing.assert_array_equal(a, b)
+
+
 def test_fp32_divergence_is_pure_staleness():
     # with sync_every=1 and fp32 actors, the behaviour head IS the fresh
     # learner head -> divergence identically zero

@@ -19,10 +19,11 @@ import sys
 import textwrap
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.rl import loops
+from repro.rl import common, ddpg, dqn, loops
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -97,6 +98,79 @@ def test_prioritized_state_carries_sum_tree():
     # priorities were actually pushed: not all leaves still at max_priority
     written = leaves[:int(per.replay.size)]
     assert len(np.unique(np.round(written, 6))) > 1
+
+
+# ---------------------------------------------------------------------------
+# IS-beta anneal: counted in learner updates, not iterations/attempts
+# ---------------------------------------------------------------------------
+
+def _dqn_state_with_updates(n: int) -> common.TrainState:
+    extras = dqn.DQNExtras(target_params=(), replay=(),
+                           updates=jnp.asarray(n, jnp.int32))
+    # step deliberately out of sync with updates: the anneal must ignore it
+    return common.TrainState(params=(), opt=(), observers={},
+                             step=jnp.asarray(10 * n + 999, jnp.int32),
+                             extras=extras)
+
+
+def test_is_beta_anneals_on_learner_update_counter():
+    """Annealing-bug regression: beta is a function of the learner-update
+    counter carried in state — NOT of iterations or attempted calls — so
+    it reaches 1.0 at exactly ``is_beta_anneal_updates`` landed updates,
+    whatever the driver (per-step, scan-fused, async) did to get there."""
+    cfg = dqn.DQNConfig(is_beta=0.4, is_beta_anneal_updates=100)
+    assert float(common.per_beta(_dqn_state_with_updates(0), cfg)) \
+        == np.float32(0.4)
+    mid = float(common.per_beta(_dqn_state_with_updates(50), cfg))
+    np.testing.assert_allclose(mid, 0.7, rtol=1e-6)
+    assert float(common.per_beta(_dqn_state_with_updates(100), cfg)) == 1.0
+    # saturates, never overshoots
+    assert float(common.per_beta(_dqn_state_with_updates(250), cfg)) == 1.0
+
+
+def test_beta_schedule_ignores_warmup_discarded_updates():
+    """Warmup calls revert their parameter update and must not advance the
+    anneal: with an unreachable warmup the updates counter stays 0 and
+    beta stays at is_beta."""
+    kw = dict(iterations=3, record_every=3, eval_episodes=2, seed=0)
+    res = loops.train("dqn", "cartpole", replay="prioritized",
+                      algo_overrides=dict(SMALL_DQN, warmup=10 ** 6), **kw)
+    assert int(res.state.extras.updates) == 0
+    assert float(common.per_beta(res.state, res.algo_cfg)) \
+        == np.float32(res.algo_cfg.is_beta)
+    # past warmup the counter counts exactly the landed updates
+    res2 = loops.train("dqn", "cartpole", replay="prioritized",
+                       algo_overrides=dict(SMALL_DQN), **kw)
+    assert int(res2.state.extras.updates) \
+        == 3 * SMALL_DQN["updates_per_iter"]
+
+
+def test_ddpg_carries_learner_update_counter():
+    """DDPG's extras now carry the same warm-gated update counter DQN has
+    (it drives per_beta and the async staleness accounting)."""
+    kw = dict(iterations=3, record_every=3, eval_episodes=2, seed=0)
+    res = loops.train("ddpg", "pendulum",
+                      algo_overrides=dict(SMALL_DDPG, warmup=10 ** 6),
+                      **kw)
+    assert int(res.state.extras.updates) == 0
+    res2 = loops.train("ddpg", "pendulum",
+                       algo_overrides=dict(SMALL_DDPG), **kw)
+    assert int(res2.state.extras.updates) \
+        == 3 * SMALL_DDPG["updates_per_iter"]
+    assert isinstance(res2.state.extras, ddpg.DDPGExtras)
+
+
+def test_beta_anneal_is_driver_independent():
+    """The same config must land the same beta whether driven per-step or
+    scan-fused — the schedule depends only on landed learner updates."""
+    kw = dict(iterations=6, record_every=3, eval_episodes=2, seed=13,
+              replay="prioritized", algo_overrides=dict(SMALL_DQN))
+    per_step = loops.train("dqn", "cartpole", steps_per_call=1, **kw)
+    fused = loops.train("dqn", "cartpole", steps_per_call=3, **kw)
+    assert int(per_step.state.extras.updates) \
+        == int(fused.state.extras.updates)
+    assert float(common.per_beta(per_step.state, per_step.algo_cfg)) \
+        == float(common.per_beta(fused.state, fused.algo_cfg))
 
 
 # ---------------------------------------------------------------------------
