@@ -17,10 +17,18 @@ Two measurements behind the paper's systems claim (8-bit actors collect data
    driver (one jit dispatch per update) vs the scan-fused driver
    (``steps_per_call`` updates per dispatch), same seed and budget.
 
+3. Fused single-pass kernel (ISSUE 5) — env-steps/sec of the fused
+   quantized-MLP actor (static requant, ``kernels.fused_qmlp``) vs the
+   per-layer dynamic path, across weight bits {8, 4} x MLP depth
+   {1, 2, 3}.  Both modes of a cell are timed over one *shared* wall
+   window (calls strictly interleaved) so host-load drift cannot fake a
+   win; plus the int4-vs-int8 actor-cache footprint.
+
 Emits ``BENCH_actor_throughput.json`` via ``benchmarks/common.py``.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List
 
 import jax
@@ -30,6 +38,29 @@ from benchmarks import common as C
 
 BATCH_SIZES = (64, 256, 1024)
 HIDDEN = (256, 256, 256)          # paper Table 5 "policy II" deployment MLP
+FUSED_DEPTHS = (1, 2, 3)
+FUSED_BITS = ((8, "int8"), (4, "int4"))
+FUSED_BATCH = 256
+
+
+def _interleaved_medians(fn, args_a, args_b, warmup: int = 3,
+                         iters: int = 30):
+    """Median per-call seconds of ``fn(*args_a)`` and ``fn(*args_b)``,
+    alternated call by call over one shared wall-clock window."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args_a))
+        jax.block_until_ready(fn(*args_b))
+    times_a, times_b = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args_a))
+        times_a.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args_b))
+        times_b.append(time.perf_counter() - t0)
+    times_a.sort()
+    times_b.sort()
+    return times_a[len(times_a) // 2], times_b[len(times_b) // 2]
 
 
 def _actor_fns(net, params, n_act):
@@ -87,6 +118,46 @@ def run(train_iterations: int = 60) -> List[Dict]:
             C.emit(f"actor/{label}/b{batch}", t * 1e6,
                    f"steps_per_sec={sps:.0f}"
                    f";speedup={base_t / t:.2f}x")
+
+    # -- 1b. fused single-pass kernel vs per-layer (x int8/int4 x depth) --
+    from repro.rl import actorq
+
+    @jax.jit
+    def quant_act(cache, obs):
+        # one callable; the per-layer and fused (calibrated) caches have
+        # different pytree structures, so jit compiles one program each
+        return jnp.argmax(actorq.quantized_apply(cache, obs)[..., :n_act],
+                          -1)
+
+    obs = jax.random.normal(jax.random.PRNGKey(2), (FUSED_BATCH, obs_dim))
+    nbytes = {}
+    for bits, blabel in FUSED_BITS:
+        for depth in FUSED_DEPTHS:
+            dnet = make_network(env.spec.obs_shape, n_act,
+                                hidden=(256,) * depth)
+            dparams = dnet.init(jax.random.PRNGKey(depth))
+            per_cache = actorq.pack_actor_params(dparams, bits=bits)
+            fused_cache = actorq.calibrate_actor_cache(per_cache, obs)
+            if depth == FUSED_DEPTHS[-1]:
+                nbytes[blabel] = actorq.packed_nbytes(per_cache)
+            t_per, t_fused = _interleaved_medians(
+                quant_act, (per_cache, obs), (fused_cache, obs))
+            for mode, t in (("per_layer", t_per), ("fused", t_fused)):
+                rows.append({"section": "fused_qmlp", "actor": blabel,
+                             "bits": bits, "depth": depth,
+                             "batch": FUSED_BATCH, "mode": mode,
+                             "us_per_call": t * 1e6,
+                             "env_steps_per_sec": FUSED_BATCH / t,
+                             "speedup_vs_per_layer": t_per / t})
+            C.emit(f"fused/{blabel}/depth{depth}", t_fused * 1e6,
+                   f"steps_per_sec={FUSED_BATCH / t_fused:.0f}"
+                   f";speedup_vs_per_layer={t_per / t_fused:.2f}x")
+    rows.append({"section": "fused_qmlp_footprint",
+                 "int8_nbytes": nbytes["int8"],
+                 "int4_nbytes": nbytes["int4"],
+                 "int4_frac": nbytes["int4"] / nbytes["int8"]})
+    C.emit("fused/footprint", 0.0,
+           f"int4_frac={nbytes['int4'] / nbytes['int8']:.3f}")
 
     # -- 2. driver dispatch overhead: per-step vs scan-fused --------------
     # Same total update budget through both drivers, timed after compile,

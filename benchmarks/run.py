@@ -49,6 +49,39 @@ def _check_actor_learner_schema() -> None:
           f"({len(async_rows)} async overlap rows)")
 
 
+def _check_actor_throughput_schema() -> None:
+    """Schema gate on ``BENCH_actor_throughput.json`` (ISSUE 5): the fused
+    single-pass section must be present with every (bits, depth) cell
+    carrying BOTH modes — a fused row without its per-layer baseline means
+    the comparison silently broke — all throughputs finite and positive,
+    and the int4 footprint at most ~half the int8 cache."""
+    import json
+    import math
+
+    path = os.path.join(_ROOT, "artifacts", "bench",
+                        "BENCH_actor_throughput.json")
+    with open(path) as f:
+        rows = json.load(f)
+    fused = [r for r in rows if r.get("section") == "fused_qmlp"]
+    assert fused, "fused_qmlp section missing from " + path
+    for r in rows:
+        for k in ("steps_per_sec", "env_steps_per_sec"):
+            if k in r:
+                v = float(r[k])
+                assert math.isfinite(v) and v > 0, (k, r)
+    cells = {}
+    for r in fused:
+        v = float(r["us_per_call"])
+        assert math.isfinite(v) and v > 0, r
+        cells.setdefault((r["bits"], r["depth"]), set()).add(r["mode"])
+    for cell, modes in cells.items():
+        assert modes == {"fused", "per_layer"}, (cell, modes)
+    foot = [r for r in rows if r.get("section") == "fused_qmlp_footprint"]
+    assert foot and float(foot[0]["int4_frac"]) <= 0.55, foot
+    print(f"BENCH_actor_throughput.json schema OK ({len(cells)} fused "
+          f"cells, int4_frac={float(foot[0]['int4_frac']):.3f})")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--fast", action="store_true",
@@ -88,7 +121,8 @@ def main(argv=None) -> None:
              lambda: mixed_precision.convergence_check(steps=60)),
             ("table5_deployment", lambda: deployment.run(iterations=100)),
             ("actorq_throughput",
-             lambda: actor_throughput.run(train_iterations=30)),
+             lambda: (actor_throughput.run(train_iterations=30),
+                      _check_actor_throughput_schema())),
             ("actor_learner_topology",
              lambda: (actor_learner.run(iters=10),
                       _check_actor_learner_schema())),
@@ -102,7 +136,9 @@ def main(argv=None) -> None:
             ("table4_mixed_precision", mixed_precision.run),
             ("fig5_mp_convergence", mixed_precision.convergence_check),
             ("table5_deployment", deployment.run),
-            ("actorq_throughput", actor_throughput.run),
+            ("actorq_throughput",
+             lambda: (actor_throughput.run(),
+                      _check_actor_throughput_schema())),
             ("actor_learner_topology",
              lambda: (actor_learner.run(),
                       _check_actor_learner_schema())),

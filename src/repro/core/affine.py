@@ -110,6 +110,78 @@ def dequantize_from_int(q: jnp.ndarray, params: AffineParams,
     return (params.delta * (q.astype(dtype) - params.zero_point)).astype(dtype)
 
 
+def quantize_with_params(w: jnp.ndarray, params: AffineParams
+                         ) -> jnp.ndarray:
+    """Quantize with *precomputed* signed-storage params (static requant).
+
+    ``params`` must be the shifted form produced by ``quantize_to_int`` /
+    ``calibration_params`` (zero_point offset by ``-2**(bits-1)`` so codes
+    store signed).  With params computed from the same tensor this is
+    bit-identical to ``quantize_to_int(w, bits)[0]`` — the contract behind
+    the fused kernel's static-requant anchor: clip(round(w/delta) + z, 0,
+    2**b - 1) - 2**(b-1) == clip(round(w/delta) + (z - 2**(b-1)),
+    -2**(b-1), 2**(b-1) - 1).
+    """
+    half = 2.0 ** (params.bits - 1)
+    q = jnp.round(w / params.delta) + params.zero_point
+    dtype = jnp.int8 if params.bits <= 8 else jnp.int16
+    return jnp.clip(q, -half, half - 1.0).astype(dtype)
+
+
+def calibration_params(w: jnp.ndarray, bits: int = 8) -> AffineParams:
+    """Signed-storage activation params from a calibration batch.
+
+    The static-requant helper behind the fused actor kernel: the affine
+    params ``quantize_to_int`` would derive from ``w`` (paper formula,
+    range extended to zero) in the shifted signed form, WITHOUT quantizing
+    — cache these once per sync, then ``quantize_with_params`` replaces the
+    per-call dynamic min/max pass.
+    """
+    params = compute_affine_params(w, bits, axis=None)
+    offset = 2.0 ** (bits - 1)
+    return AffineParams(delta=params.delta,
+                        zero_point=params.zero_point - offset, bits=bits)
+
+
+# ---------------------------------------------------------------------------
+# Sub-8-bit storage: two int4 codes per int8 byte
+# ---------------------------------------------------------------------------
+
+def pack_int4(codes: jnp.ndarray) -> jnp.ndarray:
+    """Pack signed int4 codes (values in [-8, 7], stored int8) pairwise.
+
+    Packs along axis 0 (the GEMM contraction axis): rows ``2i`` go to the
+    low nibble, rows ``2i+1`` to the high nibble of one int8 byte —
+    ``(K, N) -> (ceil(K/2), N)``.  An odd K is zero-padded; consumers mask
+    rows ``>= K`` (zero codes are already masked out of the kernels'
+    zero-point corrections by the true-K contract).
+    """
+    k = codes.shape[0]
+    if k % 2:
+        pad = [(0, 1)] + [(0, 0)] * (codes.ndim - 1)
+        codes = jnp.pad(codes, pad)
+    lo = codes[0::2].astype(jnp.uint8) & 0xF
+    hi = codes[1::2].astype(jnp.uint8) & 0xF
+    # same-width bitcast, not a value convert: 0x80..0xFF must become the
+    # negative byte patterns, which int astype leaves implementation-defined
+    return (lo | (hi << 4)).view(jnp.int8)
+
+
+def unpack_int4(packed: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Inverse of ``pack_int4``: ``(ceil(K/2), N) -> (K, N)`` int8 codes.
+
+    Sign-extends each nibble via a left-then-arithmetic-right shift pair —
+    pure jnp, so it runs unchanged inside Pallas kernels (the in-kernel
+    unpack of the W4A8 GEMMs) and in the ref oracles.
+    """
+    lo = packed.astype(jnp.int8) << 4
+    lo = lo >> 4                           # arithmetic shift: sign-extended
+    hi = packed.astype(jnp.int8) >> 4
+    both = jnp.stack([lo, hi], axis=1)     # (Kp, 2, ...)
+    out = both.reshape((-1,) + packed.shape[1:])
+    return out[:k]
+
+
 def fp16_quantize(w: jnp.ndarray) -> jnp.ndarray:
     """IEEE-754 fp16 round-trip (paper's Q_fp16)."""
     return w.astype(jnp.float16).astype(w.dtype)

@@ -60,39 +60,105 @@ def ptq_simulate(params: PyTree, config: QuantConfig,
 
 
 class PackedTensor(NamedTuple):
-    """An int-packed weight: codes + affine params (deployment format)."""
-    codes: jnp.ndarray        # int8/int16
+    """An int-packed weight: codes + affine params (deployment format).
+
+    ``col_scale`` / ``col_zero`` are the kernel-layout per-column ``(N,)``
+    f32 dequant arrays the W8A8 GEMM epilogue consumes, materialized once
+    at pack time (a per-tensor dense scale broadcasts, a per-channel conv
+    scale flattens) instead of being rebuilt on every forward call.
+
+    Sub-8-bit weights (``bits <= 4``) store ``codes`` *packed*: two int4
+    codes per int8 byte along the GEMM contraction axis, already in the
+    kernel's ``(K, N)`` layout (conv kernels are pre-transposed from HWIO
+    to the im2col ``(C_in*kh*kw, C_out)`` feature order).  ``orig_shape``
+    carries the unpacked weight shape; ``None`` means codes are stored in
+    the weight's natural layout (the int8 path).
+    """
+    codes: jnp.ndarray        # int8/int16; packed pairs when bits <= 4
     delta: jnp.ndarray
     zero_point: jnp.ndarray
     bits: int
+    col_scale: Any = None     # (N,) f32 kernel-layout per-column scale
+    col_zero: Any = None      # (N,) f32 kernel-layout per-column zero
+    orig_shape: Any = None    # unpacked shape when codes are sub-8-bit
+
+    def unpacked_codes(self) -> jnp.ndarray:
+        """Codes widened to one-per-int8 in the stored layout."""
+        if self.orig_shape is None:
+            return self.codes
+        k = 1
+        for d in self.orig_shape[:-1]:
+            k *= d
+        return affine.unpack_int4(self.codes, k)
 
     def dequantize(self, dtype=jnp.float32) -> jnp.ndarray:
         p = affine.AffineParams(self.delta, self.zero_point, self.bits)
-        return affine.dequantize_from_int(self.codes, p, dtype)
+        codes = self.unpacked_codes()
+        if self.orig_shape is not None and len(self.orig_shape) == 4:
+            # packed conv codes live in im2col (C_in*kh*kw, C_out) layout;
+            # restore HWIO so delta/zero_point broadcast as at pack time
+            kh, kw, ci, co = self.orig_shape
+            codes = codes.reshape(ci, kh, kw, co).transpose(1, 2, 0, 3)
+        elif self.orig_shape is not None:
+            codes = codes.reshape(self.orig_shape)
+        return affine.dequantize_from_int(codes, p, dtype)
 
     @property
     def nbytes(self) -> int:
+        # col_scale/col_zero are *derived* broadcasts of delta/zero_point
+        # (hoisted to pack time for the kernel epilogue) — not counted, so
+        # the footprint metric stays about the quantizer payload: codes +
+        # canonical affine params (the paper's ~4x claim; exactly-halved
+        # codes under int4).
         return (self.codes.size * self.codes.dtype.itemsize
                 + self.delta.size * 4 + self.zero_point.size * 4)
 
 
 jax.tree_util.register_pytree_node(
     PackedTensor,
-    lambda p: ((p.codes, p.delta, p.zero_point), p.bits),
-    lambda bits, xs: PackedTensor(xs[0], xs[1], xs[2], bits))
+    lambda p: ((p.codes, p.delta, p.zero_point, p.col_scale, p.col_zero),
+               (p.bits, p.orig_shape)),
+    lambda aux, xs: PackedTensor(xs[0], xs[1], xs[2], aux[0], xs[3], xs[4],
+                                 aux[1]))
+
+
+def _pack_leaf(leaf: jnp.ndarray, bits: int,
+               axis: Optional[int]) -> PackedTensor:
+    """Quantize one weight into the kernel-ready PackedTensor layout."""
+    codes, p = affine.quantize_to_int(leaf, bits, axis)
+    n = leaf.shape[-1]
+    col_scale = jnp.broadcast_to(
+        jnp.asarray(p.delta, jnp.float32).reshape(-1), (n,))
+    col_zero = jnp.broadcast_to(
+        jnp.asarray(p.zero_point, jnp.float32).reshape(-1), (n,))
+    # jnp.broadcast_to returns a view under tracing; commit real buffers so
+    # the cache is self-contained when carried across program boundaries
+    col_scale, col_zero = jnp.array(col_scale), jnp.array(col_zero)
+    if bits > 4:
+        return PackedTensor(codes, p.delta, p.zero_point, bits,
+                            col_scale, col_zero)
+    # sub-8-bit: pre-transpose to the GEMM contraction layout and pack
+    # two codes per byte along K (see PackedTensor docstring)
+    if leaf.ndim == 4:
+        kh, kw, ci, co = codes.shape
+        codes = codes.transpose(2, 0, 1, 3).reshape(kh * kw * ci, co)
+    else:
+        codes = codes.reshape(-1, n)
+    return PackedTensor(affine.pack_int4(codes), p.delta, p.zero_point,
+                        bits, col_scale, col_zero,
+                        orig_shape=tuple(leaf.shape))
 
 
 def ptq_pack(params: PyTree, config: QuantConfig,
              predicate: Predicate = _is_weight) -> PyTree:
     """Pack weights into int storage; non-weights pass through unchanged."""
-    assert config.mode == QuantMode.PTQ_INT, "packing is for int PTQ"
+    if config.mode != QuantMode.PTQ_INT:
+        raise ValueError(f"packing is for int PTQ, got {config.mode}")
 
     def one(path, leaf):
         if not predicate(path, leaf):
             return leaf
-        codes, p = affine.quantize_to_int(leaf, config.bits,
-                                          _axis_for(leaf, config))
-        return PackedTensor(codes, p.delta, p.zero_point, config.bits)
+        return _pack_leaf(leaf, config.bits, _axis_for(leaf, config))
 
     return jax.tree_util.tree_map_with_path(one, params)
 

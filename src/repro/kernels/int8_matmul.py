@@ -22,10 +22,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import affine
+
 
 def _int8_matmul_kernel(x_ref, w_ref, xs_ref, xz_ref, ws_ref, wz_ref,
                         o_ref, acc_ref, sumx_ref, sumw_ref, *, n_k: int,
-                        k_total: int):
+                        k_total: int, w_bits: int = 8):
     k_idx = pl.program_id(2)
 
     @pl.when(k_idx == 0)
@@ -35,7 +37,14 @@ def _int8_matmul_kernel(x_ref, w_ref, xs_ref, xz_ref, ws_ref, wz_ref,
         sumw_ref[...] = jnp.zeros_like(sumw_ref)
 
     x = x_ref[...].astype(jnp.int32)   # (bm, bk) — widened for CPU interpret;
-    w = w_ref[...].astype(jnp.int32)   # on TPU the MXU consumes int8 directly.
+    w = w_ref[...]                     # on TPU the MXU consumes int8 directly.
+    if w_bits <= 4:
+        # sub-8-bit weights arrive packed two-per-byte along K: the block
+        # holds bk/2 packed rows; unpack in-kernel.  Garbage nibbles (the
+        # pad byte of an odd K and OOB block reads) only occupy rows
+        # >= k_total, which the k_valid mask below zeroes anyway.
+        w = affine.unpack_int4(w, x_ref.shape[1])
+    w = w.astype(jnp.int32)
     # Zero the padded K tail of the last block (pallas pads OOB reads with an
     # unspecified value; zero codes are the additive identity for acc AND the
     # zero-point correction sums).
@@ -69,12 +78,28 @@ def int8_matmul_pallas(x_q: jnp.ndarray, w_q: jnp.ndarray,
                        w_scale: jnp.ndarray, w_zero: jnp.ndarray,
                        *, block_m: int = 256, block_n: int = 256,
                        block_k: int = 256, out_dtype=jnp.float32,
-                       interpret: bool = False) -> jnp.ndarray:
-    """Dequantized (M,N) product of int8 (M,K) x (K,N)."""
+                       interpret: bool = False,
+                       w_bits: int = 8) -> jnp.ndarray:
+    """Dequantized (M,N) product of int8 (M,K) x (K,N).
+
+    ``w_bits <= 4``: ``w_q`` is ``(ceil(K/2), N)`` with two int4 codes per
+    byte along K (``core.affine.pack_int4``), unpacked in-kernel; K comes
+    from ``x_q``.
+    """
     m, k = x_q.shape
-    k2, n = w_q.shape
-    assert k == k2
-    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    if w_bits <= 4:
+        assert w_q.shape[0] == (k + 1) // 2, (w_q.shape, k)
+        n = w_q.shape[1]
+        # even K block so each maps to an integral number of packed rows
+        bk = min(block_k, k + (k % 2))
+        bk += bk % 2
+        w_rows = bk // 2
+    else:
+        k2, n = w_q.shape
+        assert k == k2
+        bk = min(block_k, k)
+        w_rows = bk
+    bm, bn = min(block_m, m), min(block_n, n)
     n_k = pl.cdiv(k, bk)
     grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), n_k)
 
@@ -84,11 +109,12 @@ def int8_matmul_pallas(x_q: jnp.ndarray, w_q: jnp.ndarray,
     wz = jnp.asarray(w_zero, jnp.float32).reshape(1, n)
 
     return pl.pallas_call(
-        functools.partial(_int8_matmul_kernel, n_k=n_k, k_total=k),
+        functools.partial(_int8_matmul_kernel, n_k=n_k, k_total=k,
+                          w_bits=w_bits),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((w_rows, bn), lambda i, j, kk: (kk, j)),
             pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
             pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
             pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),

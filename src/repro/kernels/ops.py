@@ -18,8 +18,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import affine
 from repro.kernels import ref
 from repro.kernels.fake_quant import fake_quant_pallas
+from repro.kernels.fused_qmlp import fused_qmlp_pallas
 from repro.kernels.int8_matmul import int8_matmul_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 
@@ -53,17 +55,64 @@ def fake_quant(x: jnp.ndarray, bits: int = 8, *, backend: str = "auto"
 # int8 matmul
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("out_dtype", "backend"))
+@functools.partial(jax.jit, static_argnames=("out_dtype", "backend",
+                                             "w_bits"))
 def int8_matmul(x_q, w_q, x_scale, x_zero, w_scale, w_zero,
-                out_dtype=jnp.float32, *, backend: str = "auto"):
-    """(M,K)i8 @ (K,N)i8 -> (M,N)f with affine dequantization."""
+                out_dtype=jnp.float32, *, backend: str = "auto",
+                w_bits: int = 8):
+    """(M,K)i8 @ (K,N)i8 -> (M,N)f with affine dequantization.
+
+    ``w_bits <= 4`` consumes sub-8-bit packed weights (two int4 codes per
+    int8 byte along K, ``core.affine.pack_int4``): the Pallas path unpacks
+    in-kernel, the oracle unpacks up front — both see identical codes, so
+    the W4A8 product equals the W8A8 product over the unpacked codes.
+    """
     b = _resolve(backend)
+    if w_bits <= 4 and w_q.shape[0] != (x_q.shape[-1] + 1) // 2:
+        # the packed layout is easy to get wrong silently (unpacked codes,
+        # or an 8-bit cache passed with w_bits=4, would just compute
+        # garbage) — keep the int8 branch's K validation here too
+        raise ValueError(
+            f"w_bits={w_bits} expects byte-packed codes of "
+            f"{(x_q.shape[-1] + 1) // 2} rows for K={x_q.shape[-1]}, "
+            f"got {w_q.shape}")
     if b == "ref":
+        if w_bits <= 4:
+            w_q = affine.unpack_int4(w_q, x_q.shape[-1])
         return ref.int8_matmul_ref(x_q, w_q, x_scale, w_scale, x_zero, w_zero,
                                    out_dtype)
     return int8_matmul_pallas(x_q, w_q, x_scale, x_zero, w_scale, w_zero,
                               out_dtype=out_dtype,
+                              interpret=(b == "interpret"), w_bits=w_bits)
+
+
+# ---------------------------------------------------------------------------
+# fused quantized MLP (single-pass actor forward)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "backend"))
+def fused_qmlp(x, layers, out_dtype=jnp.float32, *, backend: str = "auto"):
+    """Whole-MLP quantized forward in one kernel dispatch.
+
+    ``x`` is fp32 with arbitrary leading batch dims; ``layers`` a tuple of
+    ``fused_qmlp.QMLPLayer`` whose ``x_delta``/``x_zero`` carry *static*
+    activation scales (see ``rl.actorq.calibrate_actor_cache``).  The input
+    is quantized here with layer 0's params (one elementwise op XLA fuses
+    into the producer); every inter-layer activation then stays int8 inside
+    the kernel and only the head dequantizes.
+    """
+    b = _resolve(backend)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    l0 = layers[0]
+    x_q = affine.quantize_with_params(
+        x2, affine.AffineParams(l0.x_delta, l0.x_zero, bits=8))
+    if b == "ref":
+        y = ref.fused_qmlp_ref(x_q, layers)
+    else:
+        y = fused_qmlp_pallas(x_q, layers, out_dtype=out_dtype,
                               interpret=(b == "interpret"))
+    return y.reshape(lead + y.shape[-1:]).astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -62,6 +62,34 @@ def int8_matmul_ref(x_q: jnp.ndarray, w_q: jnp.ndarray,
             ).astype(out_dtype)
 
 
+def fused_qmlp_ref(x_q: jnp.ndarray, layers) -> jnp.ndarray:
+    """Oracle for the single-pass fused quantized MLP (``fused_qmlp.py``).
+
+    ``x_q``: (M, K0) int8 codes statically quantized with layer 0's params;
+    ``layers``: tuple of ``fused_qmlp.QMLPLayer``.  Each layer reuses
+    ``int8_matmul_ref`` verbatim — the same float op order as the per-layer
+    path — then applies the fused bias + ReLU + static-requant epilogue
+    (``affine.quantize_with_params``), so with static scales equal to the
+    dynamic ones this is bitwise the per-layer ``quantized_mlp_apply``.
+    """
+    h = x_q
+    n_layers = len(layers)
+    for i, layer in enumerate(layers):
+        w = layer.codes
+        if layer.bits <= 4:
+            w = affine.unpack_int4(w, layer.k)
+        y = int8_matmul_ref(h, w, layer.x_delta, layer.col_scale,
+                            layer.x_zero, layer.col_zero)
+        y = y + layer.bias
+        if i + 1 < n_layers:
+            nxt = layers[i + 1]
+            h = affine.quantize_with_params(
+                jax.nn.relu(y),
+                affine.AffineParams(nxt.x_delta, nxt.x_zero, bits=8))
+        else:
+            return y
+
+
 def quantized_dense_ref(x: jnp.ndarray, w_q: jnp.ndarray,
                         w_scale: jnp.ndarray, w_zero: jnp.ndarray,
                         out_dtype=jnp.float32) -> jnp.ndarray:

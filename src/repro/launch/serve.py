@@ -54,7 +54,8 @@ def _serve_policy(args) -> int:
     res = loops.train(algo, args.rl_env, iterations=max(args.rl_iters, 1),
                       record_every=max(args.rl_iters, 1), eval_episodes=2,
                       seed=args.seed, steps_per_call=args.steps_per_call,
-                      actor_backend=args.actor_backend, **topo_kw)
+                      actor_backend=args.actor_backend,
+                      calib_batch=args.calib_batch, **topo_kw)
     if algo in REPLAY_ALGOS and args.replay == "prioritized":
         print(f"[serve-rl] prioritized replay: alpha="
               f"{args.priority_exponent} is_beta={args.is_beta}")
@@ -73,8 +74,44 @@ def _serve_policy(args) -> int:
     params = res.state.params
     fp32_bytes = ptq.tree_nbytes(params)
 
-    if args.actor_backend == "int8":
-        served = actorq.pack_actor_params(params)
+    if actorq.is_quantized(args.actor_backend):
+        served = actorq.pack_actor_params(
+            params, actorq.backend_bits(args.actor_backend))
+        if args.calib_batch:
+            # deployment-time calibration: static activation scales from
+            # the states the *trained* policy actually visits — a short
+            # greedy rollout from reset (reset draws alone sit near the
+            # origin for the classic-control envs and would saturate the
+            # scales once the served policy drifts) -> the single-pass
+            # fused MLP kernel answers every action query in one dispatch
+            import jax.numpy as jnp
+
+            from repro.rl.env import batched_env
+            roll_steps = 8
+            benv = batched_env(
+                env, max(-(-args.calib_batch // roll_steps), 1))
+            k_cal = jax.random.PRNGKey(args.seed + 1)
+            act0 = actorq.make_act_fn(env.spec,
+                                      backend=args.kernel_backend)
+            e_state, o = benv.reset(k_cal)
+            seen = [o]
+            for t in range(roll_steps - 1):
+                a = act0(served, o)
+                e_state, o, _, _ = benv.step(
+                    e_state, a, jax.random.fold_in(k_cal, t))
+                seen.append(o)
+            calib_obs = jnp.concatenate(seen)[:args.calib_batch]
+            served = actorq.calibrate_actor_cache(
+                served, calib_obs, backend=args.kernel_backend)
+            if actorq.ACT_QUANT in served:
+                print(f"[serve-rl] static requant: calibrated on "
+                      f"{calib_obs.shape[0]} obs -> fused single-pass "
+                      f"actor")
+            else:
+                # conv policies keep the per-layer path (calibration is a
+                # documented no-op for CNN caches)
+                print("[serve-rl] static requant: conv policy — "
+                      "calibration skipped, per-layer path served")
         act = actorq.make_act_fn(env.spec, backend=args.kernel_backend)
         served_bytes = actorq.packed_nbytes(served)
     else:
@@ -128,9 +165,18 @@ def main(argv=None) -> int:
                     help="serve an RL policy instead of an LM "
                          "(ActorQ deployment; e.g. cartpole, airnav)")
     ap.add_argument("--actor-backend", default="fp32",
-                    choices=["fp32", "int8"])
+                    choices=["fp32", "int8", "int4"],
+                    help="int8 = W8A8 packed actor; int4 = byte-packed "
+                         "W4A8 (half the served cache)")
     ap.add_argument("--kernel-backend", default="auto",
                     choices=["pallas", "interpret", "ref", "auto"])
+    ap.add_argument("--calib-batch", type=int, default=0,
+                    help="static-requant calibration batch for quantized "
+                         "actors: >0 calibrates per-layer activation "
+                         "scales (training caches at every sync, the "
+                         "served cache once at deploy) and runs MLP "
+                         "actors as ONE fused kernel pass; 0 = dynamic "
+                         "per-layer quantization")
     ap.add_argument("--rl-iters", type=int, default=20,
                     help="training iterations before serving (--rl-env)")
     ap.add_argument("--steps-per-call", type=int, default=10,

@@ -23,9 +23,14 @@ class A2CConfig:
     entropy_coef: float = 0.01
     quant: QuantConfig = QuantConfig.none()
     # ActorQ: "int8" samples rollout actions from the packed int8 actor
-    # (refreshed once per learner update); the learner stays fp32.
+    # (refreshed once per learner update); "int4" = byte-packed W4A8,
+    # half the cache; the learner stays fp32.
     actor_backend: str = "fp32"
     kernel_backend: str = "auto"
+    # calib_batch > 0: static activation scales from that many rollout
+    # observations at each cache refresh -> single-pass fused MLP kernel
+    # (see DQNConfig.calib_batch).  0 keeps dynamic quantization.
+    calib_batch: int = 0
 
 
 def init(key, env: Env, net: Network, cfg: A2CConfig):
@@ -43,7 +48,7 @@ def make_iteration(env: Env, net: Network, cfg: A2CConfig):
     n_act = env.spec.n_actions
     int8_policy = actorq.make_sampling_policy(
         env.spec, backend=cfg.kernel_backend) \
-        if cfg.actor_backend == "int8" else None
+        if actorq.is_quantized(cfg.actor_backend) else None
 
     def heads(params, obs, observers, step):
         ctx = common.make_ctx(cfg.quant, observers, step)
@@ -56,8 +61,13 @@ def make_iteration(env: Env, net: Network, cfg: A2CConfig):
 
         if int8_policy is not None:
             # ActorQ hot path: pack once per learner update; the rollout
-            # scan below reuses the int8 cache for every env step.
-            qparams = actorq.pack_actor_params(state.params)
+            # scan below reuses the int cache for every env step (fused
+            # single-pass kernel when calib_batch calibrates it).
+            qparams = actorq.make_actor_cache(
+                state.params, cfg.actor_backend,
+                calib_obs=actorq.calib_slice(obs, cfg.calib_batch)
+                if cfg.calib_batch else None,
+                backend=cfg.kernel_backend)
 
             def policy(params, obs, k):
                 return int8_policy(qparams, obs, k)

@@ -322,10 +322,20 @@ def init(key, env: Env, net, algo: str, cfg, al: ActorLearnerConfig
     state = state._replace(extras=state.extras._replace(replay=sharded))
     actor_params = jax.tree_util.tree_map(jnp.array, state.params)
     # the packed cache keeps fp32 leaves (biases) by reference — copy them
-    # so the scan-fused driver's donated state holds no buffer twice
-    cache = jax.tree_util.tree_map(
-        jnp.array, actorq.pack_actor_params(actor_params)) \
-        if cfg.actor_backend == "int8" else ()
+    # so the scan-fused driver's donated state holds no buffer twice.
+    # calib_batch: the t=0 cache calibrates from fresh env-reset
+    # observations (no rollout data exists yet); every later refresh
+    # recalibrates from the live actor observations at the sync point.
+    cache = ()
+    if actorq.is_quantized(cfg.actor_backend):
+        calib_obs = None
+        if cfg.calib_batch:
+            _, calib_obs = batched_env(env, max(cfg.calib_batch, 1)).reset(
+                jax.random.fold_in(key, 0x5CA1E))
+        cache = jax.tree_util.tree_map(
+            jnp.array, actorq.make_actor_cache(
+                actor_params, cfg.actor_backend, calib_obs=calib_obs,
+                backend=cfg.kernel_backend))
     return ActorLearnerState(
         learner=state, actor_params=actor_params, actor_cache=cache,
         t=jnp.zeros((), jnp.int32),
@@ -429,7 +439,7 @@ def make_actor_learner(algo: str, env: Env, net, cfg,
     benv_local = batched_env(env, local_actors * envs_per_actor)
     benv_global = batched_env(env, n * envs_per_actor)
     obs_shape = tuple(env.spec.obs_shape)
-    int8 = cfg.actor_backend == "int8"
+    int8 = actorq.is_quantized(cfg.actor_backend)
 
     parts = _algo_parts(algo, env, net, cfg)
     learner_phase = _make_learner_phase(parts, cfg, use_per,
@@ -484,11 +494,31 @@ def make_actor_learner(algo: str, env: Env, net, cfg,
             lambda a, p: jnp.where(do_sync, p, a), actor_params,
             learner.params)
         if int8:
-            # repack the int8 cache only at true pushes — between syncs the
-            # actor params are unchanged and the cache is bitwise-stable
+            # repack the int cache only at true pushes — between syncs the
+            # actor params are unchanged and the cache is bitwise-stable.
+            # calib_batch: the repack also refreshes the static activation
+            # scales from the actors' current observations, so the fused
+            # kernel's requant ranges track the data distribution at the
+            # same cadence as the params.
+            def repack(p):
+                calib_obs = None
+                if cfg.calib_batch:
+                    # the cache is carried replicated over the actor axis
+                    # (P() in _state_specs): on a mesh, gather the
+                    # calibration batch so every device derives identical
+                    # scales (collective only inside the sync branch)
+                    calib_obs = obs if axis_name is None else \
+                        jax.lax.all_gather(obs, axis_name, axis=0,
+                                           tiled=True)
+                    calib_obs = actorq.calib_slice(calib_obs,
+                                                   cfg.calib_batch)
+                return actorq.make_actor_cache(
+                    p, cfg.actor_backend, calib_obs=calib_obs,
+                    backend=cfg.kernel_backend)
+
             cache = jax.lax.cond(
                 do_sync,
-                actorq.pack_actor_params,
+                repack,
                 lambda _: state.actor_cache,
                 actor_params)
         else:
@@ -566,7 +596,7 @@ def make_async_actor_learner(algo: str, env: Env, net, cfg,
     benv_local = batched_env(env, local_actors * envs_per_actor)
     benv_global = batched_env(env, n * envs_per_actor)
     obs_shape = tuple(env.spec.obs_shape)
-    int8 = cfg.actor_backend == "int8"
+    int8 = actorq.is_quantized(cfg.actor_backend)
 
     parts = _algo_parts(algo, env, net, cfg)
     learner_phase = _make_learner_phase(parts, cfg, use_per,
@@ -575,8 +605,29 @@ def make_async_actor_learner(algo: str, env: Env, net, cfg,
     add_sharded = rb.per_add_sharded if use_per else rb.replay_add_sharded
 
     @jax.jit
-    def make_snapshot(learner: common.TrainState) -> ActorSnapshot:
-        cache = actorq.pack_actor_params(learner.params) if int8 else ()
+    def make_snapshot(learner: common.TrainState,
+                      obs=None) -> ActorSnapshot:
+        """Param push: mint the actors' next (packed) snapshot.
+
+        ``obs`` — the actors' current observations — is only consumed
+        under ``calib_batch > 0``, where each push also recalibrates the
+        cache's static activation scales (the PR-4 repack path carrying
+        the PR-5 static-requant contract); the driver passes it
+        unconditionally, the equivalence-anchor cadence is unchanged.
+        """
+        cache = ()
+        if int8:
+            calib_obs = None
+            if cfg.calib_batch:
+                if obs is None:
+                    raise ValueError(
+                        "calib_batch > 0 needs the actors' observations "
+                        "at every snapshot — pass make_snapshot(learner, "
+                        "obs)")
+                calib_obs = actorq.calib_slice(obs, cfg.calib_batch)
+            cache = actorq.make_actor_cache(
+                learner.params, cfg.actor_backend, calib_obs=calib_obs,
+                backend=cfg.kernel_backend)
         return ActorSnapshot(params=learner.params, cache=cache,
                              step=learner.step,
                              updates=learner.extras.updates)

@@ -33,7 +33,14 @@ Kernel backend selection (threaded through ``backend=`` everywhere):
 
 Entry points:
 
-* ``pack_actor_params(params, bits)``        -> int8 ``QuantizedParams``
+* ``pack_actor_params(params, bits)``        -> int ``QuantizedParams``
+  (``bits <= 4``: W4A8 — codes byte-packed two-per-byte, half the cache)
+* ``calibrate_actor_cache(qparams, obs)``    -> cache + static activation
+  scales; MLP applies then run the single-pass fused kernel
+  (``kernels.fused_qmlp``) instead of one GEMM + dynamic range pass per
+  layer
+* ``make_actor_cache(params, backend, calib_obs=...)`` -> the one-stop
+  pack(+calibrate) used at every cache-refresh site
 * ``quantized_apply(qparams, obs)``          -> head outputs (logits/q/mu)
 * ``make_act_fn(env_spec)``                  -> deterministic deployment
   policy ``act(qparams, obs)`` (argmax for discrete, tanh*scale for DDPG)
@@ -55,9 +62,21 @@ from repro.kernels import ops
 
 # A QuantizedParams pytree mirrors the network spec: every weight leaf is a
 # ``core.ptq.PackedTensor`` (int8 codes + affine scale/zero), biases stay f32.
+# ``calibrate_actor_cache`` adds an ``ACT_QUANT`` entry of static activation
+# scales next to the weights, which flips MLP applies onto the fused
+# single-pass kernel.
 QuantizedParams = Any
 
-ACTOR_BACKENDS = ("fp32", "int8")
+# The one place actor-backend strings are defined/validated — the configs,
+# ``loops.train``, ``eval_policy``, ``launch.serve`` and the actor-learner
+# topologies all route through ``validate_actor_backend``.
+ACTOR_BACKENDS = ("fp32", "int8", "int4")
+QUANTIZED_BACKENDS = ("int8", "int4")
+_BACKEND_BITS = {"int8": 8, "int4": 4}
+
+# key of the static activation-scale entry a calibrated cache carries
+# (sorted next to the fc*/out weight entries in the packed pytree)
+ACT_QUANT = "act_quant"
 
 
 def validate_actor_backend(actor_backend: str) -> str:
@@ -67,17 +86,35 @@ def validate_actor_backend(actor_backend: str) -> str:
     return actor_backend
 
 
+def is_quantized(actor_backend: str) -> bool:
+    """True for the integer-inference backends (int8/int4)."""
+    return validate_actor_backend(actor_backend) in QUANTIZED_BACKENDS
+
+
+def backend_bits(actor_backend: str) -> int:
+    """Weight bit-width of a quantized actor backend (int8 -> 8, int4 -> 4)."""
+    validate_actor_backend(actor_backend)
+    if actor_backend not in _BACKEND_BITS:
+        raise ValueError(f"actor_backend {actor_backend!r} is not a "
+                         f"quantized backend {QUANTIZED_BACKENDS}")
+    return _BACKEND_BITS[actor_backend]
+
+
 def pack_actor_params(params: Any, bits: int = 8) -> QuantizedParams:
-    """Pack an actor param pytree into the int8 deployment cache.
+    """Pack an actor param pytree into the int-code deployment cache.
 
     Same quantizer as the fake-quant simulation (``ptq.ptq_simulate``):
     per-tensor for dense kernels, per-output-channel for conv kernels.
-    Weight bits may be < 8 (codes still store as int8 for the kernel);
-    activations always quantize to 8 bits at run time (W{n}A8).
-    Jit-safe — call inside a training iteration to refresh the cache once
-    per learner update.
+    Weight bits may be < 8 — ``bits <= 4`` stores two codes per int8 byte
+    along the GEMM contraction axis (``actor_backend="int4"`` -> W4A8,
+    half the int8 cache/sync footprint); activations always quantize to
+    8 bits at run time (W{n}A8).  Jit-safe — call inside a training
+    iteration to refresh the cache once per learner update.
     """
-    assert bits <= 8, f"int8 actor cache needs bits <= 8, got {bits}"
+    # ValueError, not assert: the guard must survive ``python -O``
+    if not 1 <= bits <= 8:
+        raise ValueError(f"int actor cache needs 1 <= bits <= 8, "
+                         f"got {bits}")
     return ptq.ptq_pack(params, QuantConfig.ptq_int(bits))
 
 
@@ -86,9 +123,47 @@ def packed_nbytes(qparams: QuantizedParams) -> int:
     return ptq.tree_nbytes(qparams)
 
 
+def calib_slice(obs: jnp.ndarray, calib_batch: int) -> jnp.ndarray:
+    """Leading-axis slice of a rollout observation batch for calibration."""
+    return obs[:max(1, min(calib_batch, obs.shape[0]))]
+
+
+def make_actor_cache(params: Any, actor_backend: str, *,
+                     calib_obs: Any = None,
+                     backend: str = "auto") -> QuantizedParams:
+    """Pack (and, with ``calib_obs``, calibrate) one actor cache.
+
+    The one-stop repack used at every cache refresh site — the fused
+    drivers' per-update pack, the actor-learner ``lax.cond`` sync repack
+    and the async snapshot program: codes at the backend's bit-width
+    (int8 -> W8A8, int4 -> byte-packed W4A8), plus static activation
+    scales (-> the single-pass fused MLP kernel) when a calibration
+    observation batch is supplied.
+    """
+    qparams = pack_actor_params(params, backend_bits(actor_backend))
+    if calib_obs is not None:
+        qparams = calibrate_actor_cache(qparams, calib_obs, backend=backend)
+    return qparams
+
+
 # ---------------------------------------------------------------------------
 # int8 layers
 # ---------------------------------------------------------------------------
+
+def _col_arrays(w: PackedTensor, n: int):
+    """Kernel-layout per-column (N,) scale/zero of a packed weight.
+
+    Packed at pack time (``ptq._pack_leaf``) and read straight off the
+    cache; the broadcast fallback only serves hand-built ``PackedTensor``s
+    from before the hoist.
+    """
+    if w.col_scale is not None:
+        return w.col_scale, w.col_zero
+    return (jnp.broadcast_to(
+                jnp.asarray(w.delta, jnp.float32).reshape(-1), (n,)),
+            jnp.broadcast_to(
+                jnp.asarray(w.zero_point, jnp.float32).reshape(-1), (n,)))
+
 
 def int8_dense(layer: Dict[str, Any], x: jnp.ndarray, *,
                backend: str = "auto", act: Callable = None) -> jnp.ndarray:
@@ -100,20 +175,19 @@ def int8_dense(layer: Dict[str, Any], x: jnp.ndarray, *,
     the fake-quant protocol this path mirrors quantizes weights only, so
     activation error must not scale with the weight sweep) — the product
     accumulates in int32, and the affine dequant is fused in the kernel
-    epilogue.
+    epilogue.  Sub-8-bit caches (``pack_actor_params(bits=4)``) hold
+    byte-packed codes; the GEMM unpacks them in-kernel.
     """
     w: PackedTensor = layer["w"]
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     xq, xp = affine.quantize_to_int(x2, 8)
-    n = w.codes.shape[-1]
-    # per-tensor dense scales broadcast to the kernel's per-column layout
-    w_scale = jnp.broadcast_to(
-        jnp.asarray(w.delta, jnp.float32).reshape(-1), (n,))
-    w_zero = jnp.broadcast_to(
-        jnp.asarray(w.zero_point, jnp.float32).reshape(-1), (n,))
+    n = (w.orig_shape[-1] if w.orig_shape is not None
+         else w.codes.shape[-1])
+    w_scale, w_zero = _col_arrays(w, n)
     y = ops.int8_matmul(xq, w.codes, xp.delta, xp.zero_point, w_scale,
-                        w_zero, backend=backend)
+                        w_zero, backend=backend,
+                        w_bits=w.bits if w.bits <= 4 else 8)
     y = y + layer["b"]
     if act is not None:
         y = act(y)
@@ -142,21 +216,25 @@ def int8_conv2d(layer: Dict[str, Any], x: jnp.ndarray, stride: int = 1,
             padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
         y = y + layer["b"].astype(x.dtype)
         return act(y) if act is not None else y
-    kh, kw, c_in, c_out = w.codes.shape
+    kh, kw, c_in, c_out = (w.orig_shape if w.orig_shape is not None
+                           else w.codes.shape)
     patches = jax.lax.conv_general_dilated_patches(
         x, (kh, kw), (stride, stride), padding="SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
     lead = patches.shape[:-1]
     p2 = patches.reshape(-1, patches.shape[-1])
     pq, pp = affine.quantize_to_int(p2, 8)
-    # patches order features as (C_in, kh, kw); permute HWIO codes to match
-    w2 = jnp.transpose(w.codes, (2, 0, 1, 3)).reshape(-1, c_out)
-    w_scale = jnp.broadcast_to(
-        jnp.asarray(w.delta, jnp.float32).reshape(-1), (c_out,))
-    w_zero = jnp.broadcast_to(
-        jnp.asarray(w.zero_point, jnp.float32).reshape(-1), (c_out,))
+    if w.orig_shape is not None:
+        # sub-8-bit conv codes are pre-transposed to the im2col layout and
+        # byte-packed at pack time; the GEMM unpacks in-kernel
+        w2 = w.codes
+    else:
+        # patches order features as (C_in, kh, kw); permute HWIO codes
+        w2 = jnp.transpose(w.codes, (2, 0, 1, 3)).reshape(-1, c_out)
+    w_scale, w_zero = _col_arrays(w, c_out)
     y = ops.int8_matmul(pq, w2, pp.delta, pp.zero_point, w_scale, w_zero,
-                        backend=backend)
+                        backend=backend,
+                        w_bits=w.bits if w.bits <= 4 else 8)
     y = y.reshape(lead + (c_out,)) + layer["b"].astype(y.dtype)
     if act is not None:
         y = act(y)
@@ -167,9 +245,46 @@ def int8_conv2d(layer: Dict[str, Any], x: jnp.ndarray, stride: int = 1,
 # Quantized network applies (mirror rl.networks.mlp_apply / cnn_apply)
 # ---------------------------------------------------------------------------
 
+def _mlp_layer_names(n_hidden: int):
+    return [f"fc{i}" for i in range(n_hidden)] + ["out"]
+
+
+def _fused_layers(qparams: QuantizedParams, n_hidden: int):
+    """``(QMLPLayer, ...)`` for the single-pass kernel from a calibrated
+    cache (weights + the ``ACT_QUANT`` static activation params)."""
+    from repro.kernels.fused_qmlp import QMLPLayer
+    act = qparams[ACT_QUANT]
+    layers = []
+    for i, name in enumerate(_mlp_layer_names(n_hidden)):
+        w: PackedTensor = qparams[name]["w"]
+        k = (w.orig_shape[0] if w.orig_shape is not None
+             else w.codes.shape[0])
+        n = (w.orig_shape[-1] if w.orig_shape is not None
+             else w.codes.shape[-1])
+        w_scale, w_zero = _col_arrays(w, n)
+        x_delta, x_zero = act[i]
+        layers.append(QMLPLayer(
+            codes=w.codes, col_scale=w_scale, col_zero=w_zero,
+            bias=qparams[name]["b"], x_delta=x_delta, x_zero=x_zero,
+            bits=w.bits, k=k))
+    return tuple(layers)
+
+
 def quantized_mlp_apply(qparams: QuantizedParams, x: jnp.ndarray,
                         n_hidden: int, *, backend: str = "auto"
                         ) -> jnp.ndarray:
+    """MLP head outputs from a packed cache.
+
+    Fused-vs-per-layer selection: a *calibrated* cache (one carrying the
+    ``ACT_QUANT`` static activation scales — see ``calibrate_actor_cache``)
+    runs the whole forward in one pass (``kernels.ops.fused_qmlp``: one
+    kernel dispatch, inter-layer activations int8-resident, no dynamic
+    range passes); an uncalibrated cache falls back to the per-layer GEMM
+    with dynamic per-tensor activation quantization.
+    """
+    if ACT_QUANT in qparams:
+        return ops.fused_qmlp(x, _fused_layers(qparams, n_hidden),
+                              backend=backend)
     for i in range(n_hidden):
         x = int8_dense(qparams[f"fc{i}"], x, backend=backend,
                        act=jax.nn.relu)
@@ -194,7 +309,9 @@ def quantized_apply(qparams: QuantizedParams, x: jnp.ndarray, *,
     """Head outputs of the packed actor (dispatches on the packed spec).
 
     The packed pytree carries the network structure (``rl.networks`` layer
-    naming): ``conv*`` keys select the CNN backbone, otherwise the MLP.
+    naming): ``conv*`` keys select the CNN backbone, otherwise the MLP
+    (single-pass fused when the cache is calibrated — see
+    ``quantized_mlp_apply``).
     """
     names = set(qparams)
     n_convs = sum(1 for n in names if n.startswith("conv"))
@@ -202,6 +319,40 @@ def quantized_apply(qparams: QuantizedParams, x: jnp.ndarray, *,
         return quantized_cnn_apply(qparams, x, n_convs, backend=backend)
     n_hidden = sum(1 for n in names if n.startswith("fc"))
     return quantized_mlp_apply(qparams, x, n_hidden, backend=backend)
+
+
+def calibrate_actor_cache(qparams: QuantizedParams, obs: jnp.ndarray, *,
+                          backend: str = "auto") -> QuantizedParams:
+    """Attach static activation scales to a packed MLP cache.
+
+    Runs the per-layer dynamic path once over ``obs`` (a replay/rollout
+    observation batch) and records, per dense layer, the affine params the
+    dynamic quantizer derives for that layer's input — exactly the values
+    ``int8_dense`` would compute on this batch, which is the fused kernel's
+    bitwise-anchor contract.  The params come back cached in the packed
+    pytree under ``ACT_QUANT`` (next to the weights, so the cache rides
+    sync/snapshot transfers as one pytree) and ``quantized_apply`` then
+    takes the single-pass fused kernel: no per-layer dynamic min/max
+    reduction, inter-layer activations int8-resident.
+
+    Call once per sync — the actor-learner topologies refresh it inside
+    the PR-4 ``lax.cond`` repack / snapshot programs (``calib_batch`` on
+    the configs).  CNN caches pass through uncalibrated (the fused kernel
+    is MLP-only; conv actors keep the per-layer path).
+    """
+    names = set(qparams)
+    if any(n.startswith("conv") for n in names):
+        return qparams
+    n_hidden = sum(1 for n in names if n.startswith("fc"))
+    act = []
+    x = obs.reshape(-1, obs.shape[-1]).astype(jnp.float32)
+    for i, name in enumerate(_mlp_layer_names(n_hidden)):
+        p = affine.calibration_params(x, 8)
+        act.append((p.delta, p.zero_point))
+        if i < n_hidden:
+            x = int8_dense(qparams[name], x, backend=backend,
+                           act=jax.nn.relu)
+    return {**qparams, ACT_QUANT: tuple(act)}
 
 
 # ---------------------------------------------------------------------------

@@ -33,10 +33,15 @@ class DDPGConfig:
     warmup: int = 1000
     quant: QuantConfig = QuantConfig.none()
     # ActorQ: "int8" runs rollout data collection (the exploration policy's
-    # mu head) through the packed int8 actor; the critic and both gradient
-    # paths stay fp32 — the paper's D4PG-style ActorQ split.
+    # mu head) through the packed int8 actor ("int4" = byte-packed W4A8,
+    # half the cache); the critic and both gradient paths stay fp32 — the
+    # paper's D4PG-style ActorQ split.
     actor_backend: str = "fp32"
     kernel_backend: str = "auto"
+    # calib_batch > 0: static activation scales from that many rollout
+    # observations at each cache refresh -> single-pass fused MLP kernel
+    # (see DQNConfig.calib_batch).  0 keeps dynamic quantization.
+    calib_batch: int = 0
     # Replay discipline (see rl.buffer): priorities come from the critic's
     # per-transition |TD error| — the paper's prioritized D4PG analogue.
     # priority_exponent=0.0 is bitwise-uniform (static dispatch).
@@ -114,9 +119,10 @@ def make_behaviour_policy(env: Env, nets: DDPGNets, cfg: DDPGConfig):
     scale = env.spec.action_scale
 
     def build(params, observers, step, qparams=None):
-        if cfg.actor_backend == "int8":
+        if actorq.is_quantized(cfg.actor_backend):
             if qparams is None:
-                qparams = actorq.pack_actor_params(params)
+                qparams = actorq.pack_actor_params(
+                    params, actorq.backend_bits(cfg.actor_backend))
 
             def mu_fn(obs):
                 mu = actorq.quantized_apply(qparams, obs,
@@ -236,7 +242,15 @@ def make_iteration(env: Env, nets: DDPGNets, cfg: DDPGConfig):
     @jax.jit
     def iteration(state: common.TrainState, env_state, obs, key):
         k_roll, k_up = jax.random.split(key)
-        policy = build_policy(state.params, state.observers, state.step)
+        policy_kw = {}
+        if actorq.is_quantized(cfg.actor_backend) and cfg.calib_batch:
+            # static-requant mode (see dqn.make_iteration)
+            policy_kw["qparams"] = actorq.make_actor_cache(
+                state.params, cfg.actor_backend,
+                calib_obs=actorq.calib_slice(obs, cfg.calib_batch),
+                backend=cfg.kernel_backend)
+        policy = build_policy(state.params, state.observers, state.step,
+                              **policy_kw)
         env_state, obs, traj = rollout(benv, policy, state.params,
                                        env_state, obs, k_roll,
                                        cfg.rollout_steps)

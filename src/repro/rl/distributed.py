@@ -69,7 +69,7 @@ def make_distributed_a2c(env: Env, net: Network, cfg: a2c.A2CConfig,
     n_act = env.spec.n_actions
     int8_policy = actorq.make_sampling_policy(
         env.spec, backend=cfg.kernel_backend) \
-        if cfg.actor_backend == "int8" else None
+        if actorq.is_quantized(cfg.actor_backend) else None
 
     def heads(params, obs, observers, step):
         ctx = common.make_ctx(cfg.quant, observers, step)
@@ -81,10 +81,15 @@ def make_distributed_a2c(env: Env, net: Network, cfg: a2c.A2CConfig,
         key = jax.random.fold_in(key[0], jax.lax.axis_index(axis))
 
         if int8_policy is not None:
-            # quantized actor inside the shard: one int8 pack per update,
+            # quantized actor inside the shard: one int pack per update,
             # shared by all local env steps (params are replicated, so every
-            # device packs the identical cache)
-            qparams = actorq.pack_actor_params(state.params)
+            # device packs the identical cache; calib_batch calibrates per
+            # shard from its local obs slice -> fused kernel in the shard)
+            qparams = actorq.make_actor_cache(
+                state.params, cfg.actor_backend,
+                calib_obs=actorq.calib_slice(obs, cfg.calib_batch)
+                if cfg.calib_batch else None,
+                backend=cfg.kernel_backend)
 
             def policy(params, obs, k):
                 return int8_policy(qparams, obs, k)

@@ -37,9 +37,15 @@ class DQNConfig:
     warmup: int = 500             # transitions before learning
     quant: QuantConfig = QuantConfig.none()
     # ActorQ: "int8" computes behaviour-policy Q-values with the packed int8
-    # actor (refreshed once per learner update); TD learning stays fp32.
+    # actor (refreshed once per learner update); "int4" halves the cache
+    # with byte-packed W4A8 codes; TD learning stays fp32.
     actor_backend: str = "fp32"
     kernel_backend: str = "auto"
+    # calib_batch > 0: calibrate static activation scales from that many
+    # rollout observations at every cache refresh, replacing the per-layer
+    # dynamic range pass and enabling the single-pass fused MLP kernel
+    # (rl.actorq.calibrate_actor_cache).  0 keeps dynamic quantization.
+    calib_batch: int = 0
     # Replay discipline: "prioritized" samples proportionally to
     # (|td| + eps) ** priority_exponent with IS-weight correction whose
     # exponent anneals is_beta -> 1 over is_beta_anneal_updates learner
@@ -98,11 +104,12 @@ def make_behaviour_policy(env: Env, net: Network, cfg: DQNConfig):
     def build(params, observers, step, updates, qparams=None):
         eps = common.linear_epsilon(updates, cfg.eps_start,
                                     cfg.eps_end, cfg.eps_decay_updates)
-        if cfg.actor_backend == "int8":
-            # ActorQ hot path: int8 cache packed once per learner update,
+        if actorq.is_quantized(cfg.actor_backend):
+            # ActorQ hot path: int cache packed once per learner update,
             # reused by every env step of the rollout scan.
             if qparams is None:
-                qparams = actorq.pack_actor_params(params)
+                qparams = actorq.pack_actor_params(
+                    params, actorq.backend_bits(cfg.actor_backend))
 
             def behaviour_q(obs):
                 return actorq.quantized_apply(qparams, obs,
@@ -198,8 +205,16 @@ def make_iteration(env: Env, net: Network, cfg: DQNConfig):
     @jax.jit
     def iteration(state: common.TrainState, env_state, obs, key):
         k_roll, k_updates = jax.random.split(key)
+        policy_kw = {}
+        if actorq.is_quantized(cfg.actor_backend) and cfg.calib_batch:
+            # static-requant mode: hand build_policy a cache calibrated on
+            # the live observations so the rollout runs the fused kernel
+            policy_kw["qparams"] = actorq.make_actor_cache(
+                state.params, cfg.actor_backend,
+                calib_obs=actorq.calib_slice(obs, cfg.calib_batch),
+                backend=cfg.kernel_backend)
         policy = build_policy(state.params, state.observers, state.step,
-                              state.extras.updates)
+                              state.extras.updates, **policy_kw)
         env_state, obs, traj = rollout(
             benv, policy, state.params, env_state, obs, k_roll,
             cfg.rollout_steps)

@@ -17,13 +17,22 @@ Hot-path knobs (ActorQ):
   dispatch per chunk instead of one per update.  Numerically equivalent to
   the per-step driver (same seed -> same params, bitwise on CPU): the PRNG
   split chain moves into the scan carry unchanged.
-* ``actor_backend`` — ``"fp32"`` (default) or ``"int8"``.  With ``"int8"``
-  the *actor* runs true integer inference (``rl.actorq``): params are packed
-  into an int8 cache once per learner update and every dense/conv layer
-  goes through the W8A8 kernel (``kernels.ops.int8_matmul``; backend matrix
-  pallas/interpret/ref/auto).  Rollout data collection uses the int8 actor
-  for all four algorithms; evaluation uses it for every algorithm.  The
-  learner's gradient path stays fp32 — exactly the paper's ActorQ split.
+* ``actor_backend`` — ``"fp32"`` (default), ``"int8"`` or ``"int4"``.
+  With ``"int8"`` the *actor* runs true integer inference (``rl.actorq``):
+  params are packed into an int8 cache once per learner update and every
+  dense/conv layer goes through the W8A8 kernel
+  (``kernels.ops.int8_matmul``; backend matrix
+  pallas/interpret/ref/auto).  ``"int4"`` stores the cache as byte-packed
+  W4A8 codes (half the bytes, unpacked in-kernel).  Rollout data
+  collection uses the quantized actor for all four algorithms; evaluation
+  uses it for every algorithm.  The learner's gradient path stays fp32 —
+  exactly the paper's ActorQ split.
+* ``calib_batch`` — static-requant knob (quantized backends, MLP
+  policies): calibrate per-layer activation scales from this many live
+  observations at every cache refresh and run the actor forward as ONE
+  fused kernel pass (``kernels.fused_qmlp``) with int8-resident
+  inter-layer activations — no per-layer dynamic range pass, one dispatch
+  instead of ``n_layers``.  0 keeps dynamic per-layer quantization.
 * ``topology`` — ``"fused"`` (default), ``"actor-learner"``, or
   ``"async"``.  ``"actor-learner"`` runs the paper's distributed ActorQ
   paradigm (``rl.actor_learner``) for the replay algorithms (DQN/DDPG):
@@ -173,7 +182,7 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
           algo_overrides: Optional[Dict] = None,
           record_every: int = 10, eval_episodes: int = 8,
           steps_per_call: int = 1,
-          actor_backend: str = "fp32",
+          actor_backend: str = "fp32", calib_batch: int = 0,
           topology: str = "fused", num_actors: int = 1,
           sync_every: int = 1, mesh=None, async_barrier: bool = False,
           replay: str = "uniform", priority_exponent: float = 0.6,
@@ -187,7 +196,16 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
 
     ``actor_backend="int8"`` runs rollout data collection (all four
     algorithms) and the periodic evaluations through the true-int8 actor
-    (``rl.actorq``); the learner stays fp32.
+    (``rl.actorq``); the learner stays fp32.  ``"int4"`` packs the actor
+    cache to byte-packed W4A8 codes — half the int8 cache and sync/snapshot
+    bytes, same 8-bit activation protocol.
+
+    ``calib_batch > 0`` (quantized backends, MLP policies): every cache
+    refresh also calibrates *static* activation scales from that many live
+    rollout observations, replacing the per-layer dynamic range pass and
+    running the actor forward through the single-pass fused kernel
+    (``kernels.ops.fused_qmlp``).  0 (default) keeps the PR-1 dynamic
+    per-layer path bitwise unchanged.
 
     ``topology="actor-learner"`` (DQN/DDPG) runs the paper's distributed
     ActorQ paradigm with ``num_actors`` replicas and a ``sync_every``
@@ -220,6 +238,7 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
     env = make_env(env_name)
     overrides = dict(algo_overrides or {})
     overrides.setdefault("actor_backend", actor_backend)
+    overrides.setdefault("calib_batch", calib_batch)
     if algo in actor_learner.ALGOS:      # the replay algorithms (DQN/DDPG)
         overrides.setdefault("replay", replay)
         overrides.setdefault("priority_exponent", priority_exponent)
@@ -279,7 +298,7 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
 
     kernel_backend = getattr(cfg, "kernel_backend", "auto")
     int8_act = actorq.make_act_fn(env.spec, backend=kernel_backend) \
-        if actor_backend == "int8" else None
+        if actorq.is_quantized(actor_backend) else None
     # stable act-fn identity across the run -> evaluate() compiles once;
     # observers/step ride along in the params slot as traced inputs
     det_act = _det_act(act_fn)
@@ -306,7 +325,15 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
                 else state
             k_run, k_eval = jax.random.split(k_run)
             if int8_act is not None:
-                qparams = actorq.pack_actor_params(lview.params)
+                # evaluate the actor configuration that actually collects
+                # data / gets deployed: with calib_batch the eval cache is
+                # calibrated (from the live obs) and runs the fused kernel
+                cb = getattr(cfg, "calib_batch", 0)
+                obs_g = obs.reshape((-1,) + tuple(env.spec.obs_shape))
+                qparams = actorq.make_actor_cache(
+                    lview.params, actor_backend,
+                    calib_obs=actorq.calib_slice(obs_g, cb) if cb else None,
+                    backend=kernel_backend)
                 r = float(evaluate(env, int8_act, qparams, k_eval,
                                    eval_episodes,
                                    max_steps=env.spec.max_steps))
@@ -362,12 +389,14 @@ def _train_async(algo, env, net, cfg, *, iterations, record_every,
                                                    al_cfg, mesh=mesh)
     learner, wbuf = actor_learner.init_async(k_init, env, net, algo, cfg,
                                              al_cfg, double=not barrier)
-    snap = progs.make_snapshot(learner)
     env_state, obs = progs.benv_global.reset(k_env)
+    # snapshot after reset: with calib_batch the t=0 mint calibrates its
+    # static activation scales from the fresh initial observations
+    snap = progs.make_snapshot(learner, obs)
 
     kernel_backend = getattr(cfg, "kernel_backend", "auto")
     int8_act = actorq.make_act_fn(env.spec, backend=kernel_backend) \
-        if actor_backend == "int8" else None
+        if actorq.is_quantized(actor_backend) else None
     det_act = _det_act(progs.act_fn)
 
     rewards, variances, actor_lags = [], [], []
@@ -404,7 +433,7 @@ def _train_async(algo, env, net, cfg, *, iterations, record_every,
             if not barrier:
                 learner, wbuf = actor_learner.swap_read_slot(learner, wbuf)
             actor_lags.append(total_updates - snap_minted_at)
-            snap = progs.make_snapshot(learner)
+            snap = progs.make_snapshot(learner, obs)
             snap_minted_at = total_updates
             div_futs.append(progs.divergence(learner, snap, obs))
             updates_since_push = 0
@@ -412,7 +441,13 @@ def _train_async(algo, env, net, cfg, *, iterations, record_every,
         if i % record_every == 0 or i == iterations:
             k_run, k_eval = jax.random.split(k_run)
             if int8_act is not None:
-                qparams = actorq.pack_actor_params(learner.params)
+                # same contract as the sync driver: eval the calibrated
+                # (fused) cache whenever the rollout actors run one
+                cb = getattr(cfg, "calib_batch", 0)
+                qparams = actorq.make_actor_cache(
+                    learner.params, actor_backend,
+                    calib_obs=actorq.calib_slice(obs, cb) if cb else None,
+                    backend=kernel_backend)
                 r = float(evaluate(env, int8_act, qparams, k_eval,
                                    eval_episodes,
                                    max_steps=env.spec.max_steps))
@@ -455,14 +490,16 @@ def eval_policy(result: TrainResult, quant: QuantConfig, key,
 
     ``actor_backend="int8"`` deploys the packed int8 actor through the W8A8
     kernel (``kernels.ops.int8_matmul``, ``kernel_backend`` selecting
-    pallas/interpret/ref/auto) for int PTQ configs of <= 8 bits; other
-    configs (fp16, wide ints, QAT range replay) keep the fp32 simulation.
+    pallas/interpret/ref/auto) for int PTQ configs of <= 8 bits;
+    ``"int4"`` additionally caps the packed width at 4 bits (byte-packed
+    W4A8 — the half-size deployment cache); other configs (fp16, wide
+    ints, QAT range replay) keep the fp32 simulation.
     """
     actorq.validate_actor_backend(actor_backend)
-    if (actor_backend == "int8" and quant.mode == QuantMode.PTQ_INT
-            and quant.bits <= 8):
-        qparams = actorq.pack_actor_params(result.state.params,
-                                           bits=quant.bits)
+    if (actorq.is_quantized(actor_backend)
+            and quant.mode == QuantMode.PTQ_INT and quant.bits <= 8):
+        bits = min(quant.bits, actorq.backend_bits(actor_backend))
+        qparams = actorq.pack_actor_params(result.state.params, bits=bits)
         act = actorq.make_act_fn(result.env.spec, backend=kernel_backend)
         return float(evaluate(result.env, act, qparams, key, episodes,
                               max_steps=result.env.spec.max_steps))

@@ -34,9 +34,13 @@ class PPOConfig:
     entropy_coef: float = 0.01
     quant: QuantConfig = QuantConfig.none()
     # ActorQ: "int8" samples rollout actions (and behaviour logp/values)
-    # from the packed int8 actor; the minibatch learner stays fp32.
+    # from the packed int8 actor ("int4" = byte-packed W4A8); the
+    # minibatch learner stays fp32.
     actor_backend: str = "fp32"
     kernel_backend: str = "auto"
+    # calib_batch > 0: static activation scales -> fused MLP kernel
+    # (see DQNConfig.calib_batch).  0 keeps dynamic quantization.
+    calib_batch: int = 0
 
 
 def init(key, env: Env, net: Network, cfg: PPOConfig):
@@ -81,12 +85,16 @@ def make_iteration(env: Env, net: Network, cfg: PPOConfig):
     def iteration(state: common.TrainState, env_state, obs, key):
         k_roll, k_perm = jax.random.split(key)
 
-        if cfg.actor_backend == "int8":
+        if actorq.is_quantized(cfg.actor_backend):
             # ActorQ hot path: pack once per learner update; every env step
-            # of the rollout scan reuses the int8 cache.  Behaviour logp and
+            # of the rollout scan reuses the int cache.  Behaviour logp and
             # bootstrap values come from the quantized head so the clipped
             # ratio sees the true behaviour distribution.
-            qparams = actorq.pack_actor_params(state.params)
+            qparams = actorq.make_actor_cache(
+                state.params, cfg.actor_backend,
+                calib_obs=actorq.calib_slice(obs, cfg.calib_batch)
+                if cfg.calib_batch else None,
+                backend=cfg.kernel_backend)
 
             def policy(params, obs, k):
                 out = actorq.quantized_apply(qparams, obs,
@@ -104,7 +112,7 @@ def make_iteration(env: Env, net: Network, cfg: PPOConfig):
         env_state, last_obs, traj = rollout(
             benv, policy, state.params, env_state, obs, k_roll, cfg.n_steps)
         logits_b, values_b, logp_b = traj.logits_or_value
-        if cfg.actor_backend == "int8":
+        if actorq.is_quantized(cfg.actor_backend):
             # bootstrap from the same (quantized) behaviour value head as
             # the per-step values so GAE sees one consistent value function
             last_value = actorq.quantized_apply(

@@ -88,9 +88,27 @@ def test_make_act_fn_heads():
 
 
 def test_validate_actor_backend():
-    with pytest.raises(ValueError):
-        actorq.validate_actor_backend("int4")
+    # "int4" joined the backend matrix in PR 5; junk strings still fail in
+    # the one shared validator every entry point routes through
     assert actorq.validate_actor_backend("int8") == "int8"
+    assert actorq.validate_actor_backend("int4") == "int4"
+    for bad in ("int2", "INT8", "", "fp16"):
+        with pytest.raises(ValueError):
+            actorq.validate_actor_backend(bad)
+    assert actorq.backend_bits("int8") == 8
+    assert actorq.backend_bits("int4") == 4
+    with pytest.raises(ValueError):
+        actorq.backend_bits("fp32")       # quantized backends only
+    assert actorq.is_quantized("int4") and not actorq.is_quantized("fp32")
+
+
+def test_pack_actor_params_rejects_bad_bits():
+    """ValueError (not assert — asserts vanish under ``python -O``)."""
+    net = make_network((4,), 2)
+    params = net.init(jax.random.PRNGKey(0))
+    for bad in (9, 0, -1, 16):
+        with pytest.raises(ValueError):
+            actorq.pack_actor_params(params, bits=bad)
 
 
 # ---------------------------------------------------------------------------
