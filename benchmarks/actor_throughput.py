@@ -10,8 +10,8 @@ Two measurements behind the paper's systems claim (8-bit actors collect data
        repo simulated before ActorQ; same arithmetic cost as fp32),
      * int8       — the true ActorQ path (``rl.actorq``): packed int8
        params + dynamic activation quantization through the W8A8 GEMM
-       (Pallas on TPU; on this CPU host the ``ref`` oracle path, so the
-       reported CPU number is XLA-CPU latency, not the TPU kernel).
+       (``auto`` = Pallas on TPU; on this CPU host the native-XLA
+       backend, ``kernels.xla_backend``).
 
 2. Dispatch overhead — wall time of ``loops.train`` with the per-step
    driver (one jit dispatch per update) vs the scan-fused driver
@@ -23,6 +23,12 @@ Two measurements behind the paper's systems claim (8-bit actors collect data
    {1, 2, 3}.  Both modes of a cell are timed over one *shared* wall
    window (calls strictly interleaved) so host-load drift cannot fake a
    win; plus the int4-vs-int8 actor-cache footprint.
+
+4. Kernel-backend matrix (ISSUE 6) — ref vs xla vs interpret at the
+   depth-2 int8 cell, per-layer and fused, each timed strictly
+   interleaved with the same fp32 actor so ``speedup_vs_fp32`` is
+   drift-proof and the fallback-vs-native gap stays visible in the perf
+   trajectory.
 
 Emits ``BENCH_actor_throughput.json`` via ``benchmarks/common.py``.
 """
@@ -43,24 +49,30 @@ FUSED_BITS = ((8, "int8"), (4, "int4"))
 FUSED_BATCH = 256
 
 
-def _interleaved_medians(fn, args_a, args_b, warmup: int = 3,
-                         iters: int = 30):
-    """Median per-call seconds of ``fn(*args_a)`` and ``fn(*args_b)``,
-    alternated call by call over one shared wall-clock window."""
+def _interleaved_pair(a, b, warmup: int = 3, iters: int = 30):
+    """Median per-call seconds of two ``(fn, args)`` pairs, alternated
+    call by call over one shared wall-clock window (host-load drift hits
+    both sides equally — the only trustworthy ratio on a noisy host)."""
+    (fn_a, args_a), (fn_b, args_b) = a, b
     for _ in range(warmup):
-        jax.block_until_ready(fn(*args_a))
-        jax.block_until_ready(fn(*args_b))
+        jax.block_until_ready(fn_a(*args_a))
+        jax.block_until_ready(fn_b(*args_b))
     times_a, times_b = [], []
     for _ in range(iters):
         t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args_a))
+        jax.block_until_ready(fn_a(*args_a))
         times_a.append(time.perf_counter() - t0)
         t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args_b))
+        jax.block_until_ready(fn_b(*args_b))
         times_b.append(time.perf_counter() - t0)
     times_a.sort()
     times_b.sort()
     return times_a[len(times_a) // 2], times_b[len(times_b) // 2]
+
+
+def _interleaved_medians(fn, args_a, args_b, warmup: int = 3,
+                         iters: int = 30):
+    return _interleaved_pair((fn, args_a), (fn, args_b), warmup, iters)
 
 
 def _actor_fns(net, params, n_act):
@@ -158,6 +170,49 @@ def run(train_iterations: int = 60) -> List[Dict]:
                  "int4_frac": nbytes["int4"] / nbytes["int8"]})
     C.emit("fused/footprint", 0.0,
            f"int4_frac={nbytes['int4'] / nbytes['int8']:.3f}")
+
+    # -- 1c. kernel-backend matrix (ISSUE 6) ------------------------------
+    # ref vs xla vs interpret at the depth-2 int8 cell, per-layer and
+    # fused, each interleaved with the SAME fp32 actor so the recorded
+    # speedup_vs_fp32 is drift-proof.
+    from repro.core.fake_quant import NullQATContext
+
+    mnet = make_network(env.spec.obs_shape, n_act, hidden=(256, 256))
+    mparams = mnet.init(jax.random.PRNGKey(3))
+    mctx = NullQATContext()
+
+    @jax.jit
+    def fp32_act2(p, o):
+        return jnp.argmax(mnet.apply(mctx, p, o)[..., :n_act], -1)
+
+    per_cache = actorq.pack_actor_params(mparams, bits=8)
+    fused_cache = actorq.calibrate_actor_cache(per_cache, obs)
+
+    def _backend_act(backend):
+        @jax.jit
+        def act(cache, o):
+            return jnp.argmax(
+                actorq.quantized_apply(cache, o, backend=backend
+                                       )[..., :n_act], -1)
+        return act
+
+    for backend in ("ref", "xla", "interpret"):
+        act = _backend_act(backend)
+        for mode, cache in (("per_layer", per_cache),
+                            ("fused", fused_cache)):
+            iters = 10 if backend == "interpret" else 30
+            t_fp, t_q = _interleaved_pair((fp32_act2, (mparams, obs)),
+                                          (act, (cache, obs)),
+                                          warmup=2, iters=iters)
+            rows.append({"section": "backend_matrix", "backend": backend,
+                         "mode": mode, "bits": 8, "depth": 2,
+                         "batch": FUSED_BATCH, "us_per_call": t_q * 1e6,
+                         "env_steps_per_sec": FUSED_BATCH / t_q,
+                         "fp32_us_per_call": t_fp * 1e6,
+                         "speedup_vs_fp32": t_fp / t_q})
+            C.emit(f"backend/{backend}/{mode}", t_q * 1e6,
+                   f"steps_per_sec={FUSED_BATCH / t_q:.0f}"
+                   f";speedup_vs_fp32={t_fp / t_q:.2f}x")
 
     # -- 2. driver dispatch overhead: per-step vs scan-fused --------------
     # Same total update budget through both drivers, timed after compile,

@@ -54,7 +54,9 @@ def _check_actor_throughput_schema() -> None:
     single-pass section must be present with every (bits, depth) cell
     carrying BOTH modes — a fused row without its per-layer baseline means
     the comparison silently broke — all throughputs finite and positive,
-    and the int4 footprint at most ~half the int8 cache."""
+    and the int4 footprint at most ~half the int8 cache.  ISSUE 6 adds the
+    kernel-backend matrix: the xla backend must appear with both modes and
+    a recorded ``speedup_vs_fp32`` per cell."""
     import json
     import math
 
@@ -78,8 +80,21 @@ def _check_actor_throughput_schema() -> None:
         assert modes == {"fused", "per_layer"}, (cell, modes)
     foot = [r for r in rows if r.get("section") == "fused_qmlp_footprint"]
     assert foot and float(foot[0]["int4_frac"]) <= 0.55, foot
+    matrix = [r for r in rows if r.get("section") == "backend_matrix"]
+    assert matrix, "backend_matrix section missing from " + path
+    xla_modes = set()
+    for r in matrix:
+        for k in ("us_per_call", "env_steps_per_sec", "fp32_us_per_call",
+                  "speedup_vs_fp32"):
+            assert k in r, (k, r)
+            v = float(r[k])
+            assert math.isfinite(v) and v > 0, (k, r)
+        if r["backend"] == "xla":
+            xla_modes.add(r["mode"])
+    assert xla_modes == {"fused", "per_layer"}, xla_modes
     print(f"BENCH_actor_throughput.json schema OK ({len(cells)} fused "
-          f"cells, int4_frac={float(foot[0]['int4_frac']):.3f})")
+          f"cells, {len(matrix)} backend-matrix rows, "
+          f"int4_frac={float(foot[0]['int4_frac']):.3f})")
 
 
 def main(argv=None) -> None:

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 from typing import NamedTuple, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 
 
@@ -36,12 +37,34 @@ class AffineParams(NamedTuple):
     bits: int
 
 
+def _order_keys(i: jnp.ndarray) -> jnp.ndarray:
+    """Self-inverse int32 transform of f32 bit patterns whose int ordering
+    matches the float ordering (flip the magnitude bits of negatives)."""
+    return i ^ ((i >> 31) & jnp.int32(0x7FFFFFFF))
+
+
 def _range_including_zero(w: jnp.ndarray, axes: Optional[Sequence[int]]
                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """(min(W,0), max(W,0)) reduced over ``axes`` (None = all axes)."""
-    wmin = jnp.minimum(jnp.min(w, axis=axes, keepdims=axes is not None), 0.0)
-    wmax = jnp.maximum(jnp.max(w, axis=axes, keepdims=axes is not None), 0.0)
-    return wmin, wmax
+    keep = axes is not None
+    if w.dtype == jnp.float32 and jax.default_backend() == "cpu":
+        # XLA:CPU lowers float min/max reductions to a slow scalar loop
+        # (~7x its integer reductions — this range pass dominated the
+        # dynamic-quantization cost of the int8 actor hot path), so reduce
+        # order-isomorphic int32 keys instead.  Exact for every finite
+        # float: only the sign of a -0.0/0.0 tie and NaN propagation can
+        # differ, neither of which changes the derived affine params.
+        keys = _order_keys(jax.lax.bitcast_convert_type(w, jnp.int32))
+        wmin = jax.lax.bitcast_convert_type(
+            _order_keys(jnp.min(keys, axis=axes, keepdims=keep)),
+            jnp.float32)
+        wmax = jax.lax.bitcast_convert_type(
+            _order_keys(jnp.max(keys, axis=axes, keepdims=keep)),
+            jnp.float32)
+    else:
+        wmin = jnp.min(w, axis=axes, keepdims=keep)
+        wmax = jnp.max(w, axis=axes, keepdims=keep)
+    return jnp.minimum(wmin, 0.0), jnp.maximum(wmax, 0.0)
 
 
 def affine_params_from_range(wmin: jnp.ndarray, wmax: jnp.ndarray,

@@ -1,35 +1,53 @@
 """Jit'd public wrappers around the Pallas kernels.
 
 Each op dispatches between the Pallas hot path (TPU target; ``interpret=True``
-execution on CPU for validation) and the pure-jnp oracle in ``ref.py`` (used
-inside pjit programs during the CPU dry-run, where XLA fuses it fine and the
-kernel is not the object of study). Selection:
+execution on CPU for validation), the native-XLA integer path in
+``xla_backend.py`` (the commodity CPU/GPU hot path), and the pure-jnp oracle
+in ``ref.py``. Selection:
 
     backend="pallas"     pallas_call, compiled (TPU)
     backend="interpret"  pallas_call, interpret mode (CPU correctness)
+    backend="xla"        lax.dot_general integer GEMM (CPU/GPU hot path)
     backend="ref"        pure-jnp oracle
-    backend="auto"       pallas on TPU, ref elsewhere
+    backend="auto"       pallas on TPU, xla elsewhere
+
+``auto`` also consults the ``REPRO_KERNEL_BACKEND`` env var: setting it to
+``pallas``/``interpret``/``ref``/``xla`` forces that backend at every
+``backend="auto"`` call site (CI / debugging without threading the knob
+through every config).  An explicit ``backend=`` argument always wins — the
+parity tests pin backends on purpose — and the variable is read at trace
+time, so set it before the first jitted call.
 """
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import affine
-from repro.kernels import ref
+from repro.kernels import ref, xla_backend
 from repro.kernels.fake_quant import fake_quant_pallas
 from repro.kernels.fused_qmlp import fused_qmlp_pallas
 from repro.kernels.int8_matmul import int8_matmul_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 
+ENV_BACKEND = "REPRO_KERNEL_BACKEND"
+BACKENDS = ("pallas", "interpret", "ref", "xla")
+
 
 def _resolve(backend: str) -> str:
     if backend != "auto":
         return backend
-    return "pallas" if jax.default_backend() == "tpu" else "ref"
+    env = os.environ.get(ENV_BACKEND)
+    if env:
+        if env not in BACKENDS:
+            raise ValueError(f"{ENV_BACKEND}={env!r} — must be one of "
+                             f"{BACKENDS}")
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
 # ---------------------------------------------------------------------------
@@ -41,7 +59,9 @@ def fake_quant(x: jnp.ndarray, bits: int = 8, *, backend: str = "auto"
                ) -> jnp.ndarray:
     """Fused per-tensor quantize-dequantize of an arbitrary-rank tensor."""
     b = _resolve(backend)
-    if b == "ref":
+    if b in ("ref", "xla"):
+        # elementwise — the oracle IS the optimal XLA program (one fused
+        # loop); "xla" aliases it so auto-resolution never breaks an op
         return ref.fake_quant_ref(x, bits)
     vmin = jnp.minimum(jnp.min(x), 0.0).astype(jnp.float32)
     vmax = jnp.maximum(jnp.max(x), 0.0).astype(jnp.float32)
@@ -68,14 +88,28 @@ def int8_matmul(x_q, w_q, x_scale, x_zero, w_scale, w_zero,
     the W4A8 product equals the W8A8 product over the unpacked codes.
     """
     b = _resolve(backend)
-    if w_bits <= 4 and w_q.shape[0] != (x_q.shape[-1] + 1) // 2:
-        # the packed layout is easy to get wrong silently (unpacked codes,
-        # or an 8-bit cache passed with w_bits=4, would just compute
-        # garbage) — keep the int8 branch's K validation here too
+    if w_bits <= 4:
+        if w_q.shape[0] != (x_q.shape[-1] + 1) // 2:
+            # the packed layout is easy to get wrong silently (unpacked
+            # codes, or an 8-bit cache passed with w_bits=4, would just
+            # compute garbage)
+            raise ValueError(
+                f"w_bits={w_bits} expects byte-packed codes of "
+                f"{(x_q.shape[-1] + 1) // 2} rows for K={x_q.shape[-1]}, "
+                f"got {w_q.shape}")
+    elif w_q.shape[0] != x_q.shape[-1]:
+        # a K-mismatched w_q (e.g. a byte-packed int4 cache passed with
+        # the default w_bits=8) would otherwise broadcast or contract
+        # garbage silently
         raise ValueError(
-            f"w_bits={w_bits} expects byte-packed codes of "
-            f"{(x_q.shape[-1] + 1) // 2} rows for K={x_q.shape[-1]}, "
-            f"got {w_q.shape}")
+            f"w_bits={w_bits} expects unpacked codes of "
+            f"{x_q.shape[-1]} rows for K={x_q.shape[-1]}, got "
+            f"{w_q.shape}; byte-packed int4 caches must pass w_bits<=4")
+    if b == "xla":
+        return xla_backend.int8_matmul_xla(x_q, w_q, x_scale, x_zero,
+                                           w_scale, w_zero,
+                                           out_dtype=out_dtype,
+                                           w_bits=w_bits)
     if b == "ref":
         if w_bits <= 4:
             w_q = affine.unpack_int4(w_q, x_q.shape[-1])
@@ -109,6 +143,8 @@ def fused_qmlp(x, layers, out_dtype=jnp.float32, *, backend: str = "auto"):
         x2, affine.AffineParams(l0.x_delta, l0.x_zero, bits=8))
     if b == "ref":
         y = ref.fused_qmlp_ref(x_q, layers)
+    elif b == "xla":
+        y = xla_backend.fused_qmlp_xla(x_q, layers, out_dtype=out_dtype)
     else:
         y = fused_qmlp_pallas(x_q, layers, out_dtype=out_dtype,
                               interpret=(b == "interpret"))
@@ -132,7 +168,9 @@ def flash_attention(q, k, v, *, causal: bool = True,
     vmapped over. GQA sharing is handled by the caller (repeat/reshape of kv).
     """
     b = _resolve(backend)
-    if b == "ref":
+    if b in ("ref", "xla"):
+        # the dense oracle is already the best plain-XLA attention program
+        # at these policy-sized shapes; "xla" aliases it (auto-safe)
         fn = functools.partial(ref.mha_ref, causal=causal, window=window,
                                softcap=softcap, scale=scale)
     else:

@@ -1,0 +1,158 @@
+"""Native-XLA int8 backend: the quantized GEMMs as plain lax programs.
+
+This is the off-TPU hot path behind ``kernel_backend="xla"`` (and the
+``auto`` default everywhere except TPU — ``kernels.ops._resolve``).  The
+Pallas kernels target the TPU MXU; the pure-jnp oracle in ``ref.py`` is
+correct everywhere but pays one int32 matmul that XLA:CPU lowers to a
+scalar loop, which is how the committed benchmark ended up with int8
+actors at 0.17–0.37x fp32 on CPU.  Here each platform gets the lowering
+its XLA backend is actually fast at:
+
+* **gpu/tpu** — ``lax.dot_general`` directly on the int8 codes with
+  ``preferred_element_type=jnp.int32`` (the native integer-MMA path),
+  plus the same ``sum_w``/``sum_x`` zero-point-correction algebra as
+  ``ref.int8_matmul_ref``.
+
+* **cpu** — jaxlib's CPU backend emits a naive loop for integer dots
+  (measured 7–8x *slower* than its f32 GEMM on an AVX-512 host), so the
+  codes are *centered* and the contraction runs on the f32 GEMM:
+
+      (x_q - x_zero) @ (w_q - w_zero)  ==  x_q@w_q - x_zero*sum_w
+                                           - w_zero*sum_x + K*x_zero*w_zero
+
+  i.e. the centered product *is* the zero-point-corrected accumulator,
+  with every runtime reduction term eliminated (the centering folds into
+  the int8->f32 cast pass XLA fuses anyway).  The f32 evaluation is
+  **exact**: centered 8-bit codes have magnitude <= 255, so every product
+  is an integer below 2**16 and every partial sum stays below the f32
+  exact-integer bound 2**24 while the contraction is at most
+  ``_exact_chunk`` long.  Longer contractions are split into exact chunks
+  accumulated in int32 — the same mod-2**32 arithmetic as the oracle —
+  so the result is bit-identical to int32 accumulation at any K.
+
+Either way the float epilogue multiplies in the exact op order of
+``ref.int8_matmul_ref`` (scale product, then correction term), which is
+the repo's bitwise-anchor contract: ``tests/test_xla_backend.py`` asserts
+``assert_array_equal`` against the oracle across the bits/shape matrix.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import affine
+
+# Largest contraction (in elements) whose centered-code f32 dot is exact:
+# |products| <= amax * wmax, and f32 adds of integers are exact below 2**24.
+_F32_EXACT = 1 << 24
+_A8_MAX = 255            # centered 8-bit activation codes: |x_q - x_zero|
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _exact_chunk(w_bits: int) -> int:
+    w_max = (1 << w_bits) - 1            # centered |w_q - w_zero| bound
+    return max(_F32_EXACT // (_A8_MAX * w_max), 1)
+
+
+def _exact_f32_matmul(xc: jnp.ndarray, wc: jnp.ndarray, w_bits: int
+                      ) -> jnp.ndarray:
+    """f32 GEMM over centered integer-valued codes, exact vs int32 accum.
+
+    Single chunk: every partial sum is below 2**24, so the f32 result is
+    the exact integer.  Chunked: each chunk is exact, and the chunks are
+    summed in int32 — identical (mod 2**32) to the oracle's accumulator.
+    """
+    k = xc.shape[-1]
+    chunk = _exact_chunk(w_bits)
+    if k <= chunk:
+        return jnp.matmul(xc, wc)
+    acc = None
+    for s in range(0, k, chunk):
+        part = jnp.matmul(xc[:, s:s + chunk], wc[s:s + chunk]
+                          ).astype(jnp.int32)
+        acc = part if acc is None else acc + part
+    return acc.astype(jnp.float32)
+
+
+def _int_dot_corr(x_q: jnp.ndarray, w_q: jnp.ndarray, x_zero, w_zero
+                  ) -> jnp.ndarray:
+    """Native int8 dot + zero-point correction (ref algebra), int32 out."""
+    k = x_q.shape[-1]
+    acc = jax.lax.dot_general(x_q, w_q, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    sum_w = jnp.sum(w_q.astype(jnp.int32), axis=0)                # (N,)
+    sum_x = jnp.sum(x_q.astype(jnp.int32), axis=-1, keepdims=True)  # (M,1)
+    xz = x_zero.astype(jnp.int32)
+    wz = w_zero.astype(jnp.int32)[None, :]
+    return acc - xz * sum_w[None, :] - wz * sum_x + k * xz * wz
+
+
+def int8_matmul_xla(x_q: jnp.ndarray, w_q: jnp.ndarray, x_scale, x_zero,
+                    w_scale, w_zero, out_dtype: Any = jnp.float32, *,
+                    w_bits: int = 8) -> jnp.ndarray:
+    """(M,K)i8 @ (K,N)i8 -> (M,N)f, bit-identical to ``int8_matmul_ref``.
+
+    ``w_bits <= 4`` consumes byte-packed codes (``affine.pack_int4``
+    layout, ``(ceil(K/2), N)``) and unpacks them host-side — XLA fuses
+    the nibble shifts into the operand cast, so the GEMM still dominates.
+    """
+    k = x_q.shape[-1]
+    if w_bits <= 4:
+        w_q = affine.unpack_int4(w_q, k)
+    x_zero = jnp.asarray(x_zero, jnp.float32)
+    w_zero = jnp.asarray(w_zero, jnp.float32).reshape(-1)
+    if _is_cpu():
+        xc = x_q.astype(jnp.float32) - x_zero
+        wc = w_q.astype(jnp.float32) - w_zero[None, :]
+        corr = _exact_f32_matmul(xc, wc, min(w_bits, 8))
+    else:
+        corr = _int_dot_corr(x_q, w_q, x_zero, w_zero).astype(jnp.float32)
+    w_scale = jnp.asarray(w_scale, jnp.float32).reshape(-1)
+    return (x_scale * w_scale[None, :] * corr).astype(out_dtype)
+
+
+def fused_qmlp_xla(x_q: jnp.ndarray, layers: Tuple, *,
+                   out_dtype: Any = jnp.float32) -> jnp.ndarray:
+    """Chained-XLA fused quantized MLP: activations stay int8-coded.
+
+    ``x_q`` is ``(M, K0)`` int8, already quantized with layer 0's static
+    params (``kernels.ops.fused_qmlp`` does this); ``layers`` a tuple of
+    ``fused_qmlp.QMLPLayer`` carrying the ``calibrate_actor_cache`` static
+    requant scales.  Between the ``dot_general`` calls each hidden
+    activation is requantized with the next layer's static params —
+    exactly ``affine.quantize_with_params`` (round of a division, then
+    clip), so the chain is bitwise the ref oracle / per-layer path.  On
+    CPU the int8 codes ride as centered f32 (see module docstring); on
+    gpu/tpu they stay int8 into the native integer dot.
+    """
+    n_layers = len(layers)
+    cpu = _is_cpu()
+    h = (x_q.astype(jnp.float32) - layers[0].x_zero) if cpu else x_q
+    for i, layer in enumerate(layers):
+        w = layer.codes
+        if layer.bits <= 4:
+            w = affine.unpack_int4(w, layer.k)
+        col_zero = layer.col_zero.reshape(-1)
+        if cpu:
+            wc = w.astype(jnp.float32) - col_zero[None, :]
+            corr = _exact_f32_matmul(h, wc, min(layer.bits, 8))
+        else:
+            corr = _int_dot_corr(h, w, layer.x_zero,
+                                 col_zero).astype(jnp.float32)
+        y = layer.x_delta * layer.col_scale[None, :] * corr + layer.bias
+        if i + 1 < n_layers:
+            nxt = layers[i + 1]
+            y = jnp.maximum(y, 0.0)
+            # static requant == affine.quantize_with_params bit for bit:
+            # round(y/delta) (division, not a reciprocal multiply) + zero,
+            # clipped to the signed-storage int8 range
+            q = jnp.clip(jnp.round(y / nxt.x_delta) + nxt.x_zero,
+                         -128.0, 127.0)
+            h = (q - nxt.x_zero) if cpu else q.astype(jnp.int8)
+        else:
+            return y.astype(out_dtype)

@@ -23,7 +23,8 @@ def _serve_policy(args) -> int:
 
     ``--actor-backend int8`` packs the policy into the int8 cache
     (``rl.actorq``) and answers action queries through the W8A8 kernel
-    (``--kernel-backend`` = pallas | interpret | ref | auto); ``fp32`` serves
+    (``--kernel-backend`` = pallas | interpret | ref | xla | auto); ``fp32``
+    serves
     the plain policy.  Reports params memory and actions/sec.
     """
     import jax
@@ -169,7 +170,7 @@ def main(argv=None) -> int:
                     help="int8 = W8A8 packed actor; int4 = byte-packed "
                          "W4A8 (half the served cache)")
     ap.add_argument("--kernel-backend", default="auto",
-                    choices=["pallas", "interpret", "ref", "auto"])
+                    choices=["pallas", "interpret", "ref", "xla", "auto"])
     ap.add_argument("--calib-batch", type=int, default=0,
                     help="static-requant calibration batch for quantized "
                          "actors: >0 calibrates per-layer activation "

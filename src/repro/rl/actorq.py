@@ -7,7 +7,8 @@ thing: policy parameters are packed once per learner update into an int8
 cache (``pack_actor_params``), and every dense layer of the actor forward
 pass runs through the W8A8 integer GEMM in ``repro.kernels`` —
 ``lax.dot_general`` over int8 codes with int32 accumulation and a fused
-affine-dequant epilogue (Pallas on TPU, the pure-jnp oracle on CPU).
+affine-dequant epilogue (Pallas on TPU, the native-XLA integer backend in
+``kernels.xla_backend`` everywhere else).
 
 Quantization scheme (matches ``core.ptq`` exactly, so the int8 path and the
 fake-quant simulation share one quantizer):
@@ -28,8 +29,10 @@ Kernel backend selection (threaded through ``backend=`` everywhere):
 
     "pallas"     pallas_call, compiled       (TPU hot path)
     "interpret"  pallas_call, interpret mode (CPU kernel validation)
+    "xla"        lax integer/centered GEMMs  (CPU/GPU hot path)
     "ref"        pure-jnp oracle             (CPU correctness / pjit)
-    "auto"       pallas on TPU, ref elsewhere (default)
+    "auto"       pallas on TPU, xla elsewhere (default; see also the
+                 ``REPRO_KERNEL_BACKEND`` env override in ``kernels.ops``)
 
 Entry points:
 

@@ -22,7 +22,7 @@ Hot-path knobs (ActorQ):
   params are packed into an int8 cache once per learner update and every
   dense/conv layer goes through the W8A8 kernel
   (``kernels.ops.int8_matmul``; backend matrix
-  pallas/interpret/ref/auto).  ``"int4"`` stores the cache as byte-packed
+  pallas/interpret/ref/xla/auto).  ``"int4"`` stores the cache as byte-packed
   W4A8 codes (half the bytes, unpacked in-kernel).  Rollout data
   collection uses the quantized actor for all four algorithms; evaluation
   uses it for every algorithm.  The learner's gradient path stays fp32 —
@@ -490,7 +490,7 @@ def eval_policy(result: TrainResult, quant: QuantConfig, key,
 
     ``actor_backend="int8"`` deploys the packed int8 actor through the W8A8
     kernel (``kernels.ops.int8_matmul``, ``kernel_backend`` selecting
-    pallas/interpret/ref/auto) for int PTQ configs of <= 8 bits;
+    pallas/interpret/ref/xla/auto) for int PTQ configs of <= 8 bits;
     ``"int4"`` additionally caps the packed width at 4 bits (byte-packed
     W4A8 — the half-size deployment cache); other configs (fp16, wide
     ints, QAT range replay) keep the fp32 simulation.
