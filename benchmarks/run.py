@@ -97,6 +97,39 @@ def _check_actor_throughput_schema() -> None:
           f"int4_frac={float(foot[0]['int4_frac']):.3f})")
 
 
+def _check_serving_schema() -> None:
+    """Schema gate on ``BENCH_serving.json`` (ISSUE 7): every actor
+    backend must appear in BOTH sections, the open-loop rows must carry
+    >= 512 concurrent sessions with finite positive rates and ordered
+    latency percentiles (p50 <= p99), and the quantized caches must be
+    smaller than fp32 (the cache column is the paper's footprint claim)."""
+    import json
+    import math
+
+    path = os.path.join(_ROOT, "artifacts", "bench", "BENCH_serving.json")
+    with open(path) as f:
+        rows = json.load(f)
+    cap = {r["backend"]: r for r in rows
+           if r.get("section") == "serve_capacity"}
+    load = {r["backend"]: r for r in rows
+            if r.get("section") == "serve_load"}
+    want = {"fp32", "int8", "int4"}
+    assert set(cap) == want and set(load) == want, (set(cap), set(load))
+    for b, r in load.items():
+        assert int(r["sessions"]) >= 512, r
+        for k in ("offered_rps", "sustained_rps", "p50_ms", "p99_ms",
+                  "mean_batch"):
+            v = float(r[k])
+            assert math.isfinite(v) and v > 0, (b, k, r)
+        assert float(r["p50_ms"]) <= float(r["p99_ms"]), (b, r)
+        assert int(r["dispatches"]) < int(r["requests"]), (b, r)
+    for b in ("int8", "int4"):
+        assert cap[b]["cache_nbytes"] < cap["fp32"]["cache_nbytes"], b
+    assert cap["int4"]["cache_nbytes"] < cap["int8"]["cache_nbytes"]
+    print(f"BENCH_serving.json schema OK ({len(load)} backends, "
+          f"{load['int8']['sessions']} sessions)")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--fast", action="store_true",
@@ -115,7 +148,8 @@ def main(argv=None) -> None:
 
     from benchmarks import (actor_learner, actor_throughput, deployment,
                             exploration, mixed_precision, ptq_rewards,
-                            qat_bitwidth, roofline, weight_distribution)
+                            qat_bitwidth, roofline, serve_load,
+                            weight_distribution)
 
     if fast:
         jobs = [
@@ -141,6 +175,9 @@ def main(argv=None) -> None:
             ("actor_learner_topology",
              lambda: (actor_learner.run(iters=10),
                       _check_actor_learner_schema())),
+            ("serving_load",
+             lambda: (serve_load.run(),
+                      _check_serving_schema())),
         ]
     else:
         jobs = [
@@ -157,6 +194,9 @@ def main(argv=None) -> None:
             ("actor_learner_topology",
              lambda: (actor_learner.run(),
                       _check_actor_learner_schema())),
+            ("serving_load",
+             lambda: (serve_load.run(),
+                      _check_serving_schema())),
         ]
     jobs.append(("roofline", roofline.main))
 

@@ -1,0 +1,156 @@
+"""Serving load benchmark: sustained req/s + p50/p99 step latency.
+
+Drives ``repro.serving.PolicyServer`` with a heavy synthetic **open-loop**
+load — arrival times are drawn from a fixed schedule independent of
+completions, so queueing delay shows up in the latency numbers instead of
+being absorbed by a closed feedback loop — across the fp32 / int8 / int4
+actor backends at >= 512 concurrent sessions.
+
+Per backend, two phases:
+
+1. **capacity probes**: (a) device side — full max-bucket batches through
+   ``serve_batch`` directly, the ceiling the batcher can amortize toward;
+   (b) request path — a closed-loop burst through submit + worker, the
+   rate the host-side dispatch machinery itself sustains.
+2. **open-loop load**: one driver thread submits per the arrival schedule
+   (offered rate = ``LOAD_FRACTION`` x the request-path capacity, so the
+   reported percentiles measure a *stable* queue, not unbounded backlog
+   growth), worker thread batches + serves; per-request latency =
+   enqueue -> completion.
+
+Emits ``artifacts/bench/BENCH_serving.json`` (sections ``serve_capacity``,
+``serve_load``) — schema-gated by ``run.py --smoke``.  The capacity-
+planning worked example in ``docs/serving.md`` reads straight off this
+artifact.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+
+BACKENDS = ("fp32", "int8", "int4")
+LOAD_FRACTION = 0.6      # offered open-loop rate as a fraction of capacity
+BUCKETS = (8, 32, 128, 512)
+MAX_WAIT_US = 2000
+CALIB_BATCH = 64
+
+
+def _make_server(actor_backend: str):
+    import jax
+
+    from repro.rl.env import EnvSpec
+    from repro.rl.networks import make_network
+    from repro.serving import PolicyServer
+
+    spec = EnvSpec(name="bench-serve", obs_shape=(4,), n_actions=2)
+    params = make_network(spec.obs_shape, 2, hidden=(64, 64)).init(
+        jax.random.PRNGKey(0))
+    srv = PolicyServer(spec, actor_backend=actor_backend,
+                       kernel_backend="auto", buckets=BUCKETS,
+                       max_wait_us=MAX_WAIT_US, calib_batch=CALIB_BATCH)
+    obs = np.asarray(jax.random.normal(jax.random.PRNGKey(1),
+                                       (CALIB_BATCH, 4)), np.float32)
+    srv.push_params(params, calib_obs=obs)
+    srv.warmup()
+    return srv, spec
+
+
+def _probe_capacity(srv, n_batches: int) -> float:
+    """Closed-loop ceiling: full max-bucket dispatches, actions/sec."""
+    from repro.serving.batcher import Request
+
+    bucket = srv.buckets[-1]
+    sids = [srv.open_session() for _ in range(bucket)]
+    rng = np.random.default_rng(0)
+    obs = rng.standard_normal((bucket, 4)).astype(np.float32)
+    t0 = time.perf_counter()
+    for _ in range(n_batches):
+        srv.serve_batch([Request(sid, obs[i])
+                         for i, sid in enumerate(sids)])
+    dt = time.perf_counter() - t0
+    for sid in sids:
+        srv.close_session(sid)
+    return n_batches * bucket / dt
+
+
+def _open_loop(srv, sessions: int, requests: int, offered_rps: float):
+    """Submit ``requests`` on a fixed arrival schedule; return latencies
+    (seconds, in completion order) and the sustained service rate."""
+    sids = [srv.open_session() for _ in range(sessions)]
+    rng = np.random.default_rng(1)
+    obs = rng.standard_normal((sessions, 4)).astype(np.float32)
+    # deterministic uniform arrival schedule at the offered rate
+    schedule = np.arange(requests) / offered_rps
+    reqs = []
+    with srv:
+        t0 = time.perf_counter()
+        for i in range(requests):
+            now = time.perf_counter() - t0
+            wait = schedule[i] - now
+            if wait > 0:
+                time.sleep(wait)
+            s = i % sessions
+            reqs.append(srv.submit(sids[s], obs[s]))
+        lats = [r.result(timeout=120).latency_s for r in reqs]
+        dt = time.perf_counter() - t0
+    for sid in sids:
+        srv.close_session(sid)
+    return np.asarray(lats), requests / dt
+
+
+def run(sessions: int = 512, requests: int = 4096,
+        probe_batches: int = 20) -> list:
+    """Benchmark every actor backend; emit + save BENCH_serving.json."""
+    requests = common.scaled(requests, lo=256)
+    probe_batches = common.scaled(probe_batches, lo=3)
+    rows = []
+    for backend in BACKENDS:
+        srv, spec = _make_server(backend)
+        cap = _probe_capacity(srv, probe_batches)
+        # request-path ceiling: a short saturating burst through the real
+        # submit -> batcher -> worker path (offering a fraction of the
+        # device ceiling would overload the host-side dispatch machinery
+        # and measure backlog growth instead of steady-state latency)
+        _, path_rps = _open_loop(srv, min(sessions, 128),
+                                 max(requests // 4, 64), offered_rps=1e9)
+        nbytes = srv.current.nbytes
+        rows.append(dict(section="serve_capacity", backend=backend,
+                         bucket=srv.buckets[-1], actions_per_sec=cap,
+                         request_path_rps=float(path_rps),
+                         cache_nbytes=nbytes))
+        common.emit(f"serve_capacity_{backend}", 1e6 / cap,
+                    f"{cap:.0f}_actions_per_sec")
+        offered = max(min(cap, path_rps) * LOAD_FRACTION, 1.0)
+        before = srv.stats()       # probe counters must not pollute load
+        lats, sustained = _open_loop(srv, sessions, requests, offered)
+        after = srv.stats()
+        dispatches = after["dispatches"] - before["dispatches"]
+        served = after["served"] - before["served"]
+        padding = after["padding_rows"] - before["padding_rows"]
+        p50, p99 = (float(np.percentile(lats, q) * 1e3) for q in (50, 99))
+        rows.append(dict(
+            section="serve_load", backend=backend, sessions=sessions,
+            requests=requests, offered_rps=float(offered),
+            sustained_rps=float(sustained), p50_ms=p50, p99_ms=p99,
+            mean_ms=float(lats.mean() * 1e3),
+            dispatches=dispatches,
+            mean_batch=served / max(dispatches, 1),
+            padding_frac=padding / max(padding + served, 1),
+            cache_nbytes=nbytes, buckets=list(srv.buckets),
+            max_wait_us=MAX_WAIT_US, calib_batch=CALIB_BATCH))
+        common.emit(f"serve_load_{backend}", p50 * 1e3,
+                    f"{sustained:.0f}_rps_p99_{p99:.2f}ms")
+        print(f"  {backend}: capacity {cap:.0f} act/s, offered "
+              f"{offered:.0f} rps -> sustained {sustained:.0f} rps, "
+              f"p50 {p50:.2f}ms p99 {p99:.2f}ms, "
+              f"mean batch {rows[-1]['mean_batch']:.1f}, "
+              f"cache {nbytes / 1e3:.1f}KB")
+    common.save_rows("BENCH_serving", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

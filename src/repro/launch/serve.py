@@ -1,14 +1,26 @@
-"""Serving launcher: batched greedy decoding with (optionally int8) weights
-and (optionally int8) KV caches — the paper's deployment case study scaled to
-the assigned architectures — plus an RL policy-serving mode (ActorQ
-deployment: ``--rl-env`` serves a policy with a true int8 actor).
+"""Serving launcher: LM decoding demo + the RL policy-serving service.
+
+Two modes:
+
+* **LM mode** (default): batched greedy decoding with (optionally int8)
+  weights and (optionally int8) KV caches — the paper's deployment case
+  study scaled to the assigned architectures.
+* **RL mode** (``--rl-env``): trains a policy (any topology —
+  ``fused`` / ``actor-learner`` / ``async`` — with fp32/int8/int4 actors,
+  uniform or prioritized replay, any kernel backend incl. the native-XLA
+  int8 path), then stands up the **continuous-batching policy server**
+  (``repro.serving``): concurrent sessions multiplexed onto shape-bucketed
+  padded batches against a packed actor cache with zero-copy hot-swap.
+  This CLI is a thin veneer — the subsystem lives in
+  ``src/repro/serving/``; see ``docs/serving.md``.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \\
       --reduced --batch 4 --prompt-len 32 --new-tokens 32 --quant ptq_int8 \\
       --int8-cache
   PYTHONPATH=src python -m repro.launch.serve --rl-env cartpole \\
-      --actor-backend int8 --batch 256 --rl-iters 40
+      --topology async --actor-backend int4 --calib-batch 64 \\
+      --serve-sessions 256 --serve-steps 4
 """
 from __future__ import annotations
 
@@ -19,16 +31,21 @@ import time
 
 
 def _serve_policy(args) -> int:
-    """ActorQ deployment: serve batched policy inference on an RL env.
+    """ActorQ deployment through the continuous-batching policy server.
 
-    ``--actor-backend int8`` packs the policy into the int8 cache
-    (``rl.actorq``) and answers action queries through the W8A8 kernel
-    (``--kernel-backend`` = pallas | interpret | ref | xla | auto); ``fp32``
-    serves
-    the plain policy.  Reports params memory and actions/sec.
+    Trains the policy, then pushes it into a ``repro.serving.PolicyServer``
+    (``--actor-backend`` fp32 | int8 | int4 packed caches; ``--calib-batch``
+    > 0 calibrates static activation scales at push so MLP actors serve
+    through the single-pass fused kernel; ``--kernel-backend`` = pallas |
+    interpret | ref | xla | auto picks the GEMM path) and drives
+    ``--serve-sessions`` concurrent env sessions against it, demonstrating
+    a zero-copy hot-swap mid-load.  Reports cache footprint, sustained
+    actions/sec and p50/p99 per-step latency.
     """
     import jax
+    import jax.numpy as jnp
 
+    from repro import serving
     from repro.core import ptq
     from repro.rl import actorq, loops
     from repro.rl.actor_learner import ALGOS as REPLAY_ALGOS
@@ -75,74 +92,90 @@ def _serve_policy(args) -> int:
     params = res.state.params
     fp32_bytes = ptq.tree_nbytes(params)
 
-    if actorq.is_quantized(args.actor_backend):
-        served = actorq.pack_actor_params(
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    server = serving.PolicyServer(
+        env.spec, actor_backend=args.actor_backend,
+        kernel_backend=args.kernel_backend, buckets=buckets,
+        max_wait_us=args.max_wait_us, calib_batch=args.calib_batch)
+
+    calib_obs = None
+    if actorq.is_quantized(args.actor_backend) and args.calib_batch:
+        # deployment-time calibration: static activation scales from the
+        # states the *trained* policy actually visits — a short greedy
+        # rollout from reset (reset draws alone sit near the origin for
+        # the classic-control envs and would saturate the scales once the
+        # served policy drifts) -> the single-pass fused MLP kernel
+        # answers every action query in one dispatch
+        qparams = actorq.pack_actor_params(
             params, actorq.backend_bits(args.actor_backend))
-        if args.calib_batch:
-            # deployment-time calibration: static activation scales from
-            # the states the *trained* policy actually visits — a short
-            # greedy rollout from reset (reset draws alone sit near the
-            # origin for the classic-control envs and would saturate the
-            # scales once the served policy drifts) -> the single-pass
-            # fused MLP kernel answers every action query in one dispatch
-            import jax.numpy as jnp
-
-            from repro.rl.env import batched_env
-            roll_steps = 8
-            benv = batched_env(
-                env, max(-(-args.calib_batch // roll_steps), 1))
-            k_cal = jax.random.PRNGKey(args.seed + 1)
-            act0 = actorq.make_act_fn(env.spec,
-                                      backend=args.kernel_backend)
-            e_state, o = benv.reset(k_cal)
-            seen = [o]
-            for t in range(roll_steps - 1):
-                a = act0(served, o)
-                e_state, o, _, _ = benv.step(
-                    e_state, a, jax.random.fold_in(k_cal, t))
-                seen.append(o)
-            calib_obs = jnp.concatenate(seen)[:args.calib_batch]
-            served = actorq.calibrate_actor_cache(
-                served, calib_obs, backend=args.kernel_backend)
-            if actorq.ACT_QUANT in served:
-                print(f"[serve-rl] static requant: calibrated on "
-                      f"{calib_obs.shape[0]} obs -> fused single-pass "
-                      f"actor")
-            else:
-                # conv policies keep the per-layer path (calibration is a
-                # documented no-op for CNN caches)
-                print("[serve-rl] static requant: conv policy — "
-                      "calibration skipped, per-layer path served")
-        act = actorq.make_act_fn(env.spec, backend=args.kernel_backend)
-        served_bytes = actorq.packed_nbytes(served)
-    else:
-        served = params
-
-        def act(p, o):
-            # the algo's own deterministic policy (argmax head for
-            # discrete, tanh*scale for DDPG)
-            return res.act_fn(p, o, res.state.observers, res.state.step)
-        served_bytes = fp32_bytes
-
-    step = jax.jit(act)
-    key = jax.random.PRNGKey(args.seed)
-    obs = jax.random.normal(key, (args.batch,) + tuple(env.spec.obs_shape))
-    jax.block_until_ready(step(served, obs))          # compile
-    t0 = time.time()
-    reps = 20
-    for _ in range(reps):
-        actions = jax.block_until_ready(step(served, obs))
-    dt = time.time() - t0
+        calib_obs = serving.greedy_calib_obs(
+            env, qparams, args.calib_batch, args.seed + 1,
+            kernel_backend=args.kernel_backend)
+    entry = server.push_params(params, calib_obs=calib_obs)
+    if calib_obs is not None:
+        if actorq.ACT_QUANT in entry.cache:
+            print(f"[serve-rl] static requant: calibrated on "
+                  f"{calib_obs.shape[0]} obs -> fused single-pass actor")
+        else:
+            # conv policies keep the per-layer path (calibration is a
+            # documented no-op for CNN caches)
+            print("[serve-rl] static requant: conv policy — calibration "
+                  "skipped, per-layer path served")
+    server.warmup()
     print(f"[serve-rl] env={args.rl_env} algo={algo} "
           f"actor={args.actor_backend} kernel={args.kernel_backend} "
           f"params={fp32_bytes / 1e3:.1f}KB fp32 -> "
-          f"{served_bytes / 1e3:.1f}KB served "
-          f"({fp32_bytes / max(served_bytes, 1):.2f}x)")
-    print(f"[serve-rl] {reps} batches x {args.batch} obs in {dt:.3f}s "
-          f"({reps * args.batch / dt:.0f} actions/s)")
+          f"{entry.nbytes / 1e3:.1f}KB served "
+          f"({fp32_bytes / max(entry.nbytes, 1):.2f}x) "
+          f"buckets={list(buckets)} max_wait={args.max_wait_us}us")
+
+    # drive N concurrent env sessions against the server: each session
+    # steps its own (client-side) env with the actions the server returns
+    import numpy as np
+
+    from repro.rl.env import batched_env
+
+    n = args.serve_sessions
+    benv = batched_env(env, n)
+    e_state, obs = benv.reset(jax.random.PRNGKey(args.seed))
+    latencies = []
+    t0 = time.time()
+    with server:
+        sids = [server.open_session() for _ in range(n)]
+        for step_i in range(args.serve_steps):
+            if step_i == args.serve_steps // 2 and args.serve_steps > 1:
+                # live hot-swap under load: repack + republish (zero-copy
+                # reference swap; in-flight batches finish on the old
+                # cache, the next dispatch serves the new version)
+                swapped = server.push_params(params)
+                print(f"[serve-rl] hot-swap at step {step_i}: now serving "
+                      f"cache version {swapped.version}")
+            o_host = np.asarray(obs)
+            reqs = [server.submit(sid, o_host[i])
+                    for i, sid in enumerate(sids)]
+            results = [r.result(timeout=120) for r in reqs]
+            latencies.extend(r.latency_s for r in results)
+            actions = jnp.asarray(np.stack([r.action for r in results]))
+            if not env.spec.continuous:
+                actions = actions.astype(jnp.int32)
+            e_state, obs, _, _ = benv.step(
+                e_state, actions, jax.random.fold_in(
+                    jax.random.PRNGKey(args.seed), step_i))
+        for sid in sids:
+            server.close_session(sid)
+    dt = time.time() - t0
+    stats = server.stats()
+    lat = np.asarray(latencies) * 1e3
+    print(f"[serve-rl] {n} sessions x {args.serve_steps} steps in "
+          f"{dt:.3f}s ({len(latencies) / dt:.0f} actions/s); per-step "
+          f"latency p50 {np.percentile(lat, 50):.2f}ms "
+          f"p99 {np.percentile(lat, 99):.2f}ms; "
+          f"{stats['dispatches']} dispatches, mean batch "
+          f"{stats['served'] / max(stats['dispatches'], 1):.1f}, "
+          f"served by cache v{stats['version']}")
     print("           first actions:",
-          np_list(actions)[:8] if not env.spec.continuous
-          else np_list(actions[:2]))
+          np_list(results[0].action) if env.spec.continuous
+          else [int(r.action) for r in results[:8]])
     return 0
 
 
@@ -153,9 +186,11 @@ def np_list(x):
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--arch", default="h2o-danube-1.8b",
+                    help="LM mode: transformer architecture to decode")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="LM mode: decoding batch size")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--quant", default="none",
@@ -205,6 +240,19 @@ def main(argv=None) -> int:
                     help="PER alpha; 0.0 degrades to bitwise-uniform")
     ap.add_argument("--is-beta", type=float, default=0.4,
                     help="initial IS-correction exponent (anneals to 1)")
+    ap.add_argument("--serve-sessions", type=int, default=64,
+                    help="concurrent env sessions driven against the "
+                         "policy server after training (--rl-env)")
+    ap.add_argument("--serve-steps", type=int, default=5,
+                    help="env steps each serving session takes (a live "
+                         "hot-swap fires at the halfway step)")
+    ap.add_argument("--buckets", default="8,32,128,512",
+                    help="ascending padded batch shapes the server "
+                         "compiles (largest = admission max batch)")
+    ap.add_argument("--max-wait-us", type=int, default=2000,
+                    help="admission straggler wait: dispatch once the "
+                         "oldest queued request is this old (0 = never "
+                         "wait; the tail-latency knob)")
     args = ap.parse_args(argv)
 
     if args.rl_env:

@@ -83,6 +83,14 @@ ACT_QUANT = "act_quant"
 
 
 def validate_actor_backend(actor_backend: str) -> str:
+    """Validate an actor-backend name against ``ACTOR_BACKENDS``.
+
+    Returns the name unchanged (so it chains: ``bits =
+    _BACKEND_BITS[validate_actor_backend(b)]``); raises ``ValueError``
+    for anything outside ``("fp32", "int8", "int4")``.  Every config
+    surface (``loops.train``, topologies, ``serving.PolicyServer``)
+    funnels through here so the error reads the same everywhere.
+    """
     if actor_backend not in ACTOR_BACKENDS:
         raise ValueError(f"actor_backend must be one of {ACTOR_BACKENDS}, "
                          f"got {actor_backend!r}")
@@ -297,6 +305,13 @@ def quantized_mlp_apply(qparams: QuantizedParams, x: jnp.ndarray,
 def quantized_cnn_apply(qparams: QuantizedParams, x: jnp.ndarray,
                         n_convs: int, *, backend: str = "auto"
                         ) -> jnp.ndarray:
+    """CNN head outputs from a packed cache (per-layer int8 path).
+
+    ``x`` is f32 ``(*batch, H, W, C)`` — any leading batch dims are
+    flattened for the im2col int8 convs and restored on the ``(*batch,
+    head_dim)`` f32 result.  Conv caches never calibrate, so this is
+    always the per-layer dynamic-quantization path.
+    """
     batch_shape = x.shape[:-3]
     x = x.reshape((-1,) + x.shape[-3:])
     for i in range(n_convs):
@@ -377,12 +392,14 @@ def make_act_fn(env_spec, *, backend: str = "auto"):
     """
     if env_spec.continuous:
         def act(qparams, obs):
+            """Continuous head: tanh * action_scale, f32 actions."""
             mu = quantized_apply(qparams, obs, backend=backend)
             return jnp.tanh(mu) * env_spec.action_scale
     else:
         n_act = env_spec.n_actions
 
         def act(qparams, obs):
+            """Discrete head: argmax over n_actions logits, int32."""
             out = quantized_apply(qparams, obs, backend=backend)
             return jnp.argmax(out[..., :n_act], axis=-1).astype(jnp.int32)
     return act
@@ -398,6 +415,7 @@ def make_sampling_policy(env_spec, *, backend: str = "auto"):
     n_act = env_spec.n_actions
 
     def policy(qparams, obs, key):
+        """Sample an int32 action from the categorical head; keep logits."""
         out = quantized_apply(qparams, obs, backend=backend)
         logits = out[..., :n_act]
         return jax.random.categorical(key, logits).astype(jnp.int32), logits

@@ -103,6 +103,13 @@ def _bootstrap_observers(algo, env, net, state, quant):
 
 @dataclasses.dataclass
 class TrainResult:
+    """Everything ``train`` hands back: the final ``state`` (params +
+    optimizer), the deterministic ``act_fn(params, obs)``, the ``env``,
+    per-record ``rewards``/``action_variances``, wall time, and the
+    resolved algo config / network — enough to eval, deploy
+    (``serving.PolicyServer.push_params(result.state.params)``), or
+    resume."""
+
     state: common.TrainState
     act_fn: Callable
     env: Env
@@ -512,6 +519,10 @@ def eval_policy(result: TrainResult, quant: QuantConfig, key,
 
 @dataclasses.dataclass
 class QuarlResult:
+    """One row of a QuaRL PTQ/QAT study: fp32 vs quantized eval reward
+    for (``algo``, ``env``) at the bit-width named by ``label``, with the
+    paper's relative ``error_pct`` and study-specific ``extra`` values."""
+
     algo: str
     env: str
     label: str

@@ -1,0 +1,20 @@
+"""Continuous-batching quantized policy-serving subsystem.
+
+The "millions of users" leg of the ROADMAP: many concurrent env/user
+sessions multiplexed onto shape-bucketed padded batches (``batcher``),
+answered by a packed fp32/int8/int4 actor cache with zero-copy hot-swap
+on every param push (``server``), with per-session lifecycle accounting
+(``session``).  See ``docs/serving.md`` for the operator's view and
+``docs/architecture.md`` for where this sits in the module map.
+"""
+from repro.serving.batcher import (Batcher, Request, ServeResult,
+                                   pad_rows, remove_padding, select_bucket)
+from repro.serving.server import (CacheEntry, PolicyServer,
+                                  greedy_calib_obs, make_fp32_act_fn)
+from repro.serving.session import Session, SessionTable, StepCounter
+
+__all__ = [
+    "Batcher", "Request", "ServeResult", "pad_rows", "remove_padding",
+    "select_bucket", "CacheEntry", "PolicyServer", "greedy_calib_obs",
+    "make_fp32_act_fn", "Session", "SessionTable", "StepCounter",
+]

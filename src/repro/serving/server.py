@@ -1,0 +1,384 @@
+"""Policy server: packed-actor cache registry, hot-swap, dispatch loop.
+
+``PolicyServer`` multiplexes any number of open sessions onto shape-
+bucketed padded batches answered by ONE immutable actor-cache snapshot per
+dispatch:
+
+* **Cache registry / hot-swap.**  ``push_params`` packs the learner's fp32
+  params into the backend's serving form (``rl.actorq`` int8/int4 packing,
+  optionally calibrated so MLP actors run the single-pass fused kernel;
+  fp32 stores the pytree as-is) and publishes it as a frozen ``CacheEntry``
+  under a single reference assignment.  Dispatches read that reference
+  exactly once, so an in-flight batch keeps computing against the cache it
+  started with — a swap can never tear a batch across two versions (the
+  ``test_hot_swap_*`` suite).  Zero-copy: no tree copy on either side of
+  the swap; old caches are garbage once the last in-flight batch drops
+  them.
+* **Dispatch loop.**  A single worker thread drains the ``Batcher``
+  admission queue and calls ``serve_batch``; per-step compute is the same
+  jitted act function for every bucket (jax retraces per bucket shape,
+  ``warmup()`` pre-compiles them all).
+* **Backends.**  ``actor_backend`` fp32 | int8 | int4 exactly as in
+  training (``rl.actorq``); ``kernel_backend`` selects the quantized GEMM
+  path (pallas/interpret/ref/xla/auto) as everywhere else.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ptq
+from repro.rl import actorq
+from repro.serving.batcher import (Batcher, Request, pad_rows,
+                                   remove_padding, select_bucket)
+from repro.serving.session import SessionTable, StepCounter
+
+DEFAULT_BUCKETS = (8, 32, 128, 512)
+
+
+def make_fp32_act_fn(env_spec) -> Callable:
+    """Deterministic fp32 policy ``act(params, obs)`` mirroring the
+    quantized ``actorq.make_act_fn`` head contract.
+
+    ``params`` is the plain fp32 pytree (``rl.networks`` naming: ``fc*``/
+    ``out`` MLP or ``conv*``/``fc``/``out`` CNN); ``obs`` is f32 with any
+    leading batch dims.  Discrete specs argmax the first ``n_actions``
+    head outputs (int32 actions); continuous specs apply the DDPG
+    ``tanh * action_scale`` head (f32 actions).
+    """
+    from repro.core.fake_quant import NullQATContext
+    from repro.rl import networks
+
+    ctx = NullQATContext()
+
+    def apply(params, obs):
+        """Head outputs, dispatching MLP vs CNN on the param naming."""
+        names = set(params)
+        n_convs = sum(1 for n in names if n.startswith("conv"))
+        if n_convs:
+            return networks.cnn_apply(ctx, params, obs, n_convs)
+        n_hidden = sum(1 for n in names if n.startswith("fc"))
+        return networks.mlp_apply(ctx, params, obs, n_hidden)
+
+    if env_spec.continuous:
+        def act(params, obs):
+            """Continuous head: tanh * action_scale, f32 actions."""
+            return jnp.tanh(apply(params, obs)) * env_spec.action_scale
+    else:
+        n_act = env_spec.n_actions
+
+        def act(params, obs):
+            """Discrete head: argmax over n_actions logits, int32."""
+            out = apply(params, obs)
+            return jnp.argmax(out[..., :n_act], axis=-1).astype(jnp.int32)
+    return act
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheEntry:
+    """One immutable published actor cache.
+
+    ``cache`` is the serving pytree (packed ``QuantizedParams`` for int8/
+    int4 — calibrated when the server has ``calib_batch > 0`` and the
+    policy is an MLP — or the fp32 params), ``version`` the monotone push
+    counter, ``nbytes`` its parameter-memory footprint, ``pushed_at`` a
+    ``perf_counter`` stamp.  Frozen: hot-swap publishes a new entry rather
+    than mutating, so concurrent dispatches can never observe a
+    half-updated cache.
+    """
+
+    cache: Any
+    version: int
+    actor_backend: str
+    nbytes: int
+    pushed_at: float
+
+
+def greedy_calib_obs(env, qparams, calib_batch: int, seed: int = 0, *,
+                     kernel_backend: str = "auto") -> jnp.ndarray:
+    """Collect ``calib_batch`` observations for deploy-time calibration.
+
+    Rolls the *served* greedy policy (over the freshly packed ``qparams``)
+    a few auto-reset steps from reset — reset draws alone sit near the
+    origin for the classic-control envs and would saturate the static
+    scales once the policy drifts.  Returns (calib_batch, \\*obs_shape) f32.
+    """
+    from repro.rl.env import batched_env
+
+    roll_steps = 8
+    benv = batched_env(env, max(-(-calib_batch // roll_steps), 1))
+    key = jax.random.PRNGKey(seed)
+    act = actorq.make_act_fn(env.spec, backend=kernel_backend)
+    e_state, obs = benv.reset(key)
+    seen = [obs]
+    for t in range(roll_steps - 1):
+        a = act(qparams, obs)
+        e_state, obs, _, _ = benv.step(e_state, a, jax.random.fold_in(key, t))
+        seen.append(obs)
+    return jnp.concatenate(seen)[:calib_batch]
+
+
+class PolicyServer:
+    """Continuous-batching policy server over one actor cache.
+
+    Construction wires the policy (from ``env_spec``), the cache backend,
+    and the batching policy; ``push_params`` publishes the first cache;
+    ``start``/``stop`` run the background dispatch loop (or call
+    ``serve_batch``/``serve`` directly for synchronous use — the tests and
+    the bitwise-parity contract run that way).
+
+    Args:
+        env_spec: frozen ``rl.env.EnvSpec`` — defines obs shape and the
+            deterministic action head.
+        actor_backend: ``"fp32" | "int8" | "int4"`` serving cache format.
+        kernel_backend: quantized-GEMM backend knob
+            (``pallas/interpret/ref/xla/auto``), ignored for fp32.
+        buckets: ascending padded batch shapes; the largest is the
+            admission ``max_batch``.
+        max_wait_us: admission straggler wait (see ``batcher.Batcher``).
+        calib_batch: > 0 calibrates static activation scales at every
+            push from the observations handed to ``push_params`` (MLP
+            caches then serve through the single-pass fused kernel);
+            0 keeps the dynamic per-layer path.
+    """
+
+    def __init__(self, env_spec, *, actor_backend: str = "int8",
+                 kernel_backend: str = "auto",
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 max_wait_us: int = 2000, calib_batch: int = 0):
+        """See class docstring."""
+        actorq.validate_actor_backend(actor_backend)
+        if not buckets or list(buckets) != sorted(set(int(b) for b in
+                                                      buckets)):
+            raise ValueError(f"buckets must be ascending and unique, "
+                             f"got {buckets!r}")
+        self.env_spec = env_spec
+        self.actor_backend = actor_backend
+        self.kernel_backend = kernel_backend
+        self.buckets = tuple(int(b) for b in buckets)
+        self.max_wait_us = int(max_wait_us)
+        self.calib_batch = int(calib_batch)
+        if actorq.is_quantized(actor_backend):
+            act = actorq.make_act_fn(env_spec, backend=kernel_backend)
+        else:
+            act = make_fp32_act_fn(env_spec)
+        self._step_fn = jax.jit(act)
+        self._entry: Optional[CacheEntry] = None
+        self._calib_obs = None              # last calibration batch seen
+        self._push_mu = threading.Lock()
+        self._versions = StepCounter()
+        self.batcher = Batcher(max_batch=self.buckets[-1],
+                               max_wait_us=max_wait_us)
+        self.sessions = SessionTable()
+        self.steps = StepCounter()          # dispatch (batch) tickets
+        self._served = 0                    # requests answered
+        self._padded = 0                    # padding rows dispatched
+        self._bucket_counts: Dict[int, int] = {b: 0 for b in self.buckets}
+        self._worker: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # -- cache registry / hot-swap -----------------------------------------
+
+    def push_params(self, params, calib_obs=None) -> CacheEntry:
+        """Pack + publish a new actor cache; returns the new entry.
+
+        ``params`` is the learner's fp32 pytree.  Quantized backends pack
+        it via ``actorq.make_actor_cache``; with ``calib_batch > 0`` the
+        pushed cache is calibrated on ``calib_obs``, falling back to the
+        most recent calibration batch if omitted (dynamic per-layer path
+        until the first one arrives).  The swap is
+        one reference assignment: in-flight batches finish on the cache
+        they snapshotted, new dispatches see the new version immediately.
+        """
+        if actorq.is_quantized(self.actor_backend):
+            if self.calib_batch > 0:
+                if calib_obs is not None:
+                    calib_obs = actorq.calib_slice(jnp.asarray(calib_obs),
+                                                   self.calib_batch)
+                    self._calib_obs = calib_obs
+                else:
+                    calib_obs = self._calib_obs
+            else:
+                calib_obs = None
+            cache = actorq.make_actor_cache(
+                params, self.actor_backend, calib_obs=calib_obs,
+                backend=self.kernel_backend)
+        else:
+            cache = params
+        with self._push_mu:
+            entry = CacheEntry(cache=cache, version=self._versions.next(),
+                               actor_backend=self.actor_backend,
+                               nbytes=ptq.tree_nbytes(cache),
+                               pushed_at=time.perf_counter())
+            self._entry = entry              # the atomic hot-swap
+        return entry
+
+    @property
+    def current(self) -> Optional[CacheEntry]:
+        """The live cache entry (``None`` before the first push)."""
+        return self._entry
+
+    # -- session lifecycle -------------------------------------------------
+
+    def open_session(self) -> int:
+        """Open a serving session; returns its id."""
+        return self.sessions.open(at_step=self.steps.value)
+
+    def close_session(self, sid: int) -> None:
+        """Close session ``sid`` (its queued requests still complete)."""
+        self.sessions.close(sid)
+
+    # -- request path ------------------------------------------------------
+
+    def submit(self, sid: int, obs) -> Request:
+        """Enqueue one observation for session ``sid``; returns the
+        ``Request`` whose ``result()`` blocks for the action.
+
+        ``obs`` is a single observation (no batch axis) of
+        ``env_spec.obs_shape``; raises ``KeyError`` for unknown/closed
+        sessions and ``ValueError`` on a shape mismatch.
+        """
+        self.sessions.checkout(sid)
+        obs = np.asarray(obs, dtype=np.float32)
+        if obs.shape != tuple(self.env_spec.obs_shape):
+            raise ValueError(f"obs shape {obs.shape} != spec "
+                             f"{tuple(self.env_spec.obs_shape)}")
+        req = Request(sid, obs)
+        self.batcher.put(req)
+        return req
+
+    def serve_batch(self, requests: List[Request]) -> None:
+        """Answer one admitted batch against a single cache snapshot.
+
+        Stacks the requests' observations, pads to the selected bucket
+        (repeat-last-row), runs the jitted act function once, unpads, and
+        completes every request with its action + the snapshot's version.
+        The cache reference is read exactly once, so a concurrent
+        ``push_params`` never tears the batch.
+        """
+        entry = self._entry   # single snapshot read — hot-swap safety
+        if entry is None:
+            raise RuntimeError("no actor cache: call push_params first")
+        try:
+            n = len(requests)
+            bucket = select_bucket(n, self.buckets)
+            obs = pad_rows(np.stack([r.obs for r in requests]), bucket)
+            out = self._step_fn(entry.cache, jnp.asarray(obs))
+            # unpad on the HOST: slicing the jax array would compile one
+            # slice program per distinct live batch size (a fresh ~50ms
+            # retrace in the dispatch path every time a new n shows up)
+            actions = remove_padding(np.asarray(out), n)
+            step = self.steps.next()
+            t_done = time.perf_counter()
+            self._served += n
+            self._padded += bucket - n
+            self._bucket_counts[bucket] += 1
+            for r, a in zip(requests, actions):
+                self.sessions.on_step(r.sid, entry.version)
+                r.complete(a, entry.version, step, t_done)
+        except Exception as e:              # fail waiters, don't hang them
+            for r in requests:
+                r.fail(e)
+            raise
+
+    def serve(self, sid_obs: Sequence) -> List[np.ndarray]:
+        """Synchronous convenience: serve ``[(sid, obs), ...]`` as one
+        admitted batch and return the actions in order (no worker thread
+        involved — the deterministic path the parity tests pin down)."""
+        reqs = [self.submit(sid, obs) for sid, obs in sid_obs]
+        batch = self.batcher.get_batch(timeout=0)
+        served: List[Request] = []
+        while batch:
+            self.serve_batch(batch)
+            served.extend(batch)
+            batch = self.batcher.get_batch(timeout=0)
+        assert len(served) == len(reqs)
+        return [r.result(timeout=0).action for r in reqs]
+
+    # -- dispatch loop -----------------------------------------------------
+
+    def _run(self) -> None:
+        """Worker body: drain the admission queue until stopped."""
+        while not self._stop.is_set():
+            batch = self.batcher.get_batch(timeout=0.05)
+            if batch:
+                try:
+                    self.serve_batch(batch)
+                except Exception:
+                    # requests already failed individually; keep serving
+                    continue
+
+    def start(self) -> "PolicyServer":
+        """Start the background dispatch thread (idempotent).
+
+        A server stopped earlier restarts cleanly: ``stop`` closes the
+        admission queue terminally, so restart swaps in a fresh one
+        (sessions, caches and counters all survive the cycle).
+        """
+        if self._worker is None or not self._worker.is_alive():
+            if self.batcher.closed:
+                self.batcher = Batcher(max_batch=self.buckets[-1],
+                                       max_wait_us=self.max_wait_us)
+            self._stop.clear()
+            self._worker = threading.Thread(target=self._run,
+                                            name="policy-server",
+                                            daemon=True)
+            self._worker.start()
+        return self
+
+    def stop(self) -> None:
+        """Stop dispatching; queued-but-unserved requests fail fast.
+        ``start`` brings the server back up afterwards."""
+        self._stop.set()
+        drained = self.batcher.close()
+        err = RuntimeError("server stopped")
+        for r in drained:
+            r.fail(err)
+        if self._worker is not None:
+            self._worker.join(timeout=5.0)
+            self._worker = None
+
+    def __enter__(self) -> "PolicyServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- ops ---------------------------------------------------------------
+
+    def warmup(self) -> None:
+        """Compile the act program for every bucket shape up front (one
+        retrace per bucket) so first requests don't pay compile latency."""
+        entry = self._entry
+        if entry is None:
+            raise RuntimeError("no actor cache: call push_params first")
+        for b in self.buckets:
+            obs = jnp.zeros((b,) + tuple(self.env_spec.obs_shape),
+                            jnp.float32)
+            jax.block_until_ready(self._step_fn(entry.cache, obs))
+
+    def stats(self) -> Dict[str, Any]:
+        """Serving counters snapshot.
+
+        Keys: ``served`` (requests answered), ``dispatches`` (batches),
+        ``padding_rows`` (total padded rows — the bucketing overhead),
+        ``bucket_counts`` (dispatches per bucket), ``version`` (live cache
+        version or -1), ``cache_nbytes``, plus the ``sessions`` table
+        counters.
+        """
+        entry = self._entry
+        return {
+            "served": self._served,
+            "dispatches": self.steps.value,
+            "padding_rows": self._padded,
+            "bucket_counts": dict(self._bucket_counts),
+            "version": -1 if entry is None else entry.version,
+            "cache_nbytes": 0 if entry is None else entry.nbytes,
+            "sessions": self.sessions.stats(),
+        }

@@ -1,0 +1,45 @@
+"""Docs tree gate: the link checker passes and the tree is complete."""
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_doc_links  # noqa: E402
+
+
+def test_docs_tree_exists():
+    for name in ("architecture.md", "serving.md", "contracts.md"):
+        assert (ROOT / "docs" / name).is_file(), f"docs/{name} missing"
+
+
+def test_all_doc_links_resolve():
+    errors = check_doc_links.check(ROOT)
+    assert not errors, "\n".join(errors)
+
+
+def test_checker_catches_broken_link(tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "a.md").write_text(
+        "# A\n\nsee [b](missing.md) and [c](a.md#no-such-anchor)\n")
+    errors = check_doc_links.check(tmp_path)
+    assert len(errors) == 2
+    assert any("broken link" in e for e in errors)
+    assert any("missing anchor" in e for e in errors)
+
+
+def test_checker_skips_external_and_code(tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "a.md").write_text(
+        "# A\n\n[x](https://example.com) [badge](../../actions/foo.svg)\n"
+        "`[not a link](nope.md)`\n\n```\n[also not](gone.md)\n```\n")
+    assert check_doc_links.check(tmp_path) == []
+
+
+def test_cli_exit_status():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_doc_links.py")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr + proc.stdout
+    assert "0 broken link(s)" in proc.stdout

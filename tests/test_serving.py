@@ -1,0 +1,400 @@
+"""Continuous-batching policy-serving subsystem (ISSUE 7).
+
+Acceptance contracts:
+
+* **Batched == sequential, bitwise** — for every actor backend (fp32 /
+  int8 / int4), dispatching N sessions as one padded batch produces
+  bit-for-bit the actions of submitting them one at a time.  Quantized
+  backends serve a *calibrated* cache (static activation scales make each
+  row's compute independent of batch composition — the serving contract);
+  the test pins a single bucket so fp32's GEMM shape matches too.
+* **Hot-swap is never torn** — a param push during in-flight batches is
+  one atomic reference swap: every response's action is consistent with
+  the cache version it reports, under a swap-hammering thread.
+* **Bucket selection is deterministic** — a pure function of
+  (batch size, bucket list); padding is repeat-last-row and therefore
+  range-neutral for the dynamically-quantized path.
+* A slow open-loop latency smoke drives the threaded server end to end.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypcompat import HAVE_HYPOTHESIS, given, settings, st  # noqa: F401
+from repro.rl import actorq
+from repro.rl.env import EnvSpec
+from repro.rl.networks import make_network
+from repro.serving import (Batcher, PolicyServer, SessionTable, StepCounter,
+                           greedy_calib_obs, pad_rows, remove_padding,
+                           select_bucket)
+
+DISCRETE = EnvSpec(name="srv-disc", obs_shape=(5,), n_actions=3)
+CONTINUOUS = EnvSpec(name="srv-cont", obs_shape=(5,), action_dim=2,
+                     action_scale=2.0)
+
+ALL_BACKENDS = ["fp32", "int8", "int4"]
+
+
+def _params(spec, seed=0, hidden=(16, 16)):
+    out = spec.n_actions if not spec.continuous else spec.action_dim
+    return make_network(spec.obs_shape, out, hidden=hidden).init(
+        jax.random.PRNGKey(seed))
+
+
+def _obs(n, spec=DISCRETE, seed=1):
+    return np.asarray(jax.random.normal(
+        jax.random.PRNGKey(seed), (n,) + tuple(spec.obs_shape))) * 1.5
+
+
+def _server(spec, actor_backend, *, buckets=(8,), calib=True,
+            kernel_backend="ref", max_wait_us=0, seed=0):
+    srv = PolicyServer(spec, actor_backend=actor_backend,
+                       kernel_backend=kernel_backend, buckets=buckets,
+                       max_wait_us=max_wait_us,
+                       calib_batch=32 if calib else 0)
+    srv.push_params(_params(spec, seed),
+                    calib_obs=_obs(32, spec, seed=seed + 100))
+    return srv
+
+
+# ---------------------------------------------------------------------------
+# bucket selection / padding primitives
+# ---------------------------------------------------------------------------
+
+def test_bucket_selection_deterministic_minimal():
+    buckets = (4, 16, 64)
+    for n in range(1, 65):
+        b = select_bucket(n, buckets)
+        assert b == min(x for x in buckets if x >= n)
+        assert b == select_bucket(n, buckets)   # pure — replays identically
+    with pytest.raises(ValueError):
+        select_bucket(65, buckets)
+    with pytest.raises(ValueError):
+        select_bucket(0, buckets)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=1, max_value=512),
+       st.lists(st.integers(min_value=1, max_value=512), min_size=1,
+                max_size=6, unique=True))
+def test_bucket_selection_property(n, raw_buckets):
+    buckets = tuple(sorted(raw_buckets))
+    fits = [b for b in buckets if b >= n]
+    if not fits:
+        with pytest.raises(ValueError):
+            select_bucket(n, buckets)
+    else:
+        assert select_bucket(n, buckets) == fits[0]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=16),
+       st.integers(min_value=0, max_value=16))
+def test_pad_rows_roundtrip(n, extra):
+    x = np.arange(n * 3, dtype=np.float32).reshape(n, 3)
+    padded = pad_rows(x, n + extra)
+    assert padded.shape == (n + extra, 3)
+    np.testing.assert_array_equal(np.asarray(remove_padding(padded, n)), x)
+    # repeat-padding never moves a per-tensor min/max (range-neutrality)
+    assert padded.min() == x.min() and padded.max() == x.max()
+
+
+def test_pad_rows_rejects_overflow():
+    with pytest.raises(ValueError):
+        pad_rows(np.zeros((4, 2), np.float32), 3)
+
+
+def test_step_counter_threaded():
+    c = StepCounter()
+    threads = [threading.Thread(target=lambda: [c.next() for _ in range(500)])
+               for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == 4000   # no lost increments
+
+
+def test_session_table_lifecycle():
+    tab = SessionTable()
+    a, b = tab.open(), tab.open()
+    assert len(tab) == 2 and a != b
+    tab.on_step(a, version=3)
+    assert tab.checkout(a).steps == 1
+    assert tab.checkout(a).last_version == 3
+    rec = tab.close(a)
+    assert rec.closed and len(tab) == 1
+    with pytest.raises(KeyError):
+        tab.checkout(a)
+    with pytest.raises(KeyError):
+        tab.close(a)
+    assert tab.stats() == {"open": 1, "opened": 2, "closed": 1}
+
+
+# ---------------------------------------------------------------------------
+# THE acceptance contract: padded-batch == per-session sequential, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("actor_backend", ALL_BACKENDS)
+@pytest.mark.parametrize("spec", [DISCRETE, CONTINUOUS],
+                         ids=["discrete", "continuous"])
+def test_batched_equals_sequential_bitwise(actor_backend, spec):
+    """One padded batch of N sessions == N single-session dispatches,
+    bit for bit (continuous spec compares full f32 action vectors)."""
+    srv = _server(spec, actor_backend)
+    obs = _obs(7, spec)
+    sids = [srv.open_session() for _ in range(7)]
+    batched = srv.serve(list(zip(sids, obs)))
+    sequential = [srv.serve([(sid, o)])[0] for sid, o in zip(sids, obs)]
+    for got, want in zip(batched, sequential):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("kernel_backend", ["ref", "xla"])
+@pytest.mark.parametrize("actor_backend", ["int8", "int4"])
+def test_batched_equals_sequential_across_buckets(actor_backend,
+                                                  kernel_backend):
+    """Quantized + calibrated caches are exact integer programs: the
+    bitwise contract holds even when batched and sequential dispatches pad
+    to *different* buckets (rows are independent once scales are static)."""
+    srv = _server(CONTINUOUS, actor_backend, buckets=(2, 4, 16),
+                  kernel_backend=kernel_backend)
+    obs = _obs(9, CONTINUOUS, seed=7)
+    sids = [srv.open_session() for _ in range(9)]
+    batched = srv.serve(list(zip(sids, obs)))        # buckets 16 (9 rows)
+    sequential = [srv.serve([(sid, o)])[0]           # bucket 2 each
+                  for sid, o in zip(sids, obs)]
+    for got, want in zip(batched, sequential):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=8), st.integers(0, 2 ** 31 - 1))
+def test_batched_equals_sequential_property(n, seed):
+    """Property form over batch size and data for the int8 backend."""
+    srv = _server(CONTINUOUS, "int8", seed=seed % 97)
+    obs = np.asarray(jax.random.normal(
+        jax.random.PRNGKey(seed), (n, 5)), np.float32) * 3.0
+    sids = [srv.open_session() for _ in range(n)]
+    batched = srv.serve(list(zip(sids, obs)))
+    sequential = [srv.serve([(sid, o)])[0] for sid, o in zip(sids, obs)]
+    for got, want in zip(batched, sequential):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("kernel_backend", ["ref", "xla"])
+def test_dynamic_path_padding_neutral(kernel_backend):
+    """calib_batch=0 (dynamic per-layer quantization) is sensitive to
+    batch *composition* — but never to repeat-padding: a padded dispatch
+    equals the direct unpadded apply on the same rows, bitwise, because
+    duplicated rows cannot move any per-tensor min/max at any layer."""
+    params = _params(CONTINUOUS, seed=3)
+    srv = _server(CONTINUOUS, "int8", buckets=(16,), calib=False,
+                  kernel_backend=kernel_backend, seed=3)
+    obs = _obs(5, CONTINUOUS, seed=11)
+    sids = [srv.open_session() for _ in range(5)]
+    served = srv.serve(list(zip(sids, obs)))         # padded 5 -> 16
+    cache = actorq.pack_actor_params(params, 8)
+    mu = actorq.quantized_apply(cache, jnp.asarray(obs),
+                                backend=kernel_backend)
+    direct = np.asarray(jnp.tanh(mu) * CONTINUOUS.action_scale)
+    np.testing.assert_array_equal(np.stack(served), direct)
+
+
+def test_calibrated_serving_uses_fused_cache():
+    srv = _server(DISCRETE, "int8")
+    assert actorq.ACT_QUANT in srv.current.cache
+    srv_dyn = _server(DISCRETE, "int8", calib=False)
+    assert actorq.ACT_QUANT not in srv_dyn.current.cache
+
+
+# ---------------------------------------------------------------------------
+# hot-swap: atomic, never torn, zero-copy
+# ---------------------------------------------------------------------------
+
+def _versioned_params(version, n_actions=3, obs_dim=5):
+    """Zero-weight policy whose argmax encodes ``version % n_actions`` —
+    any serving result reveals which cache computed it."""
+    p = _params(DISCRETE, seed=0, hidden=(8,))
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, p)
+    bias = jnp.zeros((n_actions,), jnp.float32
+                     ).at[version % n_actions].set(10.0 + version)
+    zeros["out"]["b"] = bias
+    return zeros
+
+
+@pytest.mark.parametrize("actor_backend", ALL_BACKENDS)
+def test_hot_swap_action_matches_reported_version(actor_backend):
+    """Hammer push_params from one thread while serving from others:
+    every response's action must equal the expected action OF THE VERSION
+    IT REPORTS — a torn cache (mixing two versions in one dispatch) or a
+    mid-batch swap would break the correspondence."""
+    srv = PolicyServer(DISCRETE, actor_backend=actor_backend,
+                       kernel_backend="ref", buckets=(4, 8), max_wait_us=200,
+                       calib_batch=0)
+    srv.push_params(_versioned_params(0))
+    srv.warmup()
+    obs = _obs(8)
+    stop = threading.Event()
+    pushes = {"n": 1}
+
+    def swapper():
+        while not stop.is_set():
+            srv.push_params(_versioned_params(pushes["n"]))
+            pushes["n"] += 1
+
+    th = threading.Thread(target=swapper, daemon=True)
+    with srv:
+        th.start()
+        try:
+            sids = [srv.open_session() for _ in range(8)]
+            for round_ in range(30):
+                reqs = [srv.submit(sid, obs[i % 8])
+                        for i, sid in enumerate(sids)]
+                for r in reqs:
+                    res = r.result(timeout=20)
+                    assert int(res.action) == res.version % 3, \
+                        (int(res.action), res.version)
+        finally:
+            stop.set()
+            th.join(timeout=5)
+    assert pushes["n"] > 1           # the hammer actually swapped
+    assert srv.stats()["served"] == 8 * 30
+
+
+def test_push_is_reference_swap_not_copy():
+    """Zero-copy contract: the published fp32 cache IS the pushed pytree
+    (same array objects), and a new push leaves the old entry's arrays
+    untouched for in-flight readers."""
+    srv = PolicyServer(DISCRETE, actor_backend="fp32", buckets=(4,))
+    p1 = _params(DISCRETE, seed=1)
+    e1 = srv.push_params(p1)
+    assert e1.cache is p1
+    assert e1.cache["out"]["w"] is p1["out"]["w"]
+    snap = np.asarray(e1.cache["out"]["w"]).copy()
+    e2 = srv.push_params(_params(DISCRETE, seed=2))
+    assert e2.version == e1.version + 1
+    assert srv.current is e2
+    np.testing.assert_array_equal(np.asarray(e1.cache["out"]["w"]), snap)
+
+
+def test_serve_requires_pushed_cache():
+    srv = PolicyServer(DISCRETE, actor_backend="int8", buckets=(4,))
+    sid = srv.open_session()
+    with pytest.raises(RuntimeError):
+        srv.serve([(sid, np.zeros(5, np.float32))])
+    with pytest.raises(RuntimeError):
+        srv.warmup()
+
+
+# ---------------------------------------------------------------------------
+# request validation / admission policy
+# ---------------------------------------------------------------------------
+
+def test_submit_validates_session_and_shape():
+    srv = _server(DISCRETE, "fp32")
+    with pytest.raises(KeyError):
+        srv.submit(12345, np.zeros(5, np.float32))
+    sid = srv.open_session()
+    with pytest.raises(ValueError):
+        srv.submit(sid, np.zeros(4, np.float32))
+    srv.close_session(sid)
+    with pytest.raises(KeyError):
+        srv.submit(sid, np.zeros(5, np.float32))
+
+
+def test_batcher_admission_caps_and_orders():
+    b = Batcher(max_batch=4, max_wait_us=0)
+    reqs = [type("R", (), {"t_enqueue": time.perf_counter()})()
+            for _ in range(6)]
+    for r in reqs:
+        b.put(r)
+    first = b.get_batch(timeout=0)
+    second = b.get_batch(timeout=0)
+    assert first == reqs[:4] and second == reqs[4:]   # FIFO, capped
+    assert b.get_batch(timeout=0) is None
+
+
+def test_batcher_close_fails_queued_requests():
+    srv = _server(DISCRETE, "fp32")
+    sid = srv.open_session()
+    srv.start()
+    srv.stop()
+    with pytest.raises(RuntimeError):
+        srv.submit(sid, np.zeros(5, np.float32))
+
+
+def test_server_restarts_after_stop():
+    """stop() closes the admission queue terminally; start() swaps in a
+    fresh one so a stopped server serves again (benchmark probe cycle)."""
+    srv = _server(DISCRETE, "int8")
+    sid = srv.open_session()
+    with srv:
+        a1 = srv.submit(sid, np.zeros(5, np.float32)).result(timeout=10)
+    with pytest.raises(RuntimeError):
+        srv.submit(sid, np.zeros(5, np.float32))
+    with srv:
+        a2 = srv.submit(sid, np.zeros(5, np.float32)).result(timeout=10)
+    np.testing.assert_array_equal(a1.action, a2.action)
+    assert srv.sessions.checkout(sid).steps == 2
+
+
+def test_server_invalid_buckets_rejected():
+    for bad in [(), (8, 4), (4, 4)]:
+        with pytest.raises(ValueError):
+            PolicyServer(DISCRETE, buckets=bad)
+
+
+def test_stats_padding_accounting():
+    srv = _server(DISCRETE, "fp32", buckets=(8,))
+    sids = [srv.open_session() for _ in range(5)]
+    srv.serve([(s, np.zeros(5, np.float32)) for s in sids])
+    st_ = srv.stats()
+    assert st_["served"] == 5 and st_["padding_rows"] == 3
+    assert st_["bucket_counts"][8] == 1 and st_["dispatches"] == 1
+    assert st_["sessions"]["open"] == 5
+
+
+def test_greedy_calib_obs_shape():
+    from repro.rl.envs import make as make_env
+    env = make_env("cartpole")
+    cache = actorq.pack_actor_params(_params(
+        EnvSpec(name="cp", obs_shape=(4,), n_actions=2)), 8)
+    obs = greedy_calib_obs(env, cache, 24, kernel_backend="ref")
+    assert obs.shape == (24, 4)
+    assert bool(jnp.all(jnp.isfinite(obs)))
+
+
+# ---------------------------------------------------------------------------
+# open-loop latency smoke (threaded end-to-end)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_open_loop_latency_smoke():
+    """Drive the threaded server with an open-loop burst from many
+    sessions; every request completes, latency percentiles are finite,
+    and the dispatcher actually batched (dispatches < requests)."""
+    srv = _server(DISCRETE, "int8", buckets=(8, 32, 128), max_wait_us=500,
+                  kernel_backend="ref")
+    srv.warmup()
+    n_sessions, per_session = 64, 4
+    obs = _obs(n_sessions)
+    with srv:
+        sids = [srv.open_session() for _ in range(n_sessions)]
+        reqs = []
+        for _ in range(per_session):
+            reqs.extend(srv.submit(sid, obs[i])
+                        for i, sid in enumerate(sids))
+        lats = [r.result(timeout=60).latency_s for r in reqs]
+    total = n_sessions * per_session
+    assert len(lats) == total
+    assert all(np.isfinite(lats)) and np.percentile(lats, 99) > 0
+    st_ = srv.stats()
+    assert st_["served"] == total
+    assert st_["dispatches"] < total      # continuous batching happened
+    for sid in sids:
+        assert srv.sessions.checkout(sid).steps == per_session

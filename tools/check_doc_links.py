@@ -1,0 +1,94 @@
+"""Docs link checker: every relative link in docs/*.md and README resolves.
+
+Scans markdown files for inline links/images, resolves relative targets
+against the linking file, and fails if a target file (or, for ``.md``
+targets, a ``#fragment`` heading anchor) does not exist.  Skips external
+schemes (http/https/mailto) and GitHub "virtual" paths that escape the
+repository root (e.g. the ``../../actions/...`` CI badge idiom).
+
+Run directly (CI lint job) or via ``tests/test_docs.py``:
+
+    python tools/check_doc_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import List
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# inline links and images: [text](target) / ![alt](target)
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"^(```|~~~).*?^\1\s*$", re.MULTILINE | re.DOTALL)
+_CODE_RE = re.compile(r"`[^`]*`")
+
+
+def doc_files(root: Path = ROOT) -> List[Path]:
+    """The markdown set under the link gate: ``docs/*.md`` + README."""
+    files = sorted((root / "docs").glob("*.md"))
+    readme = root / "README.md"
+    if readme.exists():
+        files.append(readme)
+    return files
+
+
+def heading_slugs(md_path: Path) -> set:
+    """GitHub-style anchor slugs for every heading in ``md_path``."""
+    slugs = set()
+    text = _FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
+    for line in text.splitlines():
+        m = re.match(r"#{1,6}\s+(.*)", line)
+        if not m:
+            continue
+        h = m.group(1).strip().lower()
+        h = re.sub(r"[^\w\- ]", "", h)   # drop punctuation, keep -/_/space
+        slugs.add(h.replace(" ", "-"))
+    return slugs
+
+
+def check_file(md_path: Path, root: Path = ROOT) -> List[str]:
+    """Return human-readable errors for broken links in one file."""
+    errors = []
+    text = md_path.read_text(encoding="utf-8")
+    text = _CODE_RE.sub("", _FENCE_RE.sub("", text))
+    rel = md_path.relative_to(root)
+    for target in _LINK_RE.findall(text):
+        if re.match(r"[a-z][a-z0-9+.-]*:", target):   # http:, mailto:, ...
+            continue
+        path_part, _, fragment = target.partition("#")
+        dest = md_path if not path_part else (
+            md_path.parent / path_part).resolve()
+        if not str(dest).startswith(str(root)):
+            continue                                   # GitHub virtual path
+        if not dest.exists():
+            errors.append(f"{rel}: broken link -> {target}")
+            continue
+        if fragment and dest.suffix == ".md":
+            if fragment not in heading_slugs(dest):
+                errors.append(f"{rel}: missing anchor -> {target}")
+    return errors
+
+
+def check(root: Path = ROOT) -> List[str]:
+    """Check every gated file; return the combined error list."""
+    errors = []
+    for f in doc_files(root):
+        errors.extend(check_file(f, root))
+    return errors
+
+
+def main() -> int:
+    """CLI entry: print errors, exit 1 if any link is broken."""
+    files = doc_files()
+    errors = check()
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_doc_links: {len(files)} files, "
+          f"{len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
