@@ -121,7 +121,7 @@ ASYNC_CHUNK = 8
 
 
 def _time_async(num_actors: int, backend: str, iters: int,
-                chunk: int = ASYNC_CHUNK) -> Dict:
+                chunk: int = ASYNC_CHUNK, checkpointer=None) -> Dict:
     """One ``topology="async"`` throughput cell.
 
     Drives the two async programs exactly like ``loops._train_async``:
@@ -131,6 +131,13 @@ def _time_async(num_actors: int, backend: str, iters: int,
     snapshot refreshes at every round (sync_every = one round of learner
     updates).  Both throughputs come from the same wall-clock window —
     the overlap is measured, not inferred.
+
+    ``checkpointer`` (an ``repro.checkpoint.AsyncCheckpointer``) saves
+    the full round state after EVERY timed round — the worst-case
+    checkpoint cadence, driven exactly like ``loops._train_async``'s
+    save path (host copy on this thread, commit on the writer thread).
+    The timed window covers the ``save_async`` submissions but not the
+    final queue drain (a trailing flush is not a per-step cost).
     """
     from repro.rl import actor_learner, dqn
     from repro.rl.envs import make as make_env
@@ -168,8 +175,14 @@ def _time_async(num_actors: int, backend: str, iters: int,
 
     rounds = max(iters // chunk, 2)
     t0 = time.perf_counter()
-    for _ in range(rounds):
+    for rnd in range(rounds):
         carry = one_round(*carry)
+        if checkpointer is not None:
+            learner_c, wbuf_c, snap_c, env_state_c, obs_c, key_c = carry
+            checkpointer.save_async(
+                rnd + 1,
+                {"learner": learner_c, "wbuf": wbuf_c, "snap": snap_c,
+                 "env_state": env_state_c, "obs": obs_c, "key": key_c})
     jax.block_until_ready((carry[0].params, carry[4]))
     dt = time.perf_counter() - t0
 
@@ -188,6 +201,57 @@ def _time_async(num_actors: int, backend: str, iters: int,
         "env_steps_per_sec": env_steps / dt,
         "learner_updates_per_sec": learner_updates / dt,
         "learner_samples_per_sec": learner_updates * cfg.batch_size / dt,
+    }
+
+
+CKPT_CELL = (2, "int8")     # the async acceptance cell carries the measure
+
+
+def _time_checkpoint_overhead(iters: int, baseline: Dict) -> Dict:
+    """ISSUE 8 acceptance row: the ``CKPT_CELL`` async cell re-timed with
+    an ``AsyncCheckpointer`` saving the FULL round state (learner +
+    optimizer + double-buffered replay + packed snapshot + env + key)
+    after every round — the worst-case cadence.  ``overhead_frac``
+    against the un-checkpointed ``baseline`` row must sit within noise:
+    the driver thread only pays the device->host copy, while encode +
+    fsync + rename run on the background writer.
+    """
+    import os
+    import shutil
+    import tempfile
+
+    from repro.checkpoint import AsyncCheckpointer
+
+    d = tempfile.mkdtemp(prefix="bench-ckpt-")
+    try:
+        ac = AsyncCheckpointer(d, keep=2)
+        row = _time_async(*CKPT_CELL, iters, checkpointer=ac)
+        t0 = time.perf_counter()
+        last = ac.wait()
+        drain_s = time.perf_counter() - t0
+        step_dir = ac.manager.step_path(last)
+        bytes_per_save = sum(
+            os.path.getsize(os.path.join(step_dir, f))
+            for f in os.listdir(step_dir))
+        ac.close()
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    rate, base_rate = (row["env_steps_per_sec"],
+                       baseline["env_steps_per_sec"])
+    return {
+        "section": "checkpoint_overhead",
+        "mode": "async",
+        "num_actors": CKPT_CELL[0],
+        "actor_backend": CKPT_CELL[1],
+        "checkpoint_every_rounds": 1,
+        "saves": row["rounds"],
+        "us_per_round": row["us_per_round"],
+        "env_steps_per_sec": rate,
+        "learner_updates_per_sec": row["learner_updates_per_sec"],
+        "baseline_env_steps_per_sec": base_rate,
+        "overhead_frac": 1.0 - rate / base_rate,
+        "drain_wall_s": drain_s,
+        "bytes_per_save": bytes_per_save,
     }
 
 
@@ -298,6 +362,21 @@ def run(iters: int = 30) -> List[Dict]:
             f";learner_ups={row['learner_updates_per_sec']:.1f}"
             f";speedup_vs_sync="
             f"{row['speedup_env_steps_vs_sync']:.2f}x")
+
+    # async checkpointing overhead (ISSUE 8): per-round saves must sit
+    # within noise of the matching un-checkpointed async cell
+    async_base = next(
+        r for r in rows if r.get("section") == "actor_learner_async"
+        and (r["num_actors"], r["actor_backend"]) == CKPT_CELL)
+    row = _time_checkpoint_overhead(iters, async_base)
+    rows.append(row)
+    C.emit(
+        f"actor_learner/ckpt_overhead/{CKPT_CELL[1]}/a{CKPT_CELL[0]}",
+        row["us_per_round"],
+        f"env_steps_per_sec={row['env_steps_per_sec']:.0f}"
+        f";baseline={row['baseline_env_steps_per_sec']:.0f}"
+        f";overhead={row['overhead_frac'] * 100:.1f}%"
+        f";bytes_per_save={row['bytes_per_save']}")
 
     # uniform-vs-prioritized convergence (time-to-reward-threshold gain)
     conv_iters = C.scaled(800)

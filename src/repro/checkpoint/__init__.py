@@ -1,4 +1,9 @@
-"""Checkpointing."""
-from repro.checkpoint.ckpt import save_checkpoint, load_checkpoint, latest_step
+"""Fault-tolerant checkpointing: durable atomic saves, manifest-validated
+loads, retention/GC, and an async background writer (see
+``docs/checkpointing.md``)."""
+from repro.checkpoint.ckpt import (latest_step, load_checkpoint,
+                                   save_checkpoint, sweep_orphans)
+from repro.checkpoint.manager import AsyncCheckpointer, CheckpointManager
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
+           "sweep_orphans", "CheckpointManager", "AsyncCheckpointer"]

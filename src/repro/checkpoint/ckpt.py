@@ -4,16 +4,31 @@ Handles: plain arrays, scalars, nested dict/list/tuple/NamedTuple-like
 pytrees, the quantized containers (PackedTensor, BlockQuantized,
 ObserverState) — everything is flattened with jax.tree_util and the treedef
 reconstructed by the caller providing a matching "template" pytree, which
-sidesteps pickling treedefs. Writes are atomic (tmp + rename).
+sidesteps pickling treedefs.
+
+Durability: writes stage into a ``ckpt-tmp-*`` file in the target
+directory, fsync the file, ``os.replace`` onto the final name, then fsync
+the directory — the rename is the commit point, so a crash at any earlier
+instant leaves prior checkpoints untouched and at worst some tmp debris
+behind (reclaimed by ``sweep_orphans``).  Loads validate every leaf's
+shape and dtype against the caller's template and raise ``ValueError``
+with per-leaf detail — a real exception, not an ``assert``, so the check
+survives ``python -O``.
 
 Quantized checkpoints: saving a ``ptq_pack``'d params tree stores int8 codes
-directly — the on-disk artifact gets the paper's ~4x size reduction too.
+directly — the on-disk artifact gets the paper's ~4x size reduction too
+(round-trip coverage in ``tests/test_checkpoint.py``).
+
+This module is the single-file layer; ``repro.checkpoint.manager`` builds
+the manifest-based directory-per-step format and the async writer on top.
 """
 from __future__ import annotations
 
 import os
+import re
+import shutil
 import tempfile
-from typing import Any, Optional
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,56 +37,183 @@ import numpy as np
 
 PyTree = Any
 
+# staging-name patterns owned by this subsystem; sweep_orphans removes
+# matching debris, tolerant parsers skip it
+TMP_PREFIX = "ckpt-tmp-"                       # file saves (this module)
+_FILE_RE = re.compile(r"^ckpt_(\d+)\.msgpack$")
+_DIR_RE = re.compile(r"^ckpt_(\d+)$")
+_TMP_DIR_RE = re.compile(r"^ckpt_\d+\.tmp-")   # manager staging dirs
+
+
+def dtype_str(dt) -> str:
+    """Round-trippable dtype spelling (``'<f4'``; the *name* for extension
+    dtypes like bfloat16 whose ``.str`` collapses to raw void bytes)."""
+    dt = np.dtype(dt)
+    return dt.name if "V" in dt.str else dt.str
+
 
 def _encode_leaf(x):
     arr = np.asarray(x)
-    return {b"dtype": arr.dtype.str.encode(),
+    return {b"dtype": dtype_str(arr.dtype).encode(),
             b"shape": list(arr.shape),
             b"data": arr.tobytes()}
 
 
 def _decode_leaf(d):
-    return np.frombuffer(d[b"data"], dtype=np.dtype(d[b"dtype"].decode())
+    # copy into a bytearray first: np.frombuffer over the msgpack bytes
+    # object is a READ-ONLY view, which blows up the moment a resumed
+    # leaf is donated to a jit or updated in place
+    return np.frombuffer(bytearray(d[b"data"]),
+                         dtype=np.dtype(d[b"dtype"].decode())
                          ).reshape(d[b"shape"])
+
+
+def _encoded_spec(d) -> Tuple[Tuple[int, ...], str]:
+    return tuple(d[b"shape"]), d[b"dtype"].decode()
+
+
+def leaf_spec(x) -> Tuple[Tuple[int, ...], str]:
+    """``(shape, dtype_str)`` of a template leaf without device transfer."""
+    dt = getattr(x, "dtype", None)
+    if dt is None:                      # python scalar leaf
+        arr = np.asarray(x)
+        return tuple(arr.shape), dtype_str(arr.dtype)
+    return tuple(x.shape), dtype_str(dt)
+
+
+def validate_leaves(specs: Sequence[Tuple[Tuple[int, ...], str]],
+                    template: PyTree, *, source: str) -> None:
+    """Check per-leaf ``(shape, dtype)`` specs against ``template``.
+
+    Raises ``ValueError`` naming every mismatched leaf by its tree path —
+    a count-only check would let a same-count wrong-shape template
+    silently reshape garbage.
+    """
+    paths_leaves, _ = jax.tree_util.tree_flatten_with_path(template)
+    if len(specs) != len(paths_leaves):
+        raise ValueError(
+            f"{source}: leaf count mismatch — checkpoint has "
+            f"{len(specs)} leaves, template has {len(paths_leaves)}")
+    bad = []
+    for (path, t), (shape, dt) in zip(paths_leaves, specs):
+        want_shape, want_dt = leaf_spec(t)
+        if tuple(shape) != want_shape or dt != want_dt:
+            bad.append(f"  {jax.tree_util.keystr(path) or '<root>'}: "
+                       f"checkpoint {tuple(shape)}/{dt} vs template "
+                       f"{want_shape}/{want_dt}")
+    if bad:
+        raise ValueError(
+            f"{source}: {len(bad)} leaf mismatch(es) against template "
+            f"(wrong net_kwargs / algo config?):\n" + "\n".join(bad))
+
+
+def _redevice(leaves: List[np.ndarray], template: PyTree) -> PyTree:
+    """Unflatten host leaves into ``template``'s structure; jax-array
+    template leaves come back on device, everything else stays (writeable)
+    numpy."""
+    treedef = jax.tree_util.tree_structure(template)
+    t_leaves = jax.tree_util.tree_leaves(template)
+    out = [jnp.asarray(leaf) if isinstance(t, jax.Array) else
+           np.asarray(leaf) for leaf, t in zip(leaves, t_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def fsync_dir(path: str) -> None:
+    """fsync a directory so renames inside it survive power loss."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def save_checkpoint(path: str, tree: PyTree, step: Optional[int] = None
                     ) -> str:
-    """Save pytree leaves; returns the final path."""
+    """Durably save pytree leaves; returns the final path.
+
+    With ``step`` the file is ``<path>/ckpt_{step:08d}.msgpack`` and a
+    successful commit also sweeps tmp debris left by earlier crashed
+    saves in that directory.  The ``os.replace`` is the commit point
+    (fsync'd file, then fsync'd directory).
+    """
     if step is not None:
         path = os.path.join(path, f"ckpt_{step:08d}.msgpack")
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    d = os.path.dirname(path) or "."
+    os.makedirs(d, exist_ok=True)
     leaves = jax.tree_util.tree_leaves(tree)
     payload = msgpack.packb([_encode_leaf(x) for x in leaves])
-    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=TMP_PREFIX)
     with os.fdopen(fd, "wb") as f:
         f.write(payload)
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, path)
+    fsync_dir(d)
+    if step is not None:
+        sweep_orphans(d)
     return path
 
 
 def load_checkpoint(path: str, template: PyTree, step: Optional[int] = None
                     ) -> PyTree:
-    """Load into the structure of ``template`` (shapes/dtypes must match)."""
+    """Load into the structure of ``template``.
+
+    Every leaf's shape and dtype is validated against ``template`` before
+    any data is materialized; mismatches raise ``ValueError`` with
+    per-leaf path detail (see ``validate_leaves``).  Loaded numpy leaves
+    are writeable copies, safe to mutate or donate.
+    """
     if step is not None:
         path = os.path.join(path, f"ckpt_{step:08d}.msgpack")
     with open(path, "rb") as f:
         raw = msgpack.unpackb(f.read())
-    leaves = [_decode_leaf(d) for d in raw]
-    treedef = jax.tree_util.tree_structure(template)
-    assert treedef.num_leaves == len(leaves), \
-        f"checkpoint has {len(leaves)} leaves, template {treedef.num_leaves}"
-    t_leaves = jax.tree_util.tree_leaves(template)
-    out = [jnp.asarray(leaf).astype(t.dtype) if hasattr(t, "dtype")
-           else np.asarray(leaf)
-           for leaf, t in zip(leaves, t_leaves)]
-    return jax.tree_util.tree_unflatten(treedef, out)
+    validate_leaves([_encoded_spec(d) for d in raw], template, source=path)
+    return _redevice([_decode_leaf(d) for d in raw], template)
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest committed step in ``ckpt_dir``, or None.
+
+    Recognizes both the single-file format (``ckpt_N.msgpack``) and the
+    manager's directory format (``ckpt_N/`` with a committed manifest).
+    Tolerant: stray ``ckpt_*`` entries that don't parse as a step are
+    skipped, never fatal.
+    """
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = [int(f[len("ckpt_"):-len(".msgpack")])
-             for f in os.listdir(ckpt_dir)
-             if f.startswith("ckpt_") and f.endswith(".msgpack")]
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        full = os.path.join(ckpt_dir, name)
+        m = _FILE_RE.match(name)
+        if m and os.path.isfile(full):
+            steps.append(int(m.group(1)))
+            continue
+        m = _DIR_RE.match(name)
+        if m and os.path.isfile(os.path.join(full, "manifest.json")):
+            steps.append(int(m.group(1)))
     return max(steps) if steps else None
+
+
+def sweep_orphans(ckpt_dir: str) -> List[str]:
+    """Remove tmp debris from crashed or failed saves; returns the names
+    removed.
+
+    Only this subsystem's own staging patterns are touched
+    (``ckpt-tmp-*`` files from ``save_checkpoint``, ``ckpt_N.tmp-*``
+    staging dirs from ``CheckpointManager``).  Safe under the
+    single-writer discipline the subsystem assumes: a sweep runs on the
+    writer's own thread only after its staging entry has been renamed
+    away, so it can only ever see dead debris.
+    """
+    removed: List[str] = []
+    if not os.path.isdir(ckpt_dir):
+        return removed
+    for name in os.listdir(ckpt_dir):
+        full = os.path.join(ckpt_dir, name)
+        if name.startswith(TMP_PREFIX) and os.path.isfile(full):
+            os.unlink(full)
+            removed.append(name)
+        elif _TMP_DIR_RE.match(name) and os.path.isdir(full):
+            shutil.rmtree(full)
+            removed.append(name)
+    return removed

@@ -1,0 +1,265 @@
+"""Manifest-based checkpoint manager and the async background writer.
+
+``CheckpointManager`` is the durable directory-per-step format RL training
+checkpoints use::
+
+    <dir>/ckpt_00000040/leaves.msgpack   flattened pytree (ckpt.py encoding)
+    <dir>/ckpt_00000040/manifest.json    format tag, step, per-leaf
+                                         shape/dtype, caller "extra" dict
+
+Commit protocol (the levanter/orbax async-commit idiom): stage everything
+into ``ckpt_N.tmp-<uuid>/``, fsync data + manifest + the staging dir,
+``os.replace`` onto the final name, fsync the parent.  The rename is the
+commit point — a crash at ANY earlier instant leaves previously committed
+steps untouched and at worst tmp debris behind, which ``sweep_orphans``
+reclaims on the next save.  Loads validate every leaf against the
+manifest + caller template (``ValueError`` with per-leaf detail) instead
+of trusting shapes.
+
+``AsyncCheckpointer`` puts the commit on a single daemon writer thread so
+a training loop never blocks on serialization or disk: the device->host
+copy happens on the *caller's* thread (mandatory under buffer donation —
+the next dispatched chunk invalidates the arrays being saved), everything
+after that is background.  Saves commit in submission order; writer
+failures are captured and re-raised on the next ``save_async``/``wait``.
+
+Single-writer discipline: one process (one writer thread) owns a given
+checkpoint directory at a time.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import uuid
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import msgpack
+import numpy as np
+
+from repro.checkpoint import ckpt as ckpt_lib
+
+FORMAT = "repro-ckpt-v1"
+DATA_FILE = "leaves.msgpack"
+MANIFEST_FILE = "manifest.json"
+
+
+class CheckpointManager:
+    """Synchronous durable checkpoints: manifest, retention, validation.
+
+    ``keep`` bounds retention: after each commit, all but the newest
+    ``keep`` steps are deleted (``keep <= 0`` keeps everything).
+    """
+
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = int(keep)
+        os.makedirs(directory, exist_ok=True)
+
+    def step_path(self, step: int) -> str:
+        return os.path.join(self.directory, f"ckpt_{int(step):08d}")
+
+    def steps(self) -> List[int]:
+        """Committed steps (manifest present), ascending."""
+        out = []
+        for name in os.listdir(self.directory):
+            m = ckpt_lib._DIR_RE.match(name)
+            if m and os.path.isfile(os.path.join(
+                    self.directory, name, MANIFEST_FILE)):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def save(self, step: int, tree: Any,
+             extra: Optional[Dict[str, Any]] = None) -> str:
+        """Host-copy ``tree``'s leaves and commit; returns the step path."""
+        host = [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+        return self.commit_hosted(step, host, extra=extra)
+
+    def commit_hosted(self, step: int, host_leaves: List[np.ndarray],
+                      extra: Optional[Dict[str, Any]] = None) -> str:
+        """Commit already-host-resident leaves (the async writer's path).
+
+        No cleanup on failure by design: a failed commit is
+        indistinguishable from a crash, and both leave only staging
+        debris that the post-commit ``sweep_orphans`` of the *next*
+        successful save reclaims.
+        """
+        manifest = {
+            "format": FORMAT,
+            "step": int(step),
+            "leaf_count": len(host_leaves),
+            "leaves": [{"shape": list(a.shape),
+                        "dtype": ckpt_lib.dtype_str(a.dtype)}
+                       for a in host_leaves],
+            "extra": {} if extra is None else extra,
+        }
+        payload = msgpack.packb([ckpt_lib._encode_leaf(a)
+                                 for a in host_leaves])
+        tmp = self.step_path(step) + ".tmp-" + uuid.uuid4().hex[:8]
+        os.makedirs(tmp)
+        for name, data in ((DATA_FILE, payload),
+                           (MANIFEST_FILE,
+                            json.dumps(manifest, sort_keys=True).encode())):
+            with open(os.path.join(tmp, name), "wb") as f:
+                f.write(data)
+                f.flush()
+                os.fsync(f.fileno())
+        ckpt_lib.fsync_dir(tmp)
+        final = self.step_path(step)
+        if os.path.isdir(final):        # re-save of an existing step
+            shutil.rmtree(final)
+        os.replace(tmp, final)          # <- the commit point
+        ckpt_lib.fsync_dir(self.directory)
+        self._gc()
+        self.sweep_orphans()
+        return final
+
+    def manifest(self, step: int) -> Dict[str, Any]:
+        path = os.path.join(self.step_path(step), MANIFEST_FILE)
+        with open(path, "r", encoding="utf-8") as f:
+            m = json.load(f)
+        if m.get("format") != FORMAT:
+            raise ValueError(f"{path}: unknown checkpoint format "
+                             f"{m.get('format')!r} (want {FORMAT!r})")
+        return m
+
+    def restore(self, step: int, template: Any
+                ) -> Tuple[Any, Dict[str, Any]]:
+        """Validated load of ``step``; returns ``(tree, extra)``.
+
+        Raises ``ValueError`` with per-leaf path detail on any
+        shape/dtype mismatch against ``template`` (manifest-first, so a
+        mismatch is diagnosed without decoding the data payload).
+        """
+        m = self.manifest(step)
+        source = self.step_path(step)
+        specs = [(tuple(s["shape"]), s["dtype"]) for s in m["leaves"]]
+        ckpt_lib.validate_leaves(specs, template, source=source)
+        with open(os.path.join(source, DATA_FILE), "rb") as f:
+            raw = msgpack.unpackb(f.read())
+        if len(raw) != m["leaf_count"]:
+            raise ValueError(
+                f"{source}: data payload has {len(raw)} leaves but the "
+                f"manifest commits {m['leaf_count']} — torn checkpoint")
+        leaves = [ckpt_lib._decode_leaf(d) for d in raw]
+        return ckpt_lib._redevice(leaves, template), m.get("extra", {})
+
+    def sweep_orphans(self) -> List[str]:
+        return ckpt_lib.sweep_orphans(self.directory)
+
+    def _gc(self) -> None:
+        if self.keep <= 0:
+            return
+        stale = self.steps()[:-self.keep]
+        for s in stale:
+            shutil.rmtree(self.step_path(s), ignore_errors=True)
+        if stale:
+            ckpt_lib.fsync_dir(self.directory)
+
+
+class AsyncCheckpointer:
+    """Background checkpoint writer — never blocks the jit'd learner step.
+
+    ``save_async`` synchronously copies the tree's leaves to host (on the
+    caller's thread, before the next donated dispatch can invalidate
+    them), then queues the encode+fsync+rename commit to a daemon writer
+    thread and returns.  ``wait()`` drains the queue; the commit point of
+    save k is the rename, observed via ``last_committed_step()``.
+    """
+
+    def __init__(self, directory: str, *, keep: int = 3,
+                 manager: Optional[CheckpointManager] = None):
+        self.manager = manager if manager is not None else \
+            CheckpointManager(directory, keep=keep)
+        # reclaim debris a crashed predecessor left in this directory
+        self.manager.sweep_orphans()
+        self._q: "queue.Queue" = queue.Queue()
+        self._lock = threading.Lock()
+        self._error: Optional[BaseException] = None
+        self._last_committed = self.manager.latest_step()
+        self._closed = False
+        self._thread = threading.Thread(target=self._worker,
+                                        name="ckpt-writer", daemon=True)
+        self._thread.start()
+
+    def save_async(self, step: int, tree: Any,
+                   extra: Optional[Dict[str, Any]] = None) -> None:
+        """Snapshot ``tree`` to host and queue its commit; returns fast.
+
+        ``extra`` must be JSON-serializable; it is deep-copied here so
+        the caller may keep mutating the original (e.g. appending to a
+        live metrics list) while the writer serializes.
+        """
+        self._reraise()
+        if self._closed:
+            raise RuntimeError("AsyncCheckpointer is closed")
+        # np.array, not np.asarray: asarray is ZERO-copy for numpy and
+        # CPU-jax leaves, and an aliased buffer the caller then donates
+        # (or mutates) would tear under the writer thread's encode
+        host = [np.array(x) for x in jax.tree_util.tree_leaves(tree)]
+        extra = None if extra is None else json.loads(json.dumps(extra))
+        self._q.put((int(step), host, extra))
+
+    def _worker(self) -> None:
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                step, host, extra = item
+                try:
+                    self.manager.commit_hosted(step, host, extra=extra)
+                    with self._lock:
+                        self._last_committed = step
+                except BaseException as e:  # stored, re-raised to caller
+                    with self._lock:
+                        self._error = e
+            finally:
+                self._q.task_done()
+
+    def wait(self) -> Optional[int]:
+        """Block until every queued save committed; re-raise any writer
+        failure; return ``last_committed_step()``."""
+        self._q.join()
+        self._reraise()
+        return self.last_committed_step()
+
+    def last_committed_step(self) -> Optional[int]:
+        with self._lock:
+            return self._last_committed
+
+    def latest_step(self) -> Optional[int]:
+        return self.manager.latest_step()
+
+    def restore(self, step: int, template: Any
+                ) -> Tuple[Any, Dict[str, Any]]:
+        """Drain pending saves (they may supersede disk state), then
+        ``CheckpointManager.restore``."""
+        self.wait()
+        return self.manager.restore(step, template)
+
+    def close(self) -> None:
+        """Drain the queue and stop the writer thread (idempotent)."""
+        if not self._closed:
+            self._closed = True
+            self._q.put(None)
+        self._thread.join()
+
+    def __enter__(self) -> "AsyncCheckpointer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _reraise(self) -> None:
+        with self._lock:
+            e, self._error = self._error, None
+        if e is not None:
+            raise RuntimeError("async checkpoint write failed") from e

@@ -73,7 +73,10 @@ def _serve_policy(args) -> int:
                       record_every=max(args.rl_iters, 1), eval_episodes=2,
                       seed=args.seed, steps_per_call=args.steps_per_call,
                       actor_backend=args.actor_backend,
-                      calib_batch=args.calib_batch, **topo_kw)
+                      calib_batch=args.calib_batch,
+                      checkpoint_dir=args.ckpt_dir,
+                      checkpoint_every=args.ckpt_every,
+                      resume=args.resume, **topo_kw)
     if algo in REPLAY_ALGOS and args.replay == "prioritized":
         print(f"[serve-rl] prioritized replay: alpha="
               f"{args.priority_exponent} is_beta={args.is_beta}")
@@ -253,6 +256,14 @@ def main(argv=None) -> int:
                     help="admission straggler wait: dispatch once the "
                          "oldest queued request is this old (0 = never "
                          "wait; the tail-latency knob)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint the training phase here "
+                         "(repro.checkpoint async writer)")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="iterations between training checkpoints")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume training from the newest checkpoint in "
+                         "--ckpt-dir before serving")
     args = ap.parse_args(argv)
 
     if args.rl_env:

@@ -40,8 +40,15 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
+    # both modes: fault tolerance (repro.checkpoint)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest committed checkpoint in "
+                         "--ckpt-dir (rl mode: bitwise-identical to the "
+                         "uninterrupted run)")
+    ap.add_argument("--ckpt-keep", type=int, default=3,
+                    help="checkpoints retained in --ckpt-dir (<=0: all)")
     args = ap.parse_args(argv)
 
     if args.mode == "rl":
@@ -55,7 +62,10 @@ def run_rl(args) -> int:
     quant = QuantConfig.parse(args.quant)
     res = loops.train(args.algo, args.env, iterations=args.iterations,
                       quant=quant, seed=args.seed,
-                      record_every=max(args.iterations // 10, 1))
+                      record_every=max(args.iterations // 10, 1),
+                      checkpoint_dir=args.ckpt_dir,
+                      checkpoint_every=args.ckpt_every,
+                      resume=args.resume, checkpoint_keep=args.ckpt_keep)
     print(f"[train/rl] {args.algo} on {args.env} quant={quant.label()}: "
           f"eval rewards {['%.1f' % r for r in res.rewards]} "
           f"({res.wall_time_s:.0f}s)")
@@ -81,6 +91,14 @@ def run_lm(args) -> int:
     key = jax.random.PRNGKey(args.seed)
     params = transformer.init_params(cfg, key,
                                      dtype=jnp.dtype(cfg.mp.param_dtype))
+    if args.resume and args.ckpt_dir:
+        # params-only warm start (the rl mode has the full bitwise-resume
+        # contract; the lm demo loop checkpoints just the params)
+        last = ckpt_lib.latest_step(args.ckpt_dir)
+        if last is not None:
+            params = ckpt_lib.load_checkpoint(
+                args.ckpt_dir, {"params": params}, step=last)["params"]
+            print(f"[train/lm] resumed params from step {last}")
     opt = adam_lib.adam_init(params, adam_cfg)
     qat = transformer.init_qat_collection(cfg) if cfg.quant.is_qat else {}
     n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))

@@ -104,6 +104,18 @@ class ActorLearnerConfig:
 
 
 class ActorLearnerState(NamedTuple):
+    """The bulk-synchronous topology's full carry.
+
+    Checkpoint contract (``repro.checkpoint`` / ``loops.train``
+    ``checkpoint_dir``): every field — the learner with its optimizer
+    state and sharded replay (uniform or PER sum-trees), the stale actor
+    params, the packed int8/int4 ``actor_cache`` (``core.ptq`` registers
+    ``PackedTensor`` as a pytree, so the codes/scales flatten like any
+    leaf) and the schedule counters — is an array leaf, so the whole
+    state round-trips through ``tree_leaves``; re-running ``init`` with
+    the same seed/config rebuilds the matching restore template.
+    """
+
     learner: common.TrainState    # fp32 learner; extras.replay is sharded
     actor_params: Any             # the actors' (possibly stale) param copy
     actor_cache: Any              # packed int8 cache of actor_params
@@ -118,7 +130,13 @@ class ActorSnapshot(NamedTuple):
     (and their int8 cache) from the last push plus the schedule counters
     frozen at mint time.  Minted by ``AsyncPrograms.make_snapshot`` — a
     plain jit, so every leaf is a fresh buffer that never aliases the
-    learner state the next learner chunk donates."""
+    learner state the next learner chunk donates.
+
+    Checkpointable like ``ActorLearnerState``: the async driver saves the
+    live snapshot alongside the learner so a resumed run keeps serving
+    the *same* (possibly stale) actor params until the next sync point —
+    re-minting on resume would silently skip ahead of the staleness
+    schedule and break the bitwise-resume contract."""
     params: Any
     cache: Any                    # packed int8 cache (() for fp32 actors)
     step: jnp.ndarray

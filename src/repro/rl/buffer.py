@@ -427,3 +427,39 @@ def per_unstack(state: PrioritizedReplayState
     """Inverse of ``per_stack`` — split the shard axis back out."""
     n = state.replay.size.shape[0]
     return [jax.tree_util.tree_map(lambda x: x[i], state) for i in range(n)]
+
+
+def export_state(state: Any) -> Any:
+    """Host-side (numpy) snapshot of any replay pytree — ``ReplayState``,
+    ``PrioritizedReplayState``, their sharded layouts, ``DoubleBuffer``.
+
+    Materializes every leaf with ``np.asarray`` (blocks on in-flight
+    device work for those values only), so the snapshot is safe to hand
+    to a background checkpoint writer while the training loop keeps
+    donating the live buffers.  ``repro.checkpoint`` round-trips the
+    result; inverse is ``import_state``.  ``np.array`` (a forced copy),
+    not ``np.asarray``: a zero-copy view of a CPU-jax leaf would tear
+    the moment the runtime reuses the donated buffer.
+    """
+    import numpy as np
+    return jax.tree_util.tree_map(np.array, state)
+
+
+def import_state(template: Any, exported: Any) -> Any:
+    """Re-device an ``export_state`` snapshot into ``template``'s layout.
+
+    Validates structure plus per-leaf shape/dtype against ``template``
+    (``ValueError`` with leaf-path detail on mismatch — e.g. a snapshot
+    taken at a different ``capacity`` or shard count) and returns a tree
+    of fresh device arrays matching the template's types.
+    """
+    from repro.checkpoint import ckpt as ckpt_lib
+    t_def = jax.tree_util.tree_structure(template)
+    e_def = jax.tree_util.tree_structure(exported)
+    if t_def != e_def:
+        raise ValueError(f"replay snapshot structure {e_def} does not "
+                         f"match template {t_def}")
+    leaves = jax.tree_util.tree_leaves(exported)
+    ckpt_lib.validate_leaves([ckpt_lib.leaf_spec(x) for x in leaves],
+                             template, source="replay snapshot")
+    return ckpt_lib._redevice(leaves, template)

@@ -183,6 +183,22 @@ def _build(algo: str, env: Env, quant: QuantConfig, net_kwargs: Dict,
     return net, cfg
 
 
+def _loop_checkpointer(checkpoint_dir, checkpoint_every, resume, keep):
+    """``AsyncCheckpointer`` for the train drivers, or None when disabled.
+
+    Catches knob typos loudly: ``checkpoint_every``/``resume`` without a
+    directory would otherwise silently train with no fault tolerance.
+    """
+    if not checkpoint_dir:
+        if resume:
+            raise ValueError("resume=True needs checkpoint_dir")
+        if checkpoint_every:
+            raise ValueError("checkpoint_every > 0 needs checkpoint_dir")
+        return None
+    from repro import checkpoint as ckpt_lib
+    return ckpt_lib.AsyncCheckpointer(checkpoint_dir, keep=keep)
+
+
 def train(algo: str, env_name: str, *, iterations: int = 200,
           quant: QuantConfig = QuantConfig.none(), seed: int = 0,
           net_kwargs: Optional[Dict] = None,
@@ -193,7 +209,9 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
           topology: str = "fused", num_actors: int = 1,
           sync_every: int = 1, mesh=None, async_barrier: bool = False,
           replay: str = "uniform", priority_exponent: float = 0.6,
-          is_beta: float = 0.4) -> TrainResult:
+          is_beta: float = 0.4,
+          checkpoint_dir: Optional[str] = None, checkpoint_every: int = 0,
+          resume: bool = False, checkpoint_keep: int = 3) -> TrainResult:
     """Train ``algo`` on ``env_name``.
 
     ``steps_per_call > 1`` enables the scan-fused driver (see module
@@ -238,6 +256,19 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
     topology) with importance-sampling correction annealed from
     ``is_beta`` to 1 — see ``rl.buffer``.  ``priority_exponent=0.0``
     degrades to bitwise-uniform sampling.
+
+    ``checkpoint_dir`` + ``checkpoint_every`` enable fault tolerance
+    (``repro.checkpoint``, all topologies): every ``checkpoint_every``
+    iterations an ``AsyncCheckpointer`` snapshots learner + optimizer
+    state, replay buffer (uniform and PER sum-trees), packed actor
+    caches, env state, RNG keys and the host-side metric lists to
+    ``checkpoint_dir`` on a background writer thread — the jit'd step
+    never blocks on disk.  ``resume=True`` restarts from the newest
+    committed step, and the contract is bitwise: resume-at-k then
+    train-to-n equals the uninterrupted run to n exactly (checkpoint
+    cadence never alters chunk boundaries or the PRNG chain; anchor
+    tests in ``tests/test_resume.py``).  ``checkpoint_keep`` bounds
+    retention; see ``docs/checkpointing.md``.
     """
     actorq.validate_actor_backend(actor_backend)
     actor_learner.validate_topology(topology)
@@ -272,7 +303,9 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
             steps_per_call=steps_per_call, num_actors=num_actors,
             sync_every=sync_every, mesh=mesh, barrier=async_barrier,
             actor_backend=actor_backend, k_init=k_init, k_env=k_env,
-            k_run=k_run)
+            k_run=k_run, checkpoint_dir=checkpoint_dir,
+            checkpoint_every=checkpoint_every, resume=resume,
+            checkpoint_keep=checkpoint_keep)
     if async_barrier:
         raise ValueError("async_barrier is an async-topology knob — pass "
                          "topology='async'")
@@ -312,8 +345,26 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
     chunks: Dict[int, Callable] = {}   # compiled fused drivers by length
 
     rewards, variances, divergences = [], [], []
-    t0 = time.time()
+    ckptr = _loop_checkpointer(checkpoint_dir, checkpoint_every, resume,
+                               checkpoint_keep)
     i = 0
+    if ckptr is not None and resume:
+        start = ckptr.latest_step()
+        if start is not None:
+            # template = the freshly initialized run state: same
+            # seed/config -> same treedef, and restore() validates every
+            # leaf's shape/dtype against it before touching anything
+            tree, extra = ckptr.restore(
+                start, {"state": state, "env_state": env_state,
+                        "obs": obs, "key": k_run})
+            state, env_state, obs, k_run = (
+                tree["state"], tree["env_state"], tree["obs"], tree["key"])
+            i = int(extra["iteration"])
+            rewards = [float(r) for r in extra["rewards"]]
+            variances = [float(v) for v in extra["action_variances"]]
+            divergences = [list(d) for d in extra["divergences"]]
+    last_saved = i
+    t0 = time.time()
     while i < iterations:
         # clip chunks to record boundaries so the recorded metrics/rewards
         # (and their PRNG draws) match the per-step driver exactly
@@ -359,7 +410,25 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
             if "divergence" in last and i >= sync_every:
                 divergences.append(
                     np.asarray(last["divergence"]).tolist())
+        if ckptr is not None and checkpoint_every > 0 and (
+                i - last_saved >= checkpoint_every or
+                (i == iterations and i > last_saved)):
+            # end of the loop body: the saved key and metric lists
+            # already include this boundary's eval draws, so a resumed
+            # run continues the PRNG chain bitwise.  Cadence never clips
+            # chunks — the chunk-boundary sequence is a function of i
+            # alone, identical with or without checkpointing.
+            ckptr.save_async(
+                i, {"state": state, "env_state": env_state, "obs": obs,
+                    "key": k_run},
+                extra={"iteration": i, "rewards": rewards,
+                       "action_variances": variances,
+                       "divergences": divergences})
+            last_saved = i
     wall = time.time() - t0
+    if ckptr is not None:
+        ckptr.wait()
+        ckptr.close()
     if isinstance(state, actor_learner.ActorLearnerState):
         state = state.learner
     return TrainResult(state=state, act_fn=act_fn, env=env, rewards=rewards,
@@ -369,8 +438,9 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
 
 def _train_async(algo, env, net, cfg, *, iterations, record_every,
                  eval_episodes, steps_per_call, num_actors, sync_every,
-                 mesh, barrier, actor_backend, k_init, k_env, k_run
-                 ) -> TrainResult:
+                 mesh, barrier, actor_backend, k_init, k_env, k_run,
+                 checkpoint_dir=None, checkpoint_every=0, resume=False,
+                 checkpoint_keep=3) -> TrainResult:
     """The ``topology="async"`` host driver: overlapped dispatch.
 
     Each round dispatches one actor chunk (``steps_per_call`` rollouts
@@ -411,8 +481,34 @@ def _train_async(algo, env, net, cfg, *, iterations, record_every,
     updates_since_push = 0
     total_updates = 0             # learner updates dispatched (host-side)
     snap_minted_at = 0
-    t0 = time.time()
+    ckptr = _loop_checkpointer(checkpoint_dir, checkpoint_every, resume,
+                               checkpoint_keep)
     i = 0
+    if ckptr is not None and resume:
+        start = ckptr.latest_step()
+        if start is not None:
+            # barrier mode threads ONE slot through learner.extras.replay
+            # (wbuf is reassigned from it each round), so saving wbuf too
+            # would duplicate the buffer — it checkpoints as None there
+            tree, extra = ckptr.restore(
+                start, {"learner": learner,
+                        "wbuf": None if barrier else wbuf,
+                        "env_state": env_state, "obs": obs, "snap": snap,
+                        "key": k_run})
+            learner, wbuf, env_state, obs, snap, k_run = (
+                tree["learner"], tree["wbuf"], tree["env_state"],
+                tree["obs"], tree["snap"], tree["key"])
+            i = int(extra["iteration"])
+            rewards = [float(r) for r in extra["rewards"]]
+            variances = [float(v) for v in extra["action_variances"]]
+            actor_lags = [int(x) for x in extra["actor_lags"]]
+            div_futs = [np.asarray(d, dtype=np.float32)
+                        for d in extra["divergences"]]
+            updates_since_push = int(extra["updates_since_push"])
+            total_updates = int(extra["total_updates"])
+            snap_minted_at = int(extra["snap_minted_at"])
+    last_saved = i
+    t0 = time.time()
     while i < iterations:
         # clip rounds to record boundaries so evals land at the same
         # iteration counts whatever the chunk size.  NB unlike the
@@ -467,8 +563,34 @@ def _train_async(algo, env, net, cfg, *, iterations, record_every,
             # neither async program surfaces an action-variance metric
             # (same zeros the synchronous actor-learner topology records)
             variances.append(0.0)
+        if ckptr is not None and checkpoint_every > 0 and (
+                i - last_saved >= checkpoint_every or
+                (i == iterations and i > last_saved)):
+            # saves land at natural round boundaries only (cadence never
+            # clips a round), so the per-round PRNG chain — and with it
+            # the whole trajectory — is identical with or without
+            # checkpointing.  Host-copying here blocks this thread on
+            # the in-flight chunks, but never inserts a device barrier
+            # into the dispatch chain itself.
+            div_futs = [np.asarray(d) for d in div_futs]
+            ckptr.save_async(
+                i, {"learner": learner,
+                    "wbuf": None if barrier else wbuf,
+                    "env_state": env_state, "obs": obs, "snap": snap,
+                    "key": k_run},
+                extra={"iteration": i, "rewards": rewards,
+                       "action_variances": variances,
+                       "divergences": [d.tolist() for d in div_futs],
+                       "actor_lags": actor_lags,
+                       "updates_since_push": updates_since_push,
+                       "total_updates": total_updates,
+                       "snap_minted_at": snap_minted_at})
+            last_saved = i
     wall = time.time() - t0
     divergences = [np.asarray(d).tolist() for d in div_futs]
+    if ckptr is not None:
+        ckptr.wait()
+        ckptr.close()
     return TrainResult(state=learner, act_fn=progs.act_fn, env=env,
                        rewards=rewards, action_variances=variances,
                        wall_time_s=wall, algo_cfg=cfg, net=net,

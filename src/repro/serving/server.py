@@ -298,7 +298,18 @@ class PolicyServer:
             self.serve_batch(batch)
             served.extend(batch)
             batch = self.batcher.get_batch(timeout=0)
-        assert len(served) == len(reqs)
+        if len(served) != len(reqs):
+            # a real error, not an assert: the dispatch path must survive
+            # ``python -O``, and the unserved waiters must be failed —
+            # not left hanging on ``result()`` forever
+            err = RuntimeError(
+                f"dispatch drained {len(served)} of {len(reqs)} admitted "
+                f"requests — batcher admission invariant violated")
+            drained = {id(r) for r in served}
+            for r in reqs:
+                if id(r) not in drained:
+                    r.fail(err)
+            raise err
         return [r.result(timeout=0).action for r in reqs]
 
     # -- dispatch loop -----------------------------------------------------

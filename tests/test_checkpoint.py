@@ -1,0 +1,298 @@
+"""Checkpoint subsystem tests (ISSUE 8).
+
+* the seed's correctness sweep: writeable loaded leaves (donation-safe),
+  ``ValueError`` validation with per-leaf shape/dtype detail (no bare
+  asserts), tolerant ``latest_step`` parsing, orphan tmp sweep,
+* round-trips parametrized over the containers training actually
+  checkpoints: fp32 params, packed int8/int4 actor caches, PER sum-tree
+  state, optimizer state,
+* ``CheckpointManager``: manifest contents, retention GC, validated
+  restore, re-save of a step,
+* ``AsyncCheckpointer``: FIFO commits, ``wait``/``last_committed_step``,
+  writer-error propagation,
+* crash injection: a save killed between staging and the rename leaves
+  the directory loadable at the previous committed step, and the next
+  successful save sweeps the debris.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ck
+from repro.checkpoint import manager as mgr_lib
+from repro.rl import actorq, dqn
+from repro.rl import buffer as rb
+from repro.rl.envs import make as make_env
+from repro.rl.networks import make_network
+
+
+def _leaves(tree):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+
+
+def _assert_tree_equal(a, b):
+    la, lb = _leaves(a), _leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# seed bugfixes
+# ---------------------------------------------------------------------------
+
+def test_loaded_leaves_are_writeable_and_donatable(tmp_path):
+    """Regression: ``np.frombuffer`` views were read-only — resumed
+    leaves must survive in-place mutation and buffer donation."""
+    tree = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    path = ck.save_checkpoint(str(tmp_path / "t.msgpack"), tree)
+    loaded = ck.load_checkpoint(path, tree)
+    loaded["w"][0, 0] = 42.0                  # ValueError before the fix
+    assert loaded["w"].flags.writeable
+
+    bump = jax.jit(lambda x: x + 1.0, donate_argnums=0)
+    out = bump(jnp.asarray(loaded["w"]))
+    assert float(out[0, 0]) == 43.0
+
+
+def test_load_rejects_wrong_shape_with_detail(tmp_path):
+    """Same leaf count, wrong shape: must be a loud ``ValueError`` (the
+    seed's count-only assert silently reshaped garbage, and vanished
+    under ``python -O``)."""
+    tree = {"a": np.zeros((2, 3), np.float32), "b": np.zeros(4, np.int32)}
+    path = ck.save_checkpoint(str(tmp_path / "t.msgpack"), tree)
+    bad = {"a": np.zeros((3, 2), np.float32), "b": np.zeros(4, np.int32)}
+    with pytest.raises(ValueError, match=r"\['a'\].*\(2, 3\).*\(3, 2\)"):
+        ck.load_checkpoint(path, bad)
+
+
+def test_load_rejects_wrong_dtype_and_count(tmp_path):
+    tree = {"a": np.zeros((2,), np.float32)}
+    path = ck.save_checkpoint(str(tmp_path / "t.msgpack"), tree)
+    with pytest.raises(ValueError, match="<i4"):
+        ck.load_checkpoint(path, {"a": np.zeros((2,), np.int32)})
+    with pytest.raises(ValueError, match="leaf count"):
+        ck.load_checkpoint(path, {"a": np.zeros((2,), np.float32),
+                                  "b": np.zeros((2,), np.float32)})
+
+
+def test_latest_step_tolerates_stray_files(tmp_path):
+    """The seed raised ``ValueError`` on any non-step ``ckpt_*`` entry."""
+    ck.save_checkpoint(str(tmp_path), {"x": np.zeros(2)}, step=3)
+    (tmp_path / "ckpt_notastep.msgpack").write_bytes(b"junk")
+    (tmp_path / "ckpt_README").write_text("hands off")
+    (tmp_path / "other.txt").write_text("")
+    os.makedirs(tmp_path / "ckpt_00000009")   # dir without manifest: not
+    assert ck.latest_step(str(tmp_path)) == 3  # a committed step
+    assert ck.latest_step(str(tmp_path / "missing")) is None
+
+
+def test_sweep_orphans_removes_only_debris(tmp_path):
+    ck.save_checkpoint(str(tmp_path), {"x": np.zeros(2)}, step=1)
+    (tmp_path / "ckpt-tmp-dead1").write_bytes(b"partial")
+    os.makedirs(tmp_path / "ckpt_00000002.tmp-beef")
+    (tmp_path / "ckpt_00000002.tmp-beef" / "leaves.msgpack").write_bytes(b"")
+    (tmp_path / "keepme.txt").write_text("")
+    removed = ck.sweep_orphans(str(tmp_path))
+    assert sorted(removed) == ["ckpt-tmp-dead1", "ckpt_00000002.tmp-beef"]
+    assert (tmp_path / "keepme.txt").exists()
+    assert ck.latest_step(str(tmp_path)) == 1
+
+
+def test_stepped_save_sweeps_previous_orphans(tmp_path):
+    (tmp_path / "ckpt-tmp-leftover").write_bytes(b"x")
+    ck.save_checkpoint(str(tmp_path), {"x": np.zeros(2)}, step=2)
+    names = os.listdir(tmp_path)
+    assert "ckpt-tmp-leftover" not in names
+    assert "ckpt_00000002.msgpack" in names
+
+
+# ---------------------------------------------------------------------------
+# container round-trips (the quantized-container claim, now tested)
+# ---------------------------------------------------------------------------
+
+def _fp32_params():
+    net = make_network((5,), 3, hidden=(8,))
+    return net.init(jax.random.PRNGKey(0))
+
+
+def _packed_cache(backend):
+    return actorq.make_actor_cache(_fp32_params(), backend)
+
+
+def _per_state():
+    state = rb.per_init(16, (4,))
+    batch = rb.Transition(
+        obs=jnp.ones((4, 4)), action=jnp.arange(4, dtype=jnp.int32),
+        reward=jnp.arange(4.0), done=jnp.zeros(4),
+        next_obs=jnp.full((4, 4), 2.0))
+    state = rb.per_add(state, batch)
+    return rb.per_update_priorities(state, jnp.arange(4),
+                                    jnp.arange(4.0) + 0.5, 0.6)
+
+
+def _opt_state():
+    env = make_env("catch")
+    net = make_network(env.spec.obs_shape, env.spec.n_actions, hidden=(8,))
+    cfg = dqn.DQNConfig(n_envs=2, rollout_steps=2, buffer_size=32,
+                        batch_size=4, warmup=4)
+    return dqn.init(jax.random.PRNGKey(1), env, net, cfg).opt
+
+
+@pytest.mark.parametrize("build", [
+    _fp32_params,
+    lambda: _packed_cache("int8"),
+    lambda: _packed_cache("int4"),
+    _per_state,
+    _opt_state,
+], ids=["fp32_params", "int8_cache", "int4_cache", "per_sum_tree",
+        "optimizer_state"])
+def test_container_roundtrip(tmp_path, build):
+    tree = build()
+    path = ck.save_checkpoint(str(tmp_path / "c.msgpack"), tree)
+    _assert_tree_equal(ck.load_checkpoint(path, tree), tree)
+
+    mgr = mgr_lib.CheckpointManager(str(tmp_path / "mgr"))
+    mgr.save(4, tree, extra={"note": "hi"})
+    restored, extra = mgr.restore(4, tree)
+    _assert_tree_equal(restored, tree)
+    assert extra == {"note": "hi"}
+
+
+def test_replay_export_import_roundtrip():
+    state = _per_state()
+    snap = rb.export_state(state)
+    back = rb.import_state(state, snap)
+    _assert_tree_equal(back, state)
+    # capacity mismatch is loud, with the offending leaf named
+    with pytest.raises(ValueError, match="tree"):
+        rb.import_state(rb.per_init(32, (4,)), snap)
+    # structural mismatch too
+    with pytest.raises(ValueError, match="structure"):
+        rb.import_state(state.replay, snap)
+
+
+# ---------------------------------------------------------------------------
+# CheckpointManager
+# ---------------------------------------------------------------------------
+
+def test_manager_manifest_contents(tmp_path):
+    mgr = mgr_lib.CheckpointManager(str(tmp_path))
+    tree = {"w": np.zeros((2, 3), np.float32),
+            "n": np.zeros((), np.int32)}
+    mgr.save(7, tree, extra={"iteration": 7})
+    m = json.loads((tmp_path / "ckpt_00000007" / "manifest.json"
+                    ).read_text())
+    assert m["format"] == mgr_lib.FORMAT
+    assert m["step"] == 7 and m["leaf_count"] == 2
+    assert {"shape": [2, 3], "dtype": "<f4"} in m["leaves"]
+    assert m["extra"] == {"iteration": 7}
+
+
+def test_manager_validates_restore_template(tmp_path):
+    mgr = mgr_lib.CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": np.zeros((4,), np.float32)})
+    with pytest.raises(ValueError, match=r"\['w'\]"):
+        mgr.restore(1, {"w": np.zeros((5,), np.float32)})
+
+
+def test_manager_retention_gc_and_resave(tmp_path):
+    mgr = mgr_lib.CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"x": np.full(3, float(s))})
+    assert mgr.steps() == [3, 4]
+    assert mgr.latest_step() == 4
+    # re-saving an existing step replaces it atomically
+    mgr.save(4, {"x": np.full(3, 99.0)})
+    restored, _ = mgr.restore(4, {"x": np.zeros(3)})
+    np.testing.assert_array_equal(restored["x"], np.full(3, 99.0))
+
+
+# ---------------------------------------------------------------------------
+# AsyncCheckpointer
+# ---------------------------------------------------------------------------
+
+def test_async_checkpointer_commits_in_order(tmp_path):
+    with mgr_lib.AsyncCheckpointer(str(tmp_path), keep=0) as ac:
+        for s in (2, 4, 6):
+            ac.save_async(s, {"x": np.full(2, float(s))},
+                          extra={"iteration": s})
+        assert ac.wait() == 6
+        assert ac.last_committed_step() == 6
+        assert ac.manager.steps() == [2, 4, 6]
+        tree, extra = ac.restore(4, {"x": np.zeros(2)})
+    np.testing.assert_array_equal(tree["x"], np.full(2, 4.0))
+    assert extra["iteration"] == 4
+
+
+def test_async_checkpointer_snapshot_isolation(tmp_path):
+    """The host copy happens at ``save_async`` time: later caller-side
+    mutation (the donated-buffer regime) must not leak into the commit,
+    and a live ``extra`` list may keep growing."""
+    x = np.zeros(3, np.float32)
+    metrics = [1.0]
+    with mgr_lib.AsyncCheckpointer(str(tmp_path)) as ac:
+        ac.save_async(1, {"x": x}, extra={"rewards": metrics})
+        x[:] = -1.0                    # simulate donation reuse
+        metrics.append(2.0)
+        ac.wait()
+        tree, extra = ac.restore(1, {"x": np.zeros(3, np.float32)})
+    np.testing.assert_array_equal(tree["x"], np.zeros(3))
+    assert extra["rewards"] == [1.0]
+
+
+def test_async_checkpointer_propagates_writer_errors(tmp_path):
+    ac = mgr_lib.AsyncCheckpointer(str(tmp_path))
+
+    def boom(*a, **k):
+        raise OSError("disk on fire")
+
+    ac.manager.commit_hosted = boom
+    ac.save_async(1, {"x": np.zeros(2)})
+    with pytest.raises(RuntimeError, match="async checkpoint write"):
+        ac.wait()
+    ac.close()
+
+
+# ---------------------------------------------------------------------------
+# crash injection
+# ---------------------------------------------------------------------------
+
+def test_crash_mid_save_keeps_previous_step(tmp_path, monkeypatch):
+    """Kill the writer between staging and the rename: the directory must
+    stay loadable at the previous committed step, and the next successful
+    save must sweep the debris."""
+    mgr = mgr_lib.CheckpointManager(str(tmp_path))
+    mgr.save(1, {"x": np.full(2, 1.0)}, extra={"iteration": 1})
+
+    real_replace = os.replace
+
+    def killed(src, dst):
+        raise RuntimeError("SIGKILL'd mid-commit")
+
+    monkeypatch.setattr(os, "replace", killed)
+    with pytest.raises(RuntimeError, match="mid-commit"):
+        mgr.save(2, {"x": np.full(2, 2.0)})
+    monkeypatch.setattr(os, "replace", real_replace)
+
+    # debris from the dead save is present, but invisible to readers
+    debris = [n for n in os.listdir(tmp_path) if ".tmp-" in n]
+    assert debris
+    assert mgr.latest_step() == 1
+    assert ck.latest_step(str(tmp_path)) == 1
+    tree, extra = mgr.restore(1, {"x": np.zeros(2)})
+    np.testing.assert_array_equal(tree["x"], np.full(2, 1.0))
+    assert extra["iteration"] == 1
+
+    # a fresh writer on the same dir (the restarted process) sweeps on
+    # construction; its next save leaves no tmp entries behind
+    with mgr_lib.AsyncCheckpointer(str(tmp_path)) as ac:
+        ac.save_async(2, {"x": np.full(2, 2.0)})
+        ac.wait()
+    assert not [n for n in os.listdir(tmp_path) if ".tmp-" in n]
+    assert mgr.latest_step() == 2

@@ -398,3 +398,33 @@ def test_open_loop_latency_smoke():
     assert st_["dispatches"] < total      # continuous batching happened
     for sid in sids:
         assert srv.sessions.checkout(sid).steps == per_session
+
+
+# ---------------------------------------------------------------------------
+# dispatch-path invariant (ISSUE 8 bugfix)
+# ---------------------------------------------------------------------------
+
+def test_serve_dispatch_mismatch_fails_dropped_requests(monkeypatch):
+    """Regression: ``serve``'s drained-count check was a bare ``assert``
+    — stripped under ``python -O``, and a dropped request would hang its
+    waiter on ``result()`` forever.  It must be a real error that also
+    fails the unserved waiters."""
+    srv = _server(DISCRETE, "fp32", buckets=(4,))
+    sids = [srv.open_session() for _ in range(3)]
+    real_get = srv.batcher.get_batch
+    dropped = []
+
+    def dropping_get(timeout=0):
+        batch = real_get(timeout=timeout)
+        if batch and not dropped:       # lose one admitted request
+            dropped.append(batch.pop())
+        return batch
+
+    monkeypatch.setattr(srv.batcher, "get_batch", dropping_get)
+    with pytest.raises(RuntimeError, match="invariant"):
+        srv.serve(list(zip(sids, _obs(3))))
+    # the dropped waiter was failed, not left hanging
+    with pytest.raises(RuntimeError, match="invariant"):
+        dropped[0].result(timeout=0)
+    # the requests that WERE served still completed normally
+    assert srv.stats()["served"] == 2
