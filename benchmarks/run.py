@@ -147,6 +147,40 @@ def _check_serving_schema() -> None:
           f"{load['int8']['sessions']} sessions)")
 
 
+def _check_transformer_actor_schema() -> None:
+    """Schema gate on ``BENCH_transformer_actor.json`` (ISSUE 9): every
+    context cell must carry all three execution modes with finite
+    positive rates — a missing mode means one side of the windowed vs
+    KV-cache comparison silently broke — and the footprint row must show
+    the int8-coded cache well under the fp32 cache (codes are 1 byte of
+    4; the per-token scales add the rest)."""
+    import json
+    import math
+
+    path = os.path.join(_ROOT, "artifacts", "bench",
+                        "BENCH_transformer_actor.json")
+    with open(path) as f:
+        rows = json.load(f)
+    cells = {}
+    for r in rows:
+        if r.get("section") != "transformer_actor":
+            continue
+        for k in ("us_per_call", "env_steps_per_sec"):
+            v = float(r[k])
+            assert math.isfinite(v) and v > 0, (k, r)
+        cells.setdefault(int(r["context"]), set()).add(r["mode"])
+    assert cells, "transformer_actor section missing from " + path
+    want = {"fp32_windowed", "int8_windowed", "int8_kv_cache"}
+    for context, modes in cells.items():
+        assert modes == want, (context, modes)
+    foot = [r for r in rows
+            if r.get("section") == "transformer_actor_footprint"]
+    assert foot, "footprint row missing from " + path
+    assert 0 < float(foot[0]["int8_frac"]) <= 0.5, foot
+    print(f"BENCH_transformer_actor.json schema OK ({len(cells)} context "
+          f"cells, int8_frac={float(foot[0]['int8_frac']):.3f})")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--fast", action="store_true",
@@ -166,7 +200,7 @@ def main(argv=None) -> None:
     from benchmarks import (actor_learner, actor_throughput, deployment,
                             exploration, mixed_precision, ptq_rewards,
                             qat_bitwidth, roofline, serve_load,
-                            weight_distribution)
+                            transformer_actor, weight_distribution)
 
     if fast:
         jobs = [
@@ -195,6 +229,9 @@ def main(argv=None) -> None:
             ("serving_load",
              lambda: (serve_load.run(),
                       _check_serving_schema())),
+            ("transformer_actor",
+             lambda: (transformer_actor.run(batch=64, contexts=(4, 8)),
+                      _check_transformer_actor_schema())),
         ]
     else:
         jobs = [
@@ -214,6 +251,9 @@ def main(argv=None) -> None:
             ("serving_load",
              lambda: (serve_load.run(),
                       _check_serving_schema())),
+            ("transformer_actor",
+             lambda: (transformer_actor.run(),
+                      _check_transformer_actor_schema())),
         ]
     jobs.append(("roofline", roofline.main))
 

@@ -1,0 +1,116 @@
+"""Sequence-policy actor benchmark: env-steps/sec vs context length.
+
+The ISSUE 9 systems claim: the int8 KV-cache decode path
+(``rl.actorq.quantized_seq_step``) turns the transformer actor's per-step
+cost from O(context) re-encoding into O(1) incremental decode, and the
+int8-coded cache is a fraction of an fp32 cache's bytes.  Three execution
+modes per context length, all selecting actions for the same env batch:
+
+* ``fp32_windowed``   — full fp32 forward over the (context, feat) frame
+  stack every step (what the learner/eval path runs),
+* ``int8_windowed``   — the packed windowed mirror
+  (``actorq.quantized_seq_apply``), same token set, int8 GEMMs,
+* ``int8_kv_cache``   — the deployment hot path: one frame row in, int8
+  KV-cache write + masked decode via ``ops.int8_cache_attention``.
+
+Plus the footprint row: per-env packed int8 cache bytes (codes + scales)
+vs the equivalent fp32 K/V cache.  Emits ``BENCH_transformer_actor.json``
+via ``benchmarks/common.py``; ``run.py`` schema-gates it.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common as C
+
+CONTEXTS = (4, 8, 16)
+BATCH = 256
+NET = {"d_model": 32, "n_layers": 2, "d_ff": 64}
+
+
+def _build(context: int):
+    from repro.rl import actorq
+    from repro.rl.envs import make
+    from repro.rl.networks import make_network
+
+    env = make("catch_seq", context=context)
+    net = make_network(env.spec.obs_shape, env.spec.n_actions,
+                       transformer=dict(NET))
+    params = net.init(jax.random.PRNGKey(0))
+    qparams = actorq.pack_actor_params(params, 8)
+    return env, net, params, qparams
+
+
+def run(batch: int = BATCH, contexts=CONTEXTS) -> List[Dict]:
+    from repro.core.qconfig import QuantConfig
+    from repro.rl import actorq
+    from repro.rl import common as rl_common
+
+    batch = C.scaled(batch, lo=8)
+    rows: List[Dict] = []
+    for context in contexts:
+        env, net, params, qparams = _build(context)
+        cfg = net.seq_cfg
+        obs = jax.random.normal(jax.random.PRNGKey(1),
+                                (batch,) + env.spec.obs_shape)
+        obs = obs.at[..., -1].set(1.0)
+        feat = obs[:, -1, :]
+        pstate = actorq.seq_cache_zeros(cfg, batch,
+                                        env.spec.max_steps + 1)
+
+        @jax.jit
+        def fp32_act(obs):
+            ctx = rl_common.make_ctx(QuantConfig.none(), {},
+                                     jnp.zeros((), jnp.int32))
+            return jnp.argmax(net.apply(ctx, params, obs), axis=-1)
+
+        @jax.jit
+        def int8_windowed_act(obs):
+            return jnp.argmax(
+                actorq.quantized_seq_apply(qparams, obs), axis=-1)
+
+        @jax.jit
+        def int8_cached_act(feat, pstate):
+            q, pstate = actorq.quantized_seq_step(
+                qparams, feat, pstate, context=cfg.context)
+            return jnp.argmax(q, axis=-1), pstate
+
+        for mode, fn, args in (
+                ("fp32_windowed", fp32_act, (obs,)),
+                ("int8_windowed", int8_windowed_act, (obs,)),
+                ("int8_kv_cache", int8_cached_act, (feat, pstate))):
+            secs = C.time_fn(fn, *args, warmup=2, iters=10)
+            rate = batch / secs
+            rows.append({"section": "transformer_actor",
+                         "context": context, "mode": mode,
+                         "batch": batch,
+                         "us_per_call": secs * 1e6,
+                         "env_steps_per_sec": rate})
+            C.emit(f"transformer_actor/ctx{context}/{mode}", secs * 1e6,
+                   f"{rate:.0f} env-steps/s")
+
+    # footprint: per-env packed int8 cache vs an fp32 K/V cache of the
+    # same layout (codes at 4 bytes, no scales)
+    env, net, _, _ = _build(contexts[-1])
+    cfg = net.seq_cfg
+    size = env.spec.max_steps + 1
+    from repro.rl import actorq as aq
+    ps1 = aq.seq_cache_zeros(cfg, 1, size)
+    int8_nbytes = aq.seq_cache_nbytes(ps1)
+    fp32_nbytes = cfg.n_layers * 2 * size * cfg.d_model * 4 + 4
+    frac = int8_nbytes / fp32_nbytes
+    rows.append({"section": "transformer_actor_footprint",
+                 "cache_slots": size,
+                 "int8_cache_nbytes": int8_nbytes,
+                 "fp32_cache_nbytes": fp32_nbytes,
+                 "int8_frac": frac})
+    C.emit("transformer_actor/footprint", 0.0,
+           f"int8 {int8_nbytes}B vs fp32 {fp32_nbytes}B "
+           f"({frac:.3f}x) per env")
+
+    path = C.save_rows("BENCH_transformer_actor", rows)
+    print(f"rows -> {path}")
+    return rows

@@ -205,6 +205,34 @@ def unpack_int4(packed: jnp.ndarray, k: int) -> jnp.ndarray:
     return out[:k]
 
 
+def quantize_symmetric(x: jnp.ndarray, axis: int = -1
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-slice int8 quantization (the KV-cache token quantizer).
+
+    Reduces ``|x|`` over ``axis`` (keepdims) and maps the slice onto
+    [-127, 127] with ``scale = amax / 127`` (an all-zero slice gets scale 1
+    so its codes are exactly zero).  Returns ``(codes int8, scale f32)``
+    with ``scale`` broadcastable against ``x``; dequantization is
+    ``codes * scale``.
+
+    This is the *symmetric* (zero-point-free) companion to the affine
+    scheme above — attention caches quantize per token where a zero-point
+    correction would put an extra (T,)-shaped term inside the attention
+    kernel for no range benefit (K/V activations are roughly centered).
+    It is the single source of truth for KV-cache codes:
+    ``models.attention.cache_update`` and the ActorQ sequence actors
+    (``rl.actorq``) both call it, and the regression test
+    ``tests/test_seq_policy.py::test_symmetric_quantizer_matches_legacy``
+    pins it bitwise to the formula ``models/attention.py`` used before the
+    merge (amax/127 scale, round, clip to [-127, 127]).
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.where(amax == 0, 1.0, amax / 127.0)
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                     ).astype(jnp.int8)
+    return codes, scale
+
+
 def fp16_quantize(w: jnp.ndarray) -> jnp.ndarray:
     """IEEE-754 fp16 round-trip (paper's Q_fp16)."""
     return w.astype(jnp.float16).astype(w.dtype)

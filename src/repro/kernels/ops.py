@@ -181,3 +181,50 @@ def flash_attention(q, k, v, *, causal: bool = True,
     for _ in range(q.ndim - 2):
         flat_fn = jax.vmap(flat_fn)
     return flat_fn(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache decode attention
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("window", "backend"))
+def int8_cache_attention(q, k_codes, k_scale, v_codes, v_scale, pos, *,
+                         window: Optional[int] = None,
+                         backend: str = "auto"):
+    """Single-token decode attention over an int8-coded KV cache.
+
+    The decode-side counterpart of :func:`flash_attention`: one new query
+    attends over a cache of per-token symmetrically quantized keys/values
+    (codes + scales from ``core.affine.quantize_symmetric``), dequantizing
+    on the fly.  Innermost shapes: ``q (G, Dh)`` — G query heads sharing
+    one KV head — against ``k_codes/v_codes (T, Dh)`` int8 and
+    ``k_scale/v_scale (T, 1)`` f32.  Slots with index ``> pos`` (and, with
+    ``window``, ``<= pos - window``) are masked out, so a zero-initialized
+    cache can be attended before it is full.
+
+    Leading dims are vmapped over; ``pos`` broadcasts — its shape must be
+    a leading prefix of ``q``'s batch dims (scalar pos = one shared
+    position, per-batch pos = ragged decode).  ``ref``/``xla`` run the
+    dense oracle ``ref.int8_cache_decode_ref`` (aliased — bitwise-equal by
+    construction); ``pallas``/``interpret`` the online-softmax kernel,
+    which matches the oracle to fp tolerance (fp path: see
+    docs/contracts.md "Attention parity").
+    """
+    from repro.kernels.int8_cache_attention import int8_cache_decode_attention
+    b = _resolve(backend)
+    if b in ("ref", "xla"):
+        fn = functools.partial(ref.int8_cache_decode_ref, window=window)
+    else:
+        def fn(q_, kc, ks, vc, vs, p, _w=window, _i=(b == "interpret")):
+            return int8_cache_decode_attention(q_, kc, ks, vc, vs, p,
+                                               window=_w, interpret=_i)
+    pos = jnp.asarray(pos, jnp.int32)
+    n_lead = q.ndim - 2
+    if pos.ndim > n_lead:
+        raise ValueError(f"pos rank {pos.ndim} exceeds batch rank {n_lead}")
+    flat_fn = fn
+    # wrap innermost-first: pos maps only over its own (leading) dims
+    for i in reversed(range(n_lead)):
+        ax = 0 if i < pos.ndim else None
+        flat_fn = jax.vmap(flat_fn, in_axes=(0, 0, 0, 0, 0, ax))
+    return flat_fn(q, k_codes, k_scale, v_codes, v_scale, pos)

@@ -22,6 +22,8 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import affine
+from repro.kernels import ops
 from repro.models import common
 from repro.models.common import dense_spec
 
@@ -34,6 +36,7 @@ NEG_INF = -1e30
 
 def attention_spec(d_model: int, n_heads: int, n_kv: int, head_dim: int,
                    *, cross: bool = False) -> Dict[str, Any]:
+    """Parameter spec for one GQA attention layer's q/k/v/o projections."""
     spec = {
         "q": dense_spec(d_model, n_heads * head_dim, "embed", "heads"),
         "k": dense_spec(d_model, n_kv * head_dim, "embed", "kv"),
@@ -204,11 +207,13 @@ class KVCache(NamedTuple):
 
     @property
     def size(self) -> int:
+        """Number of cache slots (the ring length T)."""
         return self.k.shape[1]
 
 
 def init_cache(batch: int, size: int, n_kv: int, head_dim: int,
                *, int8: bool, dtype=jnp.bfloat16) -> KVCache:
+    """All-zero cache of ``size`` slots (int8 codes + scales, or fp)."""
     if int8:
         k = jnp.zeros((batch, size, n_kv, head_dim), jnp.int8)
         v = jnp.zeros((batch, size, n_kv, head_dim), jnp.int8)
@@ -222,23 +227,20 @@ def init_cache(batch: int, size: int, n_kv: int, head_dim: int,
                    positions=jnp.full((size,), -1, jnp.int32))
 
 
-def _quantize_token(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Symmetric int8 per (batch, head) quantization of one token's k/v."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
-    scale = jnp.where(amax == 0, 1.0, amax / 127.0)
-    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
-                     ).astype(jnp.int8)
-    return codes, scale
-
-
 def cache_update(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
                  pos: jnp.ndarray) -> KVCache:
-    """Write one token (B, 1, KV, Dh) at absolute position ``pos``."""
+    """Write one token (B, 1, KV, Dh) at absolute position ``pos``.
+
+    int8 caches quantize the token with the shared symmetric per-token
+    quantizer ``core.affine.quantize_symmetric`` (bitwise the formula this
+    module used to own privately — pinned by
+    ``tests/test_seq_policy.py::test_symmetric_quantizer_matches_legacy``).
+    """
     pos = jnp.asarray(pos, jnp.int32)
     slot = pos % cache.size
     if cache.k_scale is not None:
-        k_codes, k_scale = _quantize_token(k_new)
-        v_codes, v_scale = _quantize_token(v_new)
+        k_codes, k_scale = affine.quantize_symmetric(k_new)
+        v_codes, v_scale = affine.quantize_symmetric(v_new)
         k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_codes, slot, 1)
         v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_codes, slot, 1)
         ks = jax.lax.dynamic_update_slice_in_dim(cache.k_scale, k_scale, slot, 1)
@@ -311,10 +313,27 @@ def attention_layer(ctx, params, x: jnp.ndarray, *, n_heads: int, n_kv: int,
     if cache is not None:
         assert s == 1, "decode step handles one token"
         new_cache = cache_update(cache, k, v, pos)
-        k_all, v_all = cache_kv(new_cache, x.dtype)
-        out = dense_attention(
-            q, k_all, v_all, causal=True, window=window, softcap=softcap,
-            q_offset=pos, kv_positions=new_cache.positions)
+        if new_cache.k_scale is not None and softcap is None:
+            # int8 cache: decode straight off the codes through the
+            # dispatched op — no dequantized K/V materialization. Ring
+            # caches (size == window) hold only in-window tokens, so the
+            # op's slot-index masking needs no extra window term; plain
+            # caches (slot i == position i) pass window through.
+            win = None if (window is not None and cache.size == window
+                           ) else window
+            qh = q.reshape(b, n_kv, g, head_dim)
+            kc = jnp.transpose(new_cache.k, (0, 2, 1, 3))      # (B,KV,T,Dh)
+            vc = jnp.transpose(new_cache.v, (0, 2, 1, 3))
+            ks = jnp.transpose(new_cache.k_scale, (0, 2, 1, 3))  # (B,KV,T,1)
+            vs = jnp.transpose(new_cache.v_scale, (0, 2, 1, 3))
+            out = ops.int8_cache_attention(qh, kc, ks, vc, vs, pos,
+                                           window=win)
+            out = out.reshape(b, 1, n_kv, g, head_dim)
+        else:
+            k_all, v_all = cache_kv(new_cache, x.dtype)
+            out = dense_attention(
+                q, k_all, v_all, causal=True, window=window, softcap=softcap,
+                q_offset=pos, kv_positions=new_cache.positions)
     elif kv_source is not None:
         out = dense_attention(q, k, v, causal=False, softcap=softcap)
     else:

@@ -1,0 +1,159 @@
+"""Small decoder-transformer policy for partially-observed RL.
+
+The merged-model layer (ROADMAP item 5): a pre-norm decoder transformer
+sized for RL actors (a few thousand params, single-head attention) whose
+parameters pack through the same ``core.ptq.PackedTensor`` machinery as
+the MLP/CNN actors and whose decode path runs on the int8 KV cache
+through ``kernels.ops.int8_cache_attention`` (see ``rl.actorq``).
+
+Observation contract (produced by ``rl.envs.wrappers.make_framestack``):
+``obs`` is ``(..., context, feat)`` — a causal window of per-step feature
+rows, oldest first, newest last.  Each row is ``[inner_obs..., t /
+max_steps, valid]``; the trailing ``valid`` flag masks rows that predate
+the episode (the frame stack is zero-initialized at reset), and the
+normalized time feature is the only positional signal — rows are
+*shifted* between successive observations, so row-index positional
+encodings would be inconsistent; an in-row time feature is shift-stable.
+That shift-stability is exactly what makes the windowed form below and
+the incremental KV-cache form (``rl.actorq.quantized_seq_step``) agree:
+both attend over the same token set with the same per-token features.
+
+Two equivalent evaluation forms:
+
+* ``seq_apply(ctx, params, obs)`` — windowed: full self-attention over
+  the ``context`` rows, head on the newest row.  Used by the fp32
+  learner (TD targets, gradients), fp32 behaviour policies, eval, and
+  the stateless ``rl.actorq.quantized_seq_apply`` int8 mirror.
+* per-step decode with a carried KV cache — one token in, cache write,
+  masked attention over previous slots.  Lives in ``rl.actorq``
+  (``quantized_seq_step``) since it is the deployment hot path.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import P
+
+NEG_INF = -1e30
+
+
+class SeqPolicyConfig(NamedTuple):
+    """Static shape/config record carried on ``rl.networks.Network.seq_cfg``.
+
+    ``context``/``feat_dim`` mirror the env's ``obs_shape = (context,
+    feat_dim)``; the rest size the transformer.  ``n_layers`` and
+    ``d_model`` are what ``rl.actorq`` needs to build the per-env KV-cache
+    actor state (``seq_cache_zeros``).
+    """
+    context: int
+    feat_dim: int
+    d_model: int
+    n_layers: int
+    d_ff: int
+    out_dim: int
+
+
+def _dense_spec(d_in: int, d_out: int, scale=None) -> Dict[str, P]:
+    return {"w": P((d_in, d_out), (None, None), scale=scale),
+            "b": P((d_out,), (None,), init="zeros")}
+
+
+def _dense(ctx, name, params, x, act=None):
+    w = ctx.weight(f"{name}/w", params["w"])
+    y = x @ w.astype(x.dtype) + params["b"].astype(x.dtype)
+    if act is not None:
+        y = act(y)
+    return ctx.activation(f"{name}/out", y)
+
+
+def seq_spec(cfg: SeqPolicyConfig) -> Dict[str, Any]:
+    """Parameter spec tree for the decoder-transformer policy.
+
+    Top-level keys are the packing/dispatch contract with ``rl.actorq``:
+    ``"embed"`` marks the tree as a sequence policy (``quantized_apply``
+    dispatches on it), ``"blk{i}"`` holds each block's q/k/v/o and
+    fc/proj dense layers plus the (never-packed, 1-D) rms-norm gains, and
+    ``"head"`` is the output projection applied to the newest token.
+    Every 2-D weight packs to int8/int4 codes under
+    ``actorq.pack_actor_params``; biases and norm gains stay fp32.
+    """
+    d, f = cfg.d_model, cfg.d_ff
+    spec: Dict[str, Any] = {"embed": _dense_spec(cfg.feat_dim, d)}
+    for i in range(cfg.n_layers):
+        spec[f"blk{i}"] = {
+            "ln1": common.rms_norm_spec(d),
+            "q": _dense_spec(d, d),
+            "k": _dense_spec(d, d),
+            "v": _dense_spec(d, d),
+            "o": _dense_spec(d, d),
+            "ln2": common.rms_norm_spec(d),
+            "fc": _dense_spec(d, f),
+            "proj": _dense_spec(f, d),
+        }
+    spec["head"] = _dense_spec(d, cfg.out_dim, scale=0.01)
+    return spec
+
+
+def valid_mask(obs: jnp.ndarray) -> jnp.ndarray:
+    """(..., S) row-validity mask from the trailing per-row valid flag."""
+    return obs[..., -1] > 0.5
+
+
+def seq_apply(ctx, params, obs: jnp.ndarray, cfg: SeqPolicyConfig
+              ) -> jnp.ndarray:
+    """Windowed fp32 forward: obs (..., context, feat) -> (..., out_dim).
+
+    Causal single-head self-attention over the frame rows with invalid
+    (pre-episode) rows masked out of the key set; the head reads the
+    newest row only.  Arbitrary leading batch dims.
+    """
+    s = obs.shape[-2]
+    x = _dense(ctx, "embed", params["embed"], obs)          # (..., S, D)
+    valid = valid_mask(obs)                                 # (..., S)
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    mask = causal & valid[..., None, :]                     # (..., S, S)
+    scale = cfg.d_model ** -0.5
+    for i in range(cfg.n_layers):
+        blk = params[f"blk{i}"]
+        h = common.rms_norm(blk["ln1"], x)
+        q = _dense(ctx, f"blk{i}/q", blk["q"], h)
+        k = _dense(ctx, f"blk{i}/k", blk["k"], h)
+        v = _dense(ctx, f"blk{i}/v", blk["v"], h)
+        logits = jnp.einsum("...sd,...td->...st",
+                            q.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        logits = jnp.where(mask, logits, NEG_INF)
+        p = jax.nn.softmax(logits, axis=-1)
+        a = jnp.einsum("...st,...td->...sd", p,
+                       v.astype(jnp.float32)).astype(x.dtype)
+        x = x + _dense(ctx, f"blk{i}/o", blk["o"], a)
+        h2 = common.rms_norm(blk["ln2"], x)
+        y = _dense(ctx, f"blk{i}/fc", blk["fc"], h2, act=jax.nn.relu)
+        x = x + _dense(ctx, f"blk{i}/proj", blk["proj"], y)
+    return _dense(ctx, "head", params["head"], x[..., -1, :])
+
+
+def make_seq_policy(obs_shape: Tuple[int, int], out_dim: int, *,
+                    d_model: int = 32, n_layers: int = 2, d_ff: int = 64
+                    ) -> Tuple[Dict[str, Any], Any, SeqPolicyConfig]:
+    """(spec, apply_fn, cfg) for a frame-stacked env's ``(S, F)`` obs.
+
+    ``rl.networks.make_network(..., transformer={...})`` wraps this into
+    a ``Network``; the returned ``cfg`` rides on ``Network.seq_cfg`` so
+    the RL layer can build matching KV-cache actor state.
+    """
+    if len(obs_shape) != 2:
+        raise ValueError("sequence policies need obs_shape (context, "
+                         f"feat), got {obs_shape}")
+    cfg = SeqPolicyConfig(context=int(obs_shape[0]),
+                          feat_dim=int(obs_shape[1]), d_model=d_model,
+                          n_layers=n_layers, d_ff=d_ff, out_dim=out_dim)
+
+    def apply_fn(ctx, params, obs):
+        return seq_apply(ctx, params, obs, cfg)
+
+    return seq_spec(cfg), apply_fn, cfg

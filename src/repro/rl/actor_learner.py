@@ -454,8 +454,15 @@ def make_actor_learner(algo: str, env: Env, net, cfg,
     local_actors = n // n_dev
     envs_per_actor = cfg.n_envs
     per_actor_batch = cfg.batch_size // n
-    benv_local = batched_env(env, local_actors * envs_per_actor)
-    benv_global = batched_env(env, n * envs_per_actor)
+    # sequence nets with a quantized backend carry per-env KV-cache actor
+    # state inside the env state (local and global wraps must agree so the
+    # shard_map P(axis) specs see the same batch-leading tree structure)
+    benv_local = actorq.maybe_attach_seq_state(
+        batched_env(env, local_actors * envs_per_actor), net,
+        cfg.actor_backend, local_actors * envs_per_actor)
+    benv_global = actorq.maybe_attach_seq_state(
+        batched_env(env, n * envs_per_actor), net, cfg.actor_backend,
+        n * envs_per_actor)
     obs_shape = tuple(env.spec.obs_shape)
     int8 = actorq.is_quantized(cfg.actor_backend)
 
@@ -611,8 +618,12 @@ def make_async_actor_learner(algo: str, env: Env, net, cfg,
     local_actors = n // n_dev
     envs_per_actor = cfg.n_envs
     per_actor_batch = cfg.batch_size // n
-    benv_local = batched_env(env, local_actors * envs_per_actor)
-    benv_global = batched_env(env, n * envs_per_actor)
+    benv_local = actorq.maybe_attach_seq_state(
+        batched_env(env, local_actors * envs_per_actor), net,
+        cfg.actor_backend, local_actors * envs_per_actor)
+    benv_global = actorq.maybe_attach_seq_state(
+        batched_env(env, n * envs_per_actor), net, cfg.actor_backend,
+        n * envs_per_actor)
     obs_shape = tuple(env.spec.obs_shape)
     int8 = actorq.is_quantized(cfg.actor_backend)
 

@@ -327,16 +327,163 @@ def quantized_apply(qparams: QuantizedParams, x: jnp.ndarray, *,
     """Head outputs of the packed actor (dispatches on the packed spec).
 
     The packed pytree carries the network structure (``rl.networks`` layer
-    naming): ``conv*`` keys select the CNN backbone, otherwise the MLP
-    (single-pass fused when the cache is calibrated — see
-    ``quantized_mlp_apply``).
+    naming): ``conv*`` keys select the CNN backbone, an ``embed`` key the
+    decoder-transformer sequence policy (windowed form —
+    ``quantized_seq_apply``), otherwise the MLP (single-pass fused when
+    the cache is calibrated — see ``quantized_mlp_apply``).
     """
     names = set(qparams)
+    if "embed" in names:
+        return quantized_seq_apply(qparams, x, backend=backend)
     n_convs = sum(1 for n in names if n.startswith("conv"))
     if n_convs:
         return quantized_cnn_apply(qparams, x, n_convs, backend=backend)
     n_hidden = sum(1 for n in names if n.startswith("fc"))
     return quantized_mlp_apply(qparams, x, n_hidden, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# Quantized sequence policy (mirror models.seq_policy.seq_apply)
+# ---------------------------------------------------------------------------
+
+def _n_blocks(qparams: QuantizedParams) -> int:
+    return sum(1 for n in qparams if n.startswith("blk"))
+
+
+def quantized_seq_apply(qparams: QuantizedParams, obs: jnp.ndarray, *,
+                        backend: str = "auto") -> jnp.ndarray:
+    """Windowed int8 forward of the packed decoder transformer.
+
+    The stateless mirror of ``models.seq_policy.seq_apply``: every dense
+    projection runs through the W{n}A8 GEMM (dynamic per-tensor activation
+    quantization), while rms-norms, softmax-attention and residual adds
+    stay fp32 on the activations.  ``obs`` is ``(..., context, feat)``
+    frame-stacked rows with the trailing valid flag; output is the head on
+    the newest row.  Used by eval / divergence / fp-comparison paths; the
+    rollout hot path steps incrementally via ``quantized_seq_step``.
+    """
+    from repro.models import common as mcommon
+    from repro.models.seq_policy import NEG_INF, valid_mask
+
+    s = obs.shape[-2]
+    x = int8_dense(qparams["embed"], obs, backend=backend)
+    valid = valid_mask(obs)
+    mask = jnp.tril(jnp.ones((s, s), bool)) & valid[..., None, :]
+    scale = x.shape[-1] ** -0.5
+    for i in range(_n_blocks(qparams)):
+        blk = qparams[f"blk{i}"]
+        h = mcommon.rms_norm(blk["ln1"], x)
+        q = int8_dense(blk["q"], h, backend=backend)
+        k = int8_dense(blk["k"], h, backend=backend)
+        v = int8_dense(blk["v"], h, backend=backend)
+        logits = jnp.einsum("...sd,...td->...st", q, k) * scale
+        logits = jnp.where(mask, logits, NEG_INF)
+        p = jax.nn.softmax(logits, axis=-1)
+        a = jnp.einsum("...st,...td->...sd", p, v)
+        x = x + int8_dense(blk["o"], a, backend=backend)
+        h2 = mcommon.rms_norm(blk["ln2"], x)
+        y = int8_dense(blk["fc"], h2, backend=backend, act=jax.nn.relu)
+        x = x + int8_dense(blk["proj"], y, backend=backend)
+    return int8_dense(qparams["head"], x[..., -1, :], backend=backend)
+
+
+def seq_cache_zeros(seq_cfg, n_envs: int, size: int) -> Dict[str, Any]:
+    """All-zero per-env KV-cache actor state for the sequence policy.
+
+    One plain-layout (slot == step index) int8 cache per block: codes
+    ``(n_envs, size, d_model)`` with per-token scales, plus the per-env
+    write counter.  ``size`` must exceed the longest episode (the drivers
+    use ``env.spec.max_steps + 1``); the all-zero tree is also the
+    per-env reset value ``auto_reset_step`` restores on episode end (see
+    ``rl.env.attach_policy_state``).
+    """
+    def layer():
+        return {
+            "k_codes": jnp.zeros((n_envs, size, seq_cfg.d_model), jnp.int8),
+            "k_scale": jnp.zeros((n_envs, size, 1), jnp.float32),
+            "v_codes": jnp.zeros((n_envs, size, seq_cfg.d_model), jnp.int8),
+            "v_scale": jnp.zeros((n_envs, size, 1), jnp.float32),
+        }
+    return {"count": jnp.zeros((n_envs,), jnp.int32),
+            "layers": tuple(layer() for _ in range(seq_cfg.n_layers))}
+
+
+def seq_cache_nbytes(pstate: Dict[str, Any]) -> int:
+    """Total bytes of a KV-cache actor state (codes + scales + counter)."""
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree_util.tree_leaves(pstate))
+
+
+def quantized_seq_step(qparams: QuantizedParams, feat: jnp.ndarray,
+                       pstate: Dict[str, Any], *, context: int,
+                       backend: str = "auto"):
+    """One decode step of the packed transformer on the int8 KV cache.
+
+    ``feat`` is the newest frame row ``(B, feat)``; ``pstate`` the
+    per-env cache from ``seq_cache_zeros``.  Each block quantizes the new
+    token's K/V with the shared ``core.affine.quantize_symmetric``,
+    writes slot ``count``, and attends over the last ``context`` slots
+    through ``kernels.ops.int8_cache_attention`` — so the token set (and
+    the fp32 attention math over dequantized codes) matches the windowed
+    ``quantized_seq_apply`` on the corresponding frame stack; the two
+    differ only by activation-quantization batching (documented tolerance
+    — docs/contracts.md "Attention parity").  Returns ``(head_out,
+    new_pstate)`` with ``count`` advanced.
+    """
+    from repro.models import common as mcommon
+
+    count = pstate["count"]
+    x = int8_dense(qparams["embed"], feat, backend=backend)      # (B, D)
+
+    def write(buf, val, c):
+        return jax.vmap(
+            lambda b, v, i: jax.lax.dynamic_update_slice(b, v[None],
+                                                         (i, 0))
+        )(buf, val, c)
+
+    new_layers = []
+    for i in range(_n_blocks(qparams)):
+        blk = qparams[f"blk{i}"]
+        cache = pstate["layers"][i]
+        h = mcommon.rms_norm(blk["ln1"], x)
+        q = int8_dense(blk["q"], h, backend=backend)
+        k = int8_dense(blk["k"], h, backend=backend)
+        v = int8_dense(blk["v"], h, backend=backend)
+        kc, ks = affine.quantize_symmetric(k)
+        vc, vs = affine.quantize_symmetric(v)
+        cache = {"k_codes": write(cache["k_codes"], kc, count),
+                 "k_scale": write(cache["k_scale"], ks, count),
+                 "v_codes": write(cache["v_codes"], vc, count),
+                 "v_scale": write(cache["v_scale"], vs, count)}
+        out = ops.int8_cache_attention(
+            q[:, None, :], cache["k_codes"], cache["k_scale"],
+            cache["v_codes"], cache["v_scale"], count, window=context,
+            backend=backend)
+        x = x + int8_dense(blk["o"], out[:, 0, :], backend=backend)
+        h2 = mcommon.rms_norm(blk["ln2"], x)
+        y = int8_dense(blk["fc"], h2, backend=backend, act=jax.nn.relu)
+        x = x + int8_dense(blk["proj"], y, backend=backend)
+        new_layers.append(cache)
+    head = int8_dense(qparams["head"], x, backend=backend)
+    return head, {"count": count + 1, "layers": tuple(new_layers)}
+
+
+def maybe_attach_seq_state(benv, net, actor_backend: str, n_envs: int):
+    """Wrap a batched env with KV-cache actor state when it applies.
+
+    No-op unless ``net`` carries a ``seq_cfg`` AND the actor backend is
+    quantized — exactly the condition under which the rollout policy is
+    the stateful cached stepper (``quantized_seq_step``); fp32 sequence
+    actors stay stateless-windowed.  The wrapped state rides through
+    rollout scans, shard_map partitioning (batch-leading leaves) and the
+    checkpoint/resume contract as ordinary env state.
+    """
+    seq_cfg = getattr(net, "seq_cfg", None)
+    if seq_cfg is None or not is_quantized(actor_backend):
+        return benv
+    from repro.rl.env import attach_policy_state
+    pstate0 = seq_cache_zeros(seq_cfg, n_envs, benv.spec.max_steps + 1)
+    return attach_policy_state(benv, pstate0)
 
 
 def calibrate_actor_cache(qparams: QuantizedParams, obs: jnp.ndarray, *,
@@ -359,7 +506,9 @@ def calibrate_actor_cache(qparams: QuantizedParams, obs: jnp.ndarray, *,
     is MLP-only; conv actors keep the per-layer path).
     """
     names = set(qparams)
-    if any(n.startswith("conv") for n in names):
+    if "embed" in names or any(n.startswith("conv") for n in names):
+        # the fused kernel is MLP-only: transformer and conv caches keep
+        # the per-layer dynamic-quantization path, calibration is a no-op
         return qparams
     n_hidden = sum(1 for n in names if n.startswith("fc"))
     act = []

@@ -17,7 +17,7 @@ from repro.optim.adam import AdamConfig, adam_init, adam_update
 from repro.rl import actorq
 from repro.rl import buffer as rb
 from repro.rl import common
-from repro.rl.env import Env, batched_env, rollout
+from repro.rl.env import Env, StatefulPolicy, batched_env, rollout
 from repro.rl.networks import Network
 
 
@@ -100,7 +100,15 @@ def make_behaviour_policy(env: Env, net: Network, cfg: DQNConfig):
     the ActorQ hot path — unless the caller hands in an already-packed
     ``qparams`` cache (the actor–learner topologies carry the cache across
     iterations and repack only at sync points).
+
+    Quantized *sequence* actors (``net.seq_cfg`` set) get an
+    ``env.StatefulPolicy`` instead of a plain policy: behaviour Q-values
+    come from the incremental int8 KV-cache decode
+    (``actorq.quantized_seq_step``) over the per-env cache state that
+    ``actorq.maybe_attach_seq_state`` rides inside the batched env state.
     """
+    seq_cfg = getattr(net, "seq_cfg", None)
+
     def build(params, observers, step, updates, qparams=None):
         eps = common.linear_epsilon(updates, cfg.eps_start,
                                     cfg.eps_end, cfg.eps_decay_updates)
@@ -118,14 +126,28 @@ def make_behaviour_policy(env: Env, net: Network, cfg: DQNConfig):
             def behaviour_q(obs):
                 return _q_values(net, cfg, params, obs, observers, step)[0]
 
-        def policy(_params, obs, key):
+        def select(q, key):
             k_rand, k_explore = jax.random.split(key)
-            q = behaviour_q(obs)
             greedy = jnp.argmax(q, axis=-1)
             rand = jax.random.randint(k_rand, greedy.shape, 0,
                                       env.spec.n_actions)
             explore = jax.random.uniform(k_explore, greedy.shape) < eps
-            return jnp.where(explore, rand, greedy).astype(jnp.int32), q
+            return jnp.where(explore, rand, greedy).astype(jnp.int32)
+
+        if seq_cfg is not None and actorq.is_quantized(cfg.actor_backend):
+            # quantized sequence actor: incremental int8 KV-cache decode
+            # over the per-env cache state riding in the env state (see
+            # actorq.maybe_attach_seq_state / env.StatefulPolicy)
+            def apply(_params, obs, pstate, key):
+                q, pstate = actorq.quantized_seq_step(
+                    qparams, obs[..., -1, :], pstate,
+                    context=seq_cfg.context, backend=cfg.kernel_backend)
+                return select(q, key), pstate, q
+            return StatefulPolicy(apply)
+
+        def policy(_params, obs, key):
+            q = behaviour_q(obs)
+            return select(q, key), q
         return policy
     return build
 
@@ -198,7 +220,8 @@ def make_td_update(env: Env, net: Network, cfg: DQNConfig):
 def make_iteration(env: Env, net: Network, cfg: DQNConfig):
     actorq.validate_actor_backend(cfg.actor_backend)
     use_per = rb.use_prioritized(cfg.replay, cfg.priority_exponent)
-    benv = batched_env(env, cfg.n_envs)
+    benv = actorq.maybe_attach_seq_state(
+        batched_env(env, cfg.n_envs), net, cfg.actor_backend, cfg.n_envs)
     build_policy = make_behaviour_policy(env, net, cfg)
     td_update = make_td_update(env, net, cfg)
 

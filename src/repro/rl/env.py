@@ -54,6 +54,45 @@ class StepOut(NamedTuple):
     logits_or_value: Any = None
 
 
+class StatefulPolicy(NamedTuple):
+    """A rollout policy that carries per-env recurrent state.
+
+    ``apply(params, obs, pstate, key) -> (action, new_pstate, aux)`` —
+    the stateful analogue of the plain ``policy_fn(params, obs, key)``.
+    Pair with :func:`attach_policy_state`, which rides ``pstate`` inside
+    the env state so every existing driver (rollout scan, shard_map
+    topologies, checkpoint/resume) carries, shards, and restores it as
+    ordinary env state; ``auto_reset_step`` then resets it per-env to the
+    attach-time initial value on episode end, for free.  The int8
+    KV-cache transformer actors of ``rl.actorq`` are the consumer.
+    """
+    apply: Callable[[Any, Obs, Any, jax.Array],
+                    Tuple[jnp.ndarray, Any, Any]]
+
+
+def attach_policy_state(benv: Env, pstate0: Any) -> Env:
+    """Wrap a (batched) env so its state is ``(inner_state, pstate)``.
+
+    ``reset`` returns ``pstate0`` (the batched all-reset policy state)
+    alongside the inner reset; ``step`` threads ``pstate`` through
+    untouched — only :func:`rollout`'s ``StatefulPolicy`` branch writes
+    it.  Because ``auto_reset_step`` masks the whole state tree against a
+    fresh ``reset`` on done, the policy state of a finished env resets to
+    ``pstate0`` with no extra plumbing; likewise checkpointing the env
+    state checkpoints the policy state verbatim.
+    """
+    def reset(key):
+        state, obs = benv.reset(key)
+        return (state, pstate0), obs
+
+    def step(state, action, key):
+        inner, ps = state
+        inner, obs, reward, done = benv.step(inner, action, key)
+        return (inner, ps), obs, reward, done
+
+    return Env(spec=benv.spec, reset=reset, step=step)
+
+
 def auto_reset_step(env: Env):
     """step that resets the env when done (state carries the episode)."""
     def step(state, action, key):
@@ -91,13 +130,23 @@ def rollout(env: Env, policy_fn, params, state, obs, key, n_steps: int,
     policy_fn(params, obs, key) -> (action, aux) — aux is carried into the
     trajectory (logits for exploration analysis, values for A2C/PPO...).
     Returns (final_state, final_obs, StepOut trajectory [n_steps, ...]).
+
+    A ``StatefulPolicy`` ``policy_fn`` requires ``env`` to be wrapped
+    with :func:`attach_policy_state`: the policy reads and writes the
+    ``pstate`` half of the env state each step (the KV-cache actors).
     """
     stepper = auto_reset_step(env) if auto_reset else env.step
+    stateful = isinstance(policy_fn, StatefulPolicy)
 
     def one(carry, key):
         state, obs = carry
         k_act, k_env = jax.random.split(key)
-        action, aux = policy_fn(params, obs, k_act)
+        if stateful:
+            inner, ps = state
+            action, ps, aux = policy_fn.apply(params, obs, ps, k_act)
+            state = (inner, ps)
+        else:
+            action, aux = policy_fn(params, obs, k_act)
         state, next_obs, reward, done = stepper(state, action, k_env)
         out = StepOut(obs=obs, action=action, reward=reward, done=done,
                       next_obs=next_obs, logits_or_value=aux)

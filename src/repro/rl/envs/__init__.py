@@ -1,9 +1,19 @@
 """Pure-JAX environments (gym-faithful dynamics; see env.py for the API)."""
 from repro.rl.envs.cartpole import make_cartpole
-from repro.rl.envs.mountaincar import make_mountaincar, make_mountaincar_continuous
+from repro.rl.envs.mountaincar import (
+    make_mountaincar,
+    make_mountaincar_continuous,
+)
 from repro.rl.envs.pendulum import make_pendulum
 from repro.rl.envs.catch import make_catch
 from repro.rl.envs.airnav import make_airnav
+from repro.rl.envs.wrappers import (
+    make_airnav_seq,
+    make_catch_seq,
+    make_flicker_airnav,
+    make_framestack,
+    make_masked_catch,
+)
 
 ENVS = {
     "cartpole": make_cartpole,
@@ -12,8 +22,20 @@ ENVS = {
     "pendulum": make_pendulum,
     "catch": make_catch,
     "airnav": make_airnav,
+    "catch_masked": make_masked_catch,
+    "airnav_flicker": make_flicker_airnav,
+    "catch_seq": make_catch_seq,
+    "airnav_seq": make_airnav_seq,
 }
+
+__all__ = [
+    "ENVS", "make", "make_cartpole", "make_mountaincar",
+    "make_mountaincar_continuous", "make_pendulum", "make_catch",
+    "make_airnav", "make_masked_catch", "make_flicker_airnav",
+    "make_framestack", "make_catch_seq", "make_airnav_seq",
+]
 
 
 def make(name: str, **kwargs):
+    """Build a registered env by name (the ``loops.train`` entry point)."""
     return ENVS[name](**kwargs)

@@ -1,0 +1,161 @@
+"""Partially-observed env wrappers + the frame-stacking sequence adapter.
+
+The sequence-policy workload (ROADMAP item 5) needs environments where a
+memoryless policy is handicapped: these wrappers hide part of the state
+so the actor must integrate over time, and ``make_framestack`` turns any
+such env into a ``(context, feat)``-observation env the decoder
+transformer (``models.seq_policy``) consumes.
+
+All wrappers are pure functional ``Env``s like everything in ``envs/``:
+state is a pytree, reset/step are jittable, and they compose with
+``batched_env`` / ``auto_reset_step`` / the ``steps_per_call`` scan
+fusion unchanged (``tests/test_seq_policy.py`` audits the uniform
+``EnvSpec`` surface across the registry).
+
+* ``make_masked_catch`` — Catch with the ball pixel visible only in the
+  top ``visible_rows`` rows: the policy must remember the ball column
+  from the first frames to position the paddle.
+* ``make_flicker_airnav`` — AirNav with the observation blanked except
+  every ``reveal_every``-th step (flickering sensors).
+* ``make_framestack`` — generic: stacks the last ``context`` flattened
+  observations as rows ``[obs..., t / max_steps, valid]`` (oldest first,
+  newest last; pre-episode rows all-zero so ``valid`` doubles as the
+  attention mask — see ``models.seq_policy``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.env import Env, EnvSpec
+from repro.rl.envs.airnav import make_airnav
+from repro.rl.envs.catch import make_catch
+
+
+def make_masked_catch(grid: int = 5, balls: int = 1,
+                      visible_rows: int = 2) -> Env:
+    """Catch whose ball pixel is hidden once it falls past ``visible_rows``.
+
+    The paddle pixel (0.5) stays visible everywhere; only the ball pixel
+    (1.0) is masked, so the observation is otherwise identical to plain
+    Catch and a memoryless policy sees an empty board for most of the
+    drop.
+    """
+    inner = make_catch(grid=grid, balls=balls)
+    spec = EnvSpec("catch_masked", obs_shape=inner.spec.obs_shape,
+                   n_actions=inner.spec.n_actions,
+                   max_steps=inner.spec.max_steps)
+    rows = jnp.arange(grid)[:, None, None]
+
+    def mask_obs(obs):
+        return jnp.where((rows >= visible_rows) & (obs == 1.0), 0.0, obs)
+
+    def reset(key):
+        state, obs = inner.reset(key)
+        return state, mask_obs(obs)
+
+    def step(state, action, key):
+        state, obs, reward, done = inner.step(state, action, key)
+        return state, mask_obs(obs), reward, done
+
+    return Env(spec=spec, reset=reset, step=step)
+
+
+class FlickerState(NamedTuple):
+    """Wrapper state: the wrapped env's state plus the flicker phase."""
+    inner: object
+    tick: jnp.ndarray
+
+
+def make_flicker_airnav(reveal_every: int = 3, **kwargs) -> Env:
+    """AirNav whose observation is zeroed except every ``reveal_every``-th
+    step (the reset observation is always revealed)."""
+    inner = make_airnav(**kwargs)
+    spec = EnvSpec("airnav_flicker", obs_shape=inner.spec.obs_shape,
+                   n_actions=inner.spec.n_actions,
+                   max_steps=inner.spec.max_steps)
+
+    def reset(key):
+        state, obs = inner.reset(key)
+        return FlickerState(state, jnp.zeros((), jnp.int32)), obs
+
+    def step(state, action, key):
+        s, obs, reward, done = inner.step(state.inner, action, key)
+        tick = state.tick + 1
+        obs = jnp.where(tick % reveal_every == 0, obs,
+                        jnp.zeros_like(obs))
+        return FlickerState(s, tick), obs, reward, done
+
+    return Env(spec=spec, reset=reset, step=step)
+
+
+class FrameStackState(NamedTuple):
+    """Wrapper state: inner env state + the frame rows + the step index."""
+    inner: object
+    frames: jnp.ndarray   # (context, feat) — oldest first
+    t: jnp.ndarray
+
+
+def make_framestack(env: Env, context: int = 8) -> Env:
+    """Stack the last ``context`` observations into a ``(context, feat)``
+    sequence observation.
+
+    Each row is ``[flattened_obs..., t / max_steps, 1.0]`` — the
+    normalized step index is the (shift-stable) positional signal and the
+    trailing ``1.0`` the validity flag; rows older than the episode stay
+    all-zero.  Composes with ``batched_env`` and the rollout scan like
+    any env; on auto-reset the whole stack resets with the inner state.
+    """
+    feat = 1
+    for d in env.spec.obs_shape:
+        feat *= int(d)
+    feat += 2
+    spec = EnvSpec(f"{env.spec.name}_seq", obs_shape=(context, feat),
+                   n_actions=env.spec.n_actions,
+                   action_dim=env.spec.action_dim,
+                   action_scale=env.spec.action_scale,
+                   max_steps=env.spec.max_steps)
+    inv_t = 1.0 / float(env.spec.max_steps)
+
+    def frame_of(obs, t):
+        return jnp.concatenate([
+            obs.reshape(-1).astype(jnp.float32),
+            jnp.stack([t.astype(jnp.float32) * inv_t,
+                       jnp.ones((), jnp.float32)])])
+
+    # The observation IS the frame buffer, but hand out a copy: drivers
+    # donate (env_state, obs) to jit, and donation rejects the same
+    # buffer appearing twice (eager reset would otherwise alias them).
+    def reset(key):
+        state, obs = env.reset(key)
+        t = jnp.zeros((), jnp.int32)
+        frames = jnp.zeros((context, feat), jnp.float32)
+        frames = frames.at[-1].set(frame_of(obs, t))
+        return FrameStackState(state, frames, t), jnp.copy(frames)
+
+    def step(state, action, key):
+        s, obs, reward, done = env.step(state.inner, action, key)
+        t = state.t + 1
+        frames = jnp.concatenate(
+            [state.frames[1:], frame_of(obs, t)[None]], axis=0)
+        return FrameStackState(s, frames, t), jnp.copy(frames), reward, done
+
+    return Env(spec=spec, reset=reset, step=step)
+
+
+def make_catch_seq(grid: int = 5, balls: int = 1, visible_rows: int = 2,
+                   context: int = 6) -> Env:
+    """Frame-stacked masked Catch — the sequence-policy training env."""
+    return make_framestack(
+        make_masked_catch(grid=grid, balls=balls,
+                          visible_rows=visible_rows), context=context)
+
+
+def make_airnav_seq(reveal_every: int = 3, context: int = 8,
+                    max_steps: int = 120) -> Env:
+    """Frame-stacked flickering AirNav (sequence-policy variant)."""
+    return make_framestack(
+        make_flicker_airnav(reveal_every=reveal_every,
+                            max_steps=max_steps), context=context)

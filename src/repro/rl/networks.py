@@ -125,12 +125,19 @@ def cnn_apply(ctx, params, x, n_convs: int):
 # ---------------------------------------------------------------------------
 
 class Network:
-    """(spec, apply) pair; apply(ctx, params, obs) -> head outputs."""
+    """(spec, apply) pair; apply(ctx, params, obs) -> head outputs.
 
-    def __init__(self, spec: Dict[str, Any], apply_fn, out_dim: int):
+    ``seq_cfg`` is ``None`` for MLP/CNN nets; sequence policies carry
+    their ``models.seq_policy.SeqPolicyConfig`` here so the RL layer can
+    size the matching int8 KV-cache actor state (``rl.actorq``).
+    """
+
+    def __init__(self, spec: Dict[str, Any], apply_fn, out_dim: int,
+                 seq_cfg=None):
         self.spec = spec
         self.apply = apply_fn
         self.out_dim = out_dim
+        self.seq_cfg = seq_cfg
 
     def init(self, key, dtype=jnp.float32):
         return init_params(key, self.spec, dtype)
@@ -139,7 +146,17 @@ class Network:
 def make_network(obs_shape: Tuple[int, ...], out_dim: int,
                  hidden: Sequence[int] = (64, 64),
                  conv_filters: Optional[Sequence[int]] = None,
-                 fc_width: int = 128) -> Network:
+                 fc_width: int = 128,
+                 transformer: Optional[Dict[str, Any]] = None) -> Network:
+    """Network for an obs shape: 3-D -> CNN, else MLP; ``transformer``
+    (a dict of ``models.seq_policy.make_seq_policy`` kwargs, possibly
+    empty) selects the decoder-transformer sequence policy for 2-D
+    frame-stacked obs ``(context, feat)``."""
+    if transformer is not None:
+        from repro.models.seq_policy import make_seq_policy
+        spec, apply_fn, seq_cfg = make_seq_policy(
+            tuple(obs_shape), out_dim, **transformer)
+        return Network(spec, apply_fn, out_dim, seq_cfg=seq_cfg)
     if len(obs_shape) == 3:  # pixels
         filters = tuple(conv_filters or (16, 16, 16))
         spec = cnn_spec(obs_shape, filters, fc_width, out_dim)

@@ -37,12 +37,13 @@ def _leaves(tree):
 
 
 def _train(algo, env, topo, *, ckpt_dir=None, iterations=6, resume=False,
-           **kw):
+           net_kwargs=None, **kw):
     multi = topo != "fused"
     return loops.train(
         algo, env, iterations=iterations, seed=3, record_every=3,
         eval_episodes=2, actor_backend="int8",
-        algo_overrides=dict(SMALL), net_kwargs=dict(hidden=(16,)),
+        algo_overrides=dict(SMALL),
+        net_kwargs=net_kwargs or dict(hidden=(16,)),
         topology=topo, num_actors=2 if multi else 1,
         sync_every=2 if multi else 1,
         checkpoint_dir=ckpt_dir, checkpoint_every=3 if ckpt_dir else 0,
@@ -80,6 +81,21 @@ def test_resume_bitwise_prioritized_replay(tmp_path):
     _train("dqn", "catch", "actor-learner", ckpt_dir=d, iterations=3, **kw)
     res = _train("dqn", "catch", "actor-learner", ckpt_dir=d, resume=True,
                  **kw)
+    _assert_bitwise(full, res)
+
+
+@pytest.mark.parametrize("topo", ["fused", "async"])
+def test_resume_bitwise_seq_policy(tmp_path, topo):
+    """Sequence policies ride the contract too: the int8 KV-cache actor
+    state (``rl.actorq.seq_cache_zeros`` riding in the env state via
+    ``attach_policy_state``) is checkpointed and restored bitwise with
+    the rest of the training state."""
+    d = str(tmp_path / "ckpt")
+    kw = dict(net_kwargs={"transformer": dict(d_model=16, n_layers=1,
+                                              d_ff=32)})
+    full = _train("dqn", "catch_seq", topo, **kw)
+    _train("dqn", "catch_seq", topo, ckpt_dir=d, iterations=3, **kw)
+    res = _train("dqn", "catch_seq", topo, ckpt_dir=d, resume=True, **kw)
     _assert_bitwise(full, res)
 
 
