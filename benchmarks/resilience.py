@@ -1,0 +1,251 @@
+"""Resilience benchmark: guard overhead, recovery matrix, load shedding.
+
+Three sections, one claim each (the self-healing runtime must be cheap
+when nothing fails, effective when everything does, and bounded under
+overload):
+
+1. ``guard_overhead`` — the host-side guard primitives (finite check,
+   packed-cache CRC, reference re-mint) microbenched on real
+   params/cache and amortized over the ``CHECK_EVERY`` cadence, divided
+   by the *marginal* per-round cost of a realistically sized
+   actor-learner int8 run (iteration differencing cancels the per-call
+   fixed compile/setup cost).  Claim: ``overhead_frac < 0.05``
+   (schema-gated).
+2. ``recovery`` — one supervised run per topology (fused /
+   actor-learner / async) under a topology-appropriate deterministic
+   ``FaultPlan`` covering all six fault kinds between them.  Claim: every
+   injected fault fires and the run still converges to ``status == "ok"``
+   — ``recovered == fired == injected`` per row (schema-gated).
+3. ``serve_shedding`` — a ``PolicyServer`` with a bounded admission queue
+   offered a closed-loop burst at ~2x its measured device capacity.
+   Claim: the server sheds with typed ``QueueFullError`` rejections
+   (``rejected > 0``) while every *accepted* request is still answered
+   (``served == accepted``), instead of queueing without bound.
+
+Emits ``artifacts/bench/BENCH_resilience.json`` — schema-gated by
+``run.py`` (``_check_resilience_schema``).
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import common
+
+CHECK_EVERY = 10       # guard cadence in the overhead run: ~5 ms/check
+                       # amortized against ~25 ms rounds (docs/resilience.md
+                       # says to pick the cadence against the round cost)
+GUARD_ITERS = 40       # lo leg of the marginal-cost differencing (hi = 4x)
+MAX_QUEUE = 16         # admission bound for the shedding run
+
+# (topology, actor_backend, fault plan) — all six kinds across the matrix;
+# dropped_sync only exists as a host-controlled push in the async driver
+# (the sync topologies exchange params inside the jitted round).
+RECOVERY_MATRIX = (
+    ("fused", "fp32", "5:actor_crash@2,nan_grad@4"),
+    ("actor-learner", "int8", "7:bitflip_push@4,nan_grad@6:mode=inf"),
+    ("async", "int8",
+     "9:dropped_sync@2,bitflip_push@4,straggler@5:delay_s=0.02,"
+     "crash_commit@6"),
+)
+
+
+def _train_kwargs(topology: str, backend: str, iterations: int,
+                  ckpt_dir=None):
+    kw = dict(algo="dqn", env_name="cartpole", iterations=iterations,
+              seed=3, record_every=max(iterations // 2, 1),
+              eval_episodes=2)
+    if topology != "fused":
+        kw.update(topology=topology, num_actors=2, sync_every=2,
+                  actor_backend=backend)
+    if ckpt_dir is not None:
+        kw.update(checkpoint_dir=ckpt_dir, checkpoint_every=2)
+    return kw
+
+
+def guard_overhead(iters: int = GUARD_ITERS) -> dict:
+    """Amortized guard cost as a fraction of per-round training cost.
+
+    An end-to-end guarded-vs-unguarded A/B cannot resolve a ~1 ms/round
+    host-side hook here: each ``loops.train`` call carries a multi-second
+    fixed cost (compile + setup) with hundreds of ms of host jitter, so
+    the ratio is assembled from two *separately precise* measurements:
+
+    * numerator — the primitives the guard hooks actually run per check
+      (finite reduction over the learner params, packed-cache CRC, and
+      the deterministic re-mint that produces the reference CRC),
+      microbenched on the run's real params/cache (median of 50 reps of
+      pure host work), amortized over the ``CHECK_EVERY`` cadence;
+    * denominator — the marginal per-round cost of the same training
+      configuration by iteration differencing
+      (``(t(4*iters) - t(iters)) / (3*iters)``, median of 3 interleaved
+      pairs), which cancels the per-call fixed cost exactly.
+
+    The configuration is deliberately not a toy: a (256, 256)-hidden
+    policy with batch-256 8-update learner rounds — the regime the
+    <5% claim is about.  On a 4-unit cartpole net the ~3 ms re-mint
+    rivals the whole round and no check cadence makes guards cheap;
+    ``check_every`` exists precisely to amortize the re-mint against
+    real round costs.
+    """
+    import jax
+
+    from repro.rl import actorq, loops
+    from repro.rl.networks import make_network
+    from repro.resilience import guards
+
+    net_kwargs = dict(hidden=(256, 256))
+    overrides = dict(batch_size=256)       # default 8 updates/iter stays
+
+    def med(fn, n=50):
+        fn()                               # warm
+        ts = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        return sorted(ts)[n // 2]
+
+    net = make_network((4,), 2, **net_kwargs)
+    params = net.init(jax.random.PRNGKey(0))
+    cache = actorq.make_actor_cache(params, "int8")
+    finite_ms = med(lambda: guards.check_finite(params, what="p")) * 1e3
+    crc_ms = med(lambda: guards.tree_crc32(cache)) * 1e3
+    remint_ms = med(lambda: actorq.make_actor_cache(params, "int8")) * 1e3
+    per_check_ms = finite_ms + remint_ms + 2.0 * crc_ms
+
+    def run(n):
+        kw = _train_kwargs("actor-learner", "int8", n)
+        kw.update(net_kwargs=net_kwargs, algo_overrides=dict(overrides),
+                  record_every=n)     # one eval per leg: cancels in diff
+        return loops.train(**kw).wall_time_s
+
+    run(iters), run(4 * iters)             # jit warmup for both legs
+    margs = []
+    for _ in range(3):                     # interleaved: drift cancels
+        lo = run(iters)
+        hi = run(4 * iters)
+        margs.append((hi - lo) / (3 * iters))
+    round_ms = sorted(margs)[1] * 1e3
+    frac = (per_check_ms / CHECK_EVERY) / round_ms
+    row = dict(section="guard_overhead", topology="actor-learner",
+               backend="int8", iterations=iters,
+               check_every=CHECK_EVERY, finite_ms=float(finite_ms),
+               crc_ms=float(crc_ms), remint_ms=float(remint_ms),
+               guard_ms_per_check=float(per_check_ms),
+               round_ms=float(round_ms), overhead_frac=float(frac))
+    common.emit("resilience_guard_overhead", round_ms * 1e3,
+                f"overhead_{frac * 100:.2f}pct")
+    print(f"  guards: {per_check_ms:.2f} ms/check every {CHECK_EVERY} "
+          f"rounds over {round_ms:.2f} ms/round -> "
+          f"{frac * 100:+.2f}% overhead")
+    return row
+
+
+def recovery_matrix(iterations: int = 8) -> list:
+    """Supervised fault-plan runs: every injected fault must recover."""
+    from repro import resilience as rz
+
+    rows = []
+    for topology, backend, spec in RECOVERY_MATRIX:
+        plan = rz.FaultPlan.parse(spec)
+        with tempfile.TemporaryDirectory() as d:
+            kw = _train_kwargs(topology, backend, iterations, ckpt_dir=d)
+            t0 = time.perf_counter()
+            try:
+                _, rep = rz.supervise(kw, plan=plan)
+                status = rep.status
+            except rz.SupervisorAbort as e:   # recorded, fails the gate
+                rep, status = e.report, "abort"
+            dt = time.perf_counter() - t0
+        fired = len(rep.faults_fired)
+        na = len(rep.faults_not_applicable)
+        recovered = fired if status == "ok" else 0
+        rows.append(dict(
+            section="recovery", topology=topology, backend=backend,
+            plan=spec, status=status, injected=len(plan.faults),
+            fired=fired, not_applicable=na, recovered=recovered,
+            retries=rep.retries, rollbacks=rep.rollbacks,
+            attempts=rep.attempts, wall_s=float(dt)))
+        common.emit(f"resilience_recovery_{topology}", dt * 1e6,
+                    f"{recovered}of{len(plan.faults)}_recovered_"
+                    f"{rep.retries}retries")
+        print(f"  {topology}: {rep.summary().splitlines()[0]} "
+              f"({fired} fault(s) fired)")
+    return rows
+
+
+def serve_shedding(requests: int = 1024) -> dict:
+    """Bounded-queue overload: typed shedding at ~2x device capacity."""
+    import jax
+
+    from repro.rl.env import EnvSpec
+    from repro.rl.networks import make_network
+    from repro.serving import PolicyServer, QueueFullError
+    from repro.serving.batcher import Request
+
+    spec = EnvSpec(name="bench-resilience", obs_shape=(4,), n_actions=2)
+    params = make_network(spec.obs_shape, 2, hidden=(64, 64)).init(
+        jax.random.PRNGKey(0))
+    srv = PolicyServer(spec, actor_backend="int8", buckets=(8, 32),
+                       max_wait_us=500, max_queue=MAX_QUEUE)
+    srv.push_params(params)
+    srv.warmup()
+    rng = np.random.default_rng(0)
+    obs = rng.standard_normal((32, 4)).astype(np.float32)
+
+    # device-capacity probe (no queue involved), then offer 2x that rate
+    sids = [srv.open_session() for _ in range(32)]
+    t0 = time.perf_counter()
+    for _ in range(10):
+        srv.serve_batch([Request(s, obs[i]) for i, s in enumerate(sids)])
+    cap = 10 * 32 / (time.perf_counter() - t0)
+    offered_rps = 2.0 * cap
+
+    accepted, rejected = [], 0
+    schedule = np.arange(requests) / offered_rps
+    with srv:
+        t0 = time.perf_counter()
+        for i in range(requests):
+            wait = schedule[i] - (time.perf_counter() - t0)
+            if wait > 0:
+                time.sleep(wait)
+            try:
+                accepted.append(srv.submit(sids[i % 32], obs[i % 32]))
+            except QueueFullError:
+                rejected += 1
+        served = sum(1 for r in accepted if r.result(timeout=120))
+    for s in sids:
+        srv.close_session(s)
+    stats = srv.stats()
+    assert stats["rejected"] == rejected, (stats["rejected"], rejected)
+    row = dict(section="serve_shedding", backend="int8",
+               max_queue=MAX_QUEUE, requests=requests,
+               capacity_rps=float(cap), offered_rps=float(offered_rps),
+               accepted=len(accepted), rejected=rejected, served=served,
+               worker_crashes=stats["worker"]["crashes"])
+    common.emit("resilience_serve_shedding", 1e6 / max(offered_rps, 1),
+                f"{rejected}rejected_of_{requests}")
+    print(f"  shedding: {cap:.0f} rps capacity, offered "
+          f"{offered_rps:.0f} rps -> {served} served, "
+          f"{rejected} shed (queue bound {MAX_QUEUE})")
+    return row
+
+
+def run(iterations: int = 8, guard_iters: int = GUARD_ITERS,
+        requests: int = 1024) -> list:
+    """All three sections; emit + save BENCH_resilience.json."""
+    iterations = common.scaled(iterations, lo=6)
+    guard_iters = common.scaled(guard_iters, lo=16)
+    requests = common.scaled(requests, lo=256)
+    rows = [guard_overhead(guard_iters)]
+    rows.extend(recovery_matrix(iterations))
+    rows.append(serve_shedding(requests))
+    common.save_rows("BENCH_resilience", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

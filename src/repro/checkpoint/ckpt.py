@@ -24,10 +24,12 @@ the manifest-based directory-per-step format and the async writer on top.
 """
 from __future__ import annotations
 
+import json
 import os
 import re
 import shutil
 import tempfile
+import zlib
 from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
@@ -36,6 +38,9 @@ import msgpack
 import numpy as np
 
 PyTree = Any
+
+# manifest format tag shared with the manager layer (which imports it)
+FORMAT = "repro-ckpt-v1"
 
 # staging-name patterns owned by this subsystem; sweep_orphans removes
 # matching debris, tolerant parsers skip it
@@ -171,13 +176,47 @@ def load_checkpoint(path: str, template: PyTree, step: Optional[int] = None
     return _redevice([_decode_leaf(d) for d in raw], template)
 
 
+def step_dir_valid(path: str) -> bool:
+    """Is a manager-format step directory loadable?
+
+    Checks (without decoding the payload): the manifest parses as JSON
+    and carries the right format tag; ``leaves.msgpack`` exists; and —
+    when the manifest records a ``crc32`` — the whole-file checksum of
+    the data payload matches.  A torn or corrupted step reports invalid
+    (False) instead of raising, so resume paths can skip it and fall
+    back to the newest valid one.
+    """
+    try:
+        with open(os.path.join(path, "manifest.json"), "r",
+                  encoding="utf-8") as f:
+            m = json.load(f)
+    except (OSError, ValueError):
+        return False
+    if m.get("format") != FORMAT:
+        return False
+    data = os.path.join(path, "leaves.msgpack")
+    if not os.path.isfile(data):
+        return False
+    crc = m.get("crc32")
+    if crc is None:        # pre-CRC checkpoint: trust the commit rename
+        return True
+    try:
+        with open(data, "rb") as f:
+            payload = f.read()
+    except OSError:
+        return False
+    return (zlib.crc32(payload) & 0xFFFFFFFF) == int(crc)
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
-    """Newest committed step in ``ckpt_dir``, or None.
+    """Newest committed *valid* step in ``ckpt_dir``, or None.
 
     Recognizes both the single-file format (``ckpt_N.msgpack``) and the
     manager's directory format (``ckpt_N/`` with a committed manifest).
     Tolerant: stray ``ckpt_*`` entries that don't parse as a step are
-    skipped, never fatal.
+    skipped, never fatal; directory-format steps that fail
+    ``step_dir_valid`` (torn payload, checksum mismatch) are skipped
+    too, so the newest *valid* step wins.
     """
     if not os.path.isdir(ckpt_dir):
         return None
@@ -189,7 +228,7 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
             steps.append(int(m.group(1)))
             continue
         m = _DIR_RE.match(name)
-        if m and os.path.isfile(os.path.join(full, "manifest.json")):
+        if m and step_dir_valid(full):
             steps.append(int(m.group(1)))
     return max(steps) if steps else None
 

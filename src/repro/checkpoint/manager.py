@@ -34,6 +34,7 @@ import queue
 import shutil
 import threading
 import uuid
+import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -42,7 +43,7 @@ import numpy as np
 
 from repro.checkpoint import ckpt as ckpt_lib
 
-FORMAT = "repro-ckpt-v1"
+FORMAT = ckpt_lib.FORMAT
 DATA_FILE = "leaves.msgpack"
 MANIFEST_FILE = "manifest.json"
 
@@ -73,8 +74,20 @@ class CheckpointManager:
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
-        steps = self.steps()
-        return steps[-1] if steps else None
+        """Newest *valid* committed step (see ``step_valid``), or None.
+
+        Skips torn/corrupted steps — a crash mid-commit (or post-commit
+        media corruption caught by the manifest checksum) falls back to
+        the newest step that still verifies, which is what resume wants.
+        """
+        for s in reversed(self.steps()):
+            if self.step_valid(s):
+                return s
+        return None
+
+    def step_valid(self, step: int) -> bool:
+        """Whole-file validity check of one committed step (CRC-backed)."""
+        return ckpt_lib.step_dir_valid(self.step_path(step))
 
     def save(self, step: int, tree: Any,
              extra: Optional[Dict[str, Any]] = None) -> str:
@@ -91,6 +104,8 @@ class CheckpointManager:
         debris that the post-commit ``sweep_orphans`` of the *next*
         successful save reclaims.
         """
+        payload = msgpack.packb([ckpt_lib._encode_leaf(a)
+                                 for a in host_leaves])
         manifest = {
             "format": FORMAT,
             "step": int(step),
@@ -98,10 +113,12 @@ class CheckpointManager:
             "leaves": [{"shape": list(a.shape),
                         "dtype": ckpt_lib.dtype_str(a.dtype)}
                        for a in host_leaves],
+            # whole-file checksum of leaves.msgpack: restore() and
+            # step_dir_valid() reject torn/corrupted payloads by name
+            # instead of deserializing garbage
+            "crc32": zlib.crc32(payload) & 0xFFFFFFFF,
             "extra": {} if extra is None else extra,
         }
-        payload = msgpack.packb([ckpt_lib._encode_leaf(a)
-                                 for a in host_leaves])
         tmp = self.step_path(step) + ".tmp-" + uuid.uuid4().hex[:8]
         os.makedirs(tmp)
         for name, data in ((DATA_FILE, payload),
@@ -143,7 +160,16 @@ class CheckpointManager:
         specs = [(tuple(s["shape"]), s["dtype"]) for s in m["leaves"]]
         ckpt_lib.validate_leaves(specs, template, source=source)
         with open(os.path.join(source, DATA_FILE), "rb") as f:
-            raw = msgpack.unpackb(f.read())
+            data = f.read()
+        want = m.get("crc32")
+        if want is not None:
+            got = zlib.crc32(data) & 0xFFFFFFFF
+            if got != int(want):
+                raise ValueError(
+                    f"{source}/{DATA_FILE}: checksum mismatch — manifest "
+                    f"crc32={int(want):#010x}, file={got:#010x} (torn or "
+                    f"corrupted checkpoint; refusing to deserialize)")
+        raw = msgpack.unpackb(data)
         if len(raw) != m["leaf_count"]:
             raise ValueError(
                 f"{source}: data payload has {len(raw)} leaves but the "

@@ -49,6 +49,20 @@ def main(argv=None) -> int:
                          "uninterrupted run)")
     ap.add_argument("--ckpt-keep", type=int, default=3,
                     help="checkpoints retained in --ckpt-dir (<=0: all)")
+    # rl mode: self-healing supervisor (repro.resilience)
+    ap.add_argument("--fault-plan", default=None, metavar="SEED:SPEC",
+                    help="run under the resilience supervisor with this "
+                         "deterministic fault plan, e.g. "
+                         "'7:bitflip_push@4,straggler@6:delay_s=0.2' "
+                         "(see docs/resilience.md)")
+    ap.add_argument("--supervised", action="store_true",
+                    help="run under the resilience supervisor without "
+                         "injected faults (retry/rollback on real ones)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="supervisor resume-retries per rollback level")
+    ap.add_argument("--rollback", type=int, default=1,
+                    help="supervisor rollback-to-previous-checkpoint "
+                         "escalations after retries exhaust")
     args = ap.parse_args(argv)
 
     if args.mode == "rl":
@@ -60,12 +74,27 @@ def run_rl(args) -> int:
     from repro.core.qconfig import QuantConfig
     from repro.rl import loops
     quant = QuantConfig.parse(args.quant)
-    res = loops.train(args.algo, args.env, iterations=args.iterations,
-                      quant=quant, seed=args.seed,
-                      record_every=max(args.iterations // 10, 1),
-                      checkpoint_dir=args.ckpt_dir,
-                      checkpoint_every=args.ckpt_every,
-                      resume=args.resume, checkpoint_keep=args.ckpt_keep)
+    kwargs = dict(algo=args.algo, env_name=args.env,
+                  iterations=args.iterations, quant=quant, seed=args.seed,
+                  record_every=max(args.iterations // 10, 1),
+                  checkpoint_dir=args.ckpt_dir,
+                  checkpoint_every=args.ckpt_every,
+                  resume=args.resume, checkpoint_keep=args.ckpt_keep)
+    if args.fault_plan is not None or args.supervised:
+        from repro import resilience
+        plan = (resilience.FaultPlan.parse(args.fault_plan)
+                if args.fault_plan else None)
+        sup_cfg = resilience.SupervisorConfig(
+            max_retries=args.max_retries, max_rollbacks=args.rollback)
+        try:
+            res, report = resilience.supervise(kwargs, plan=plan,
+                                               config=sup_cfg)
+        except resilience.SupervisorAbort as e:
+            print(f"[train/rl] {e.report.summary()}")
+            return 1
+        print(f"[train/rl] {report.summary()}")
+    else:
+        res = loops.train(**kwargs)
     print(f"[train/rl] {args.algo} on {args.env} quant={quant.label()}: "
           f"eval rewards {['%.1f' % r for r in res.rewards]} "
           f"({res.wall_time_s:.0f}s)")

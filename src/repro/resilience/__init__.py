@@ -1,0 +1,42 @@
+"""Self-healing ActorQ runtime: fault injection, guards, supervision.
+
+Three modules (docs/resilience.md has the full model):
+
+* ``faults``     — deterministic seeded fault injection (``FaultPlan``)
+  and the ``ResilienceContext`` hook object the training drivers take
+  (``loops.train(resilience=...)``).
+* ``guards``     — typed integrity/numerical/structural guards: CRC'd
+  packed-cache pushes, jit-compatible finite checks, int8/int4 cache
+  validation.
+* ``supervisor`` — the retry → rollback → abort escalation driver with
+  a per-phase heartbeat watchdog (lazy-imported below: it imports
+  ``rl.loops``, which must stay importable without this package).
+"""
+from repro.resilience.faults import (ActorCrashError, FaultError,
+                                     FaultInjector, FaultPlan, FaultSpec,
+                                     ResilienceContext, bitflip_tree,
+                                     poison_params)
+from repro.resilience.guards import (CodeRangeError, GuardConfig,
+                                     GuardError, IntegrityError,
+                                     NonFiniteError, all_finite,
+                                     check_finite, tree_crc32,
+                                     validate_cache, verify_crc)
+
+_SUPERVISOR = ("supervise", "SupervisorAbort", "SupervisorConfig",
+               "SupervisorReport", "Watchdog")
+
+__all__ = [
+    "ActorCrashError", "FaultError", "FaultInjector", "FaultPlan",
+    "FaultSpec", "ResilienceContext", "bitflip_tree", "poison_params",
+    "CodeRangeError", "GuardConfig", "GuardError", "IntegrityError",
+    "NonFiniteError", "all_finite", "check_finite", "tree_crc32",
+    "validate_cache", "verify_crc", *_SUPERVISOR,
+]
+
+
+def __getattr__(name):
+    """Lazy re-export of the supervisor layer (breaks the loops cycle)."""
+    if name in _SUPERVISOR:
+        from repro.resilience import supervisor
+        return getattr(supervisor, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,568 @@
+"""Deterministic, seeded fault injection for the ActorQ runtime.
+
+A chaos run is specified as a ``FaultPlan`` — a seed plus a list of
+``FaultSpec`` entries, each naming a fault kind, the driver round it
+fires at, and kind-specific knobs.  Plans parse from a compact CLI
+string (``launch/train.py --fault-plan``)::
+
+    "7:nan_grad@3,bitflip_push@5:nbits=3,actor_crash@8:shard=1"
+
+Fault kinds (``FAULT_KINDS``):
+
+* ``actor_crash``   — an actor shard dies: raises ``ActorCrashError``
+  at the start of the target round (params/replay for the round are
+  lost; the supervisor resumes from the last checkpoint and records the
+  shard as quarantined).
+* ``straggler``     — a slow actor: sleeps ``delay_s`` at the start of
+  the round.  The watchdog observes the stalled heartbeat.
+* ``bitflip_push``  — flips ``nbits`` bits in the packed int8/int4
+  payload of the next param push (async: the minted snapshot cache;
+  actor-learner: the carried in-state cache; fused: the record-point
+  eval cache).  The integrity guard's CRC catches it.
+* ``nan_grad``      — poisons the learner params with NaN (or Inf with
+  ``mode=inf``) after the target round's update, as if a non-finite
+  gradient landed.  The finite guard catches it on the next check.
+* ``dropped_sync``  — the next due param push never happens (async
+  topology: the host-controlled push is skipped; the staleness metrics
+  record the widened actor lag).  In the in-jit sync topologies the
+  sync is compiled into the step, so the fault is recorded as
+  not-applicable instead of fired.
+* ``crash_commit``  — a crash mid-checkpoint-commit: the target step's
+  committed ``leaves.msgpack`` is truncated after the save, simulating
+  a torn write that the manifest checksum must reject on load.
+
+Every fault is injected from the *host* driver between jitted chunks,
+so the device-side computation of surviving rounds is untouched — this
+is what makes recovery bitwise-reproducible (see docs/resilience.md).
+
+``FaultInjector`` is the stateful consumer: it owns which entries have
+fired (``repeat`` counts down) and is shared across supervisor retry
+attempts so a fault does not re-fire after the restart that it caused.
+``ResilienceContext`` bundles injector + guards into the single object
+``loops.train(resilience=...)`` threads through the drivers; the loops
+module stays free of resilience imports (duck-typed hooks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.resilience import guards
+
+PyTree = Any
+
+FAULT_KINDS = ("actor_crash", "straggler", "bitflip_push", "nan_grad",
+               "dropped_sync", "crash_commit")
+
+
+class FaultError(RuntimeError):
+    """Base class for errors raised by injected faults."""
+
+
+class ActorCrashError(FaultError):
+    """An actor shard crashed (injected or real)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One planned fault: kind, target driver round, kind knobs.
+
+    ``step`` is the 0-based driver round (outer iteration) the fault
+    arms at; ``repeat`` is how many times it fires before exhausting
+    (so an escalation-to-abort test can keep re-firing the same fault
+    past the retry budget).  ``shard`` targets ``actor_crash``;
+    ``delay_s`` is the ``straggler`` sleep; ``nbits`` the number of
+    ``bitflip_push`` bit flips; ``mode`` picks NaN vs Inf poisoning
+    for ``nan_grad``.
+    """
+
+    kind: str
+    step: int
+    shard: int = 0
+    delay_s: float = 0.05
+    nbits: int = 1
+    mode: str = "nan"
+    repeat: int = 1
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; expected one of "
+                f"{FAULT_KINDS}")
+        if self.mode not in ("nan", "inf"):
+            raise ValueError(f"nan_grad mode must be nan|inf, "
+                             f"got {self.mode!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A seed plus the ordered fault entries of one chaos run."""
+
+    seed: int
+    faults: Tuple[FaultSpec, ...] = ()
+
+    @staticmethod
+    def parse(spec: str) -> "FaultPlan":
+        """Parse ``SEED:kind@step[:key=val...][,entry...]``.
+
+        Example: ``"7:nan_grad@3,bitflip_push@5:nbits=3"``.  Integer
+        knobs parse as int, ``delay_s`` as float, ``mode`` as str.
+        """
+        head, _, rest = spec.partition(":")
+        try:
+            seed = int(head)
+        except ValueError:
+            raise ValueError(
+                f"fault plan must start with 'SEED:', got {spec!r}")
+        faults: List[FaultSpec] = []
+        for entry in filter(None, rest.split(",")):
+            parts = entry.split(":")
+            kind, _, step_s = parts[0].partition("@")
+            if not step_s:
+                raise ValueError(
+                    f"fault entry {entry!r} needs 'kind@step'")
+            kw: Dict[str, Any] = {}
+            for p in parts[1:]:
+                k, _, v = p.partition("=")
+                if k == "delay_s":
+                    kw[k] = float(v)
+                elif k == "mode":
+                    kw[k] = v
+                else:
+                    kw[k] = int(v)
+            faults.append(FaultSpec(kind=kind, step=int(step_s), **kw))
+        return FaultPlan(seed=seed, faults=tuple(faults))
+
+    def spec_string(self) -> str:
+        """Inverse of ``parse`` (diagnostic reports round-trip plans)."""
+        entries = []
+        for f in self.faults:
+            s = f"{f.kind}@{f.step}"
+            defaults = FaultSpec(kind=f.kind, step=f.step)
+            for field in ("shard", "delay_s", "nbits", "mode", "repeat"):
+                v = getattr(f, field)
+                if v != getattr(defaults, field):
+                    s += f":{field}={v}"
+            entries.append(s)
+        return f"{self.seed}:{','.join(entries)}"
+
+
+def bitflip_tree(tree: PyTree, seed: int, nbits: int = 1) -> PyTree:
+    """Flip ``nbits`` random bits across a pytree's leaf payloads.
+
+    The target (leaf, byte, bit) triples come from a ``numpy``
+    Generator seeded with ``seed`` — the same plan corrupts the same
+    bits every run.  Leaves are rewritten on host and rebuilt with
+    their original dtypes/shapes; the tree structure (including
+    ``PackedTensor`` nodes) is preserved.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    host = [np.array(x) for x in leaves]
+    sizes = np.array([h.nbytes for h in host], dtype=np.int64)
+    total = int(sizes.sum())
+    if total == 0:
+        return tree
+    rng = np.random.default_rng(seed)
+    offsets = np.cumsum(sizes)
+    for flat_bit in rng.integers(0, total * 8, size=max(nbits, 1)):
+        byte, bit = divmod(int(flat_bit), 8)
+        li = int(np.searchsorted(offsets, byte, side="right"))
+        local = byte - (0 if li == 0 else int(offsets[li - 1]))
+        buf = host[li].view(np.uint8).reshape(-1)
+        buf[local] ^= np.uint8(1 << bit)
+    rebuilt = [jax.numpy.asarray(h) for h in host]
+    return jax.tree_util.tree_unflatten(treedef, rebuilt)
+
+
+def poison_params(params: PyTree, mode: str = "nan") -> PyTree:
+    """Overwrite the first float leaf's first element with NaN/Inf.
+
+    Models a non-finite gradient having landed on the learner: one
+    poisoned value is enough — it propagates through every subsequent
+    update — while keeping the corruption minimal and inspectable.
+    """
+    bad = float("nan") if mode == "nan" else float("inf")
+    done = [False]
+
+    def one(x):
+        arr = np.array(x)
+        if not done[0] and np.issubdtype(arr.dtype, np.floating) \
+                and arr.size:
+            arr.reshape(-1)[0] = bad
+            done[0] = True
+            return jax.numpy.asarray(arr)
+        return x
+
+    return jax.tree_util.tree_map(one, params)
+
+
+def truncate_file(path, keep_bytes: int = 7) -> None:
+    """Truncate a file to ``keep_bytes`` — a torn write, post-commit."""
+    import os
+    with open(path, "r+b") as f:
+        f.truncate(keep_bytes)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+class FaultInjector:
+    """Stateful consumer of a ``FaultPlan``.
+
+    Owns the per-entry remaining-fire counts.  SHARED across supervisor
+    retry attempts: a fault that fired (and crashed the run) must not
+    re-fire after the resume replays its round — the resumed round is
+    the *recovery*, not a fresh target.  ``fired`` records every
+    injection as ``(kind, step, detail)`` for the diagnostic report;
+    ``not_applicable`` records faults that could not fire in the chosen
+    topology (e.g. ``dropped_sync`` under in-jit syncs).
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self._remaining = [f.repeat for f in plan.faults]
+        self.fired: List[Tuple[str, int, str]] = []
+        self.not_applicable: List[Tuple[str, int, str]] = []
+
+    def pending(self, kind: str, step: int) -> Optional[int]:
+        """Index of an armed entry of ``kind`` due at ``step``, if any.
+
+        An entry is due at the first opportunity with ``step >= f.step``
+        — chunked drivers advance rounds by ``steps_per_call``, so exact
+        equality would silently skip plans whose target falls inside a
+        chunk.
+        """
+        for i, f in enumerate(self.plan.faults):
+            if (f.kind == kind and step >= f.step
+                    and self._remaining[i] > 0):
+                return i
+        return None
+
+    def take(self, kind: str, step: int) -> Optional[FaultSpec]:
+        """Consume one firing of an armed entry; None when not due."""
+        i = self.pending(kind, step)
+        if i is None:
+            return None
+        self._remaining[i] -= 1
+        return self.plan.faults[i]
+
+    def record_fired(self, kind: str, step: int, detail: str = "") -> None:
+        """Log an injection that actually happened."""
+        self.fired.append((kind, step, detail))
+
+    def record_na(self, kind: str, step: int, why: str) -> None:
+        """Log a planned fault that cannot apply in this topology."""
+        self.not_applicable.append((kind, step, why))
+
+    @property
+    def injected_count(self) -> int:
+        """Number of faults that actually fired (bench recovery gate)."""
+        return len(self.fired)
+
+
+class ResilienceContext:
+    """The duck-typed hook object ``loops.train(resilience=...)`` takes.
+
+    Bundles a ``FaultInjector`` (may be None for guards-only runs) with
+    a ``GuardConfig`` and exposes the driver hooks:
+
+    * ``round_start(step)``      — fires actor_crash / straggler.
+    * ``after_round(state, step, learner_view=, repack=)`` — fires
+      nan_grad (poisons the learner view via ``learner_view``/its
+      default), fires bitflip_push against a carried in-state cache
+      (via ``repack``, which rebuilds/verifies it), runs the finite
+      guard at ``check_every`` cadence.  Returns the (possibly
+      corrupted) state — corruption flows forward so the *guard*, not
+      the injector, is what stops the run.
+    * ``on_eval_cache(cache, step, remint)`` — fused-topology eval-path
+      cache guard: bitflip_push target + validate/verify with bounded
+      re-mint retries.
+    * ``push(mint, step)``       — async-topology guarded param push:
+      mints via ``mint()``, applies bitflip_push, verifies CRC +
+      structure, retries by re-minting (bounded, deterministic-jitter
+      backoff); returns None when dropped_sync consumed the push.
+    * ``after_checkpoint(ckpt_dir, step)`` — fires crash_commit against
+      the just-committed step dir.
+    * ``heartbeat(phase, step)`` — watchdog liveness (supervisor owns
+      the watchdog; standalone contexts accept and drop beats).
+
+    All hooks are host-side and no-ops when neither a fault is due nor
+    a guard is enabled, so an un-faulted guarded run differs from a
+    bare run only by the guard reductions (benched < 5% overhead).
+    """
+
+    def __init__(self, injector: Optional[FaultInjector] = None,
+                 guard: Optional[guards.GuardConfig] = None,
+                 on_heartbeat: Optional[Callable[[str, int], None]] = None,
+                 sleep: Callable[[float], None] = time.sleep):
+        self.injector = injector
+        self.guard = guards.GuardConfig() if guard is None else guard
+        self._on_heartbeat = on_heartbeat
+        self._sleep = sleep
+        self.quarantined: List[int] = []
+        self.events: List[Tuple[str, int, str]] = []
+
+    # -- bookkeeping ----------------------------------------------------
+    def _log(self, what: str, step: int, detail: str = "") -> None:
+        self.events.append((what, step, detail))
+
+    def heartbeat(self, phase: str, step: int) -> None:
+        """Report liveness to the supervisor's watchdog (if attached)."""
+        if self._on_heartbeat is not None:
+            self._on_heartbeat(phase, step)
+
+    @property
+    def seed(self) -> int:
+        """Plan seed (0 for guards-only contexts) — keys the jitter."""
+        return self.injector.plan.seed if self.injector else 0
+
+    def _take(self, kind: str, step: int) -> Optional[FaultSpec]:
+        if self.injector is None:
+            return None
+        return self.injector.take(kind, step)
+
+    # -- driver hooks ---------------------------------------------------
+    def round_start(self, step: int) -> None:
+        """Start-of-round hook: actor_crash and straggler fire here."""
+        self.heartbeat("round", step)
+        f = self._take("straggler", step)
+        if f is not None:
+            self.injector.record_fired("straggler", step,
+                                       f"delay_s={f.delay_s}")
+            self._log("straggler", step, f"slept {f.delay_s}s")
+            self._sleep(f.delay_s)
+        f = self._take("actor_crash", step)
+        if f is not None:
+            self.injector.record_fired("actor_crash", step,
+                                       f"shard={f.shard}")
+            if f.shard not in self.quarantined:
+                self.quarantined.append(f.shard)
+            raise ActorCrashError(
+                f"actor shard {f.shard} crashed at round {step} "
+                f"(injected)")
+
+    def after_round(self, state, step: int, *, learner_view=None,
+                    set_learner=None, repack=None):
+        """Post-update hook: nan_grad / bitflip_push + finite guard.
+
+        ``learner_view(state)`` extracts the learner params pytree;
+        ``set_learner(state, params)`` writes a modified one back
+        (both default to identity for plain learner-state objects).
+        ``repack`` is ``(state, corrupt_fn) -> state`` for topologies
+        that carry a packed actor cache inside the jitted state.
+        """
+        f = self._take("nan_grad", step)
+        if f is not None:
+            self.injector.record_fired("nan_grad", step, f.mode)
+            self._log("nan_grad", step, f"poisoned ({f.mode})")
+            view = state if learner_view is None else learner_view(state)
+            poisoned = poison_params(view, f.mode)
+            state = poisoned if set_learner is None \
+                else set_learner(state, poisoned)
+        if repack is not None:
+            # only consume the entry when this topology carries an
+            # in-state cache target; otherwise the push/eval-cache hook
+            # downstream owns the fault
+            f = self._take("bitflip_push", step)
+            if f is not None:
+                self.injector.record_fired(
+                    "bitflip_push", step,
+                    f"nbits={f.nbits} (in-state cache)")
+                self._log("bitflip_push", step, "corrupted in-state cache")
+                state = repack(state, lambda c: bitflip_tree(
+                    c, self.seed + step, f.nbits))
+        if (self.guard.check_finite
+                and step % max(self.guard.check_every, 1) == 0):
+            view = state if learner_view is None else learner_view(state)
+            guards.check_finite(view, what=f"learner params @round {step}")
+        return state
+
+    def verify_state_cache(self, cache, reference_mint, step: int) -> None:
+        """Verify a carried in-state cache against a fresh repack.
+
+        Used by the bulk-synchronous actor-learner topology where the
+        cache lives inside jitted state (no CRC travels with it): the
+        reference is re-minted from the fp32 source params and compared
+        by checksum.  Only sound when minting is deterministic
+        (``calib_batch == 0``); callers gate on that.
+        """
+        if not self.guard.verify_pushes:
+            return
+        ref = reference_mint()
+        guards.verify_crc(cache, guards.tree_crc32(ref),
+                          what=f"in-state actor cache @round {step}")
+        if self.guard.validate_codes:
+            guards.validate_cache(cache,
+                                  what=f"in-state actor cache @round {step}")
+
+    def on_eval_cache(self, cache, step: int, remint):
+        """Guard (and possibly corrupt) a freshly minted eval cache.
+
+        ``remint()`` rebuilds the cache from the fp32 params — both the
+        bitflip repair path and the verification reference.  Returns
+        the cache to use.
+        """
+        f = self._take("bitflip_push", step)
+        if f is not None:
+            self.injector.record_fired("bitflip_push", step,
+                                       f"nbits={f.nbits} (eval cache)")
+            self._log("bitflip_push", step, "corrupted eval cache")
+            cache = bitflip_tree(cache, self.seed + step, f.nbits)
+        if not self.guard.verify_pushes:
+            return cache
+
+        attempt = [0]
+
+        def check_or_remint():
+            if attempt[0] > 0:
+                c = remint()
+                self._log("push_retry", step,
+                          f"re-minted eval cache (attempt {attempt[0]})")
+            else:
+                c = cache
+            attempt[0] += 1
+            guards.verify_crc(c, guards.tree_crc32(remint()),
+                              what=f"eval cache @round {step}")
+            if self.guard.validate_codes:
+                guards.validate_cache(c, what=f"eval cache @round {step}")
+            return c
+
+        return guards.retry_call(
+            check_or_remint, retries=self.guard.push_retries,
+            base_s=self.guard.backoff_base_s,
+            factor=self.guard.backoff_factor,
+            cap_s=self.guard.backoff_cap_s, seed=self.seed + step,
+            retry_on=guards.GuardError, sleep=self._sleep)
+
+    def sync_due(self, step: int) -> bool:
+        """Consume a due dropped_sync; False = skip this push entirely.
+
+        The async driver asks *before* swapping replay slots, so a
+        dropped sync drops the whole exchange — the realized actor lag
+        widens until the next cadence point, which is exactly the
+        staleness signature the metrics should show.
+        """
+        f = self._take("dropped_sync", step)
+        if f is not None:
+            self.injector.record_fired("dropped_sync", step)
+            self._log("dropped_sync", step, "push skipped")
+            return False
+        return True
+
+    def push(self, mint, step: int):
+        """Guarded async param push: mint → corrupt? → verify → retry.
+
+        ``mint()`` produces the snapshot payload.  A due dropped_sync
+        consumes the push and returns None (the driver skips the sync
+        bookkeeping — staleness metrics then show the widened lag).  A
+        due bitflip_push corrupts the payload once; verification
+        re-mints with bounded backoff, so a transient corruption costs
+        one retry while a persistent one escalates its typed error.
+        """
+        self.heartbeat("push", step)
+        if self._take("dropped_sync", step) is not None:
+            self.injector.record_fired("dropped_sync", step)
+            self._log("dropped_sync", step, "push skipped")
+            return None
+        f = self._take("bitflip_push", step)
+        corrupt_once = [f]
+
+        def mint_verify():
+            snap = mint()
+            fs = corrupt_once[0]
+            if fs is not None:
+                corrupt_once[0] = None
+                self.injector.record_fired(
+                    "bitflip_push", step, f"nbits={fs.nbits} (push)")
+                self._log("bitflip_push", step, "corrupted push payload")
+                snap = bitflip_tree(snap, self.seed + step, fs.nbits)
+            if self.guard.verify_pushes:
+                ref_crc = guards.tree_crc32(mint())
+                guards.verify_crc(snap, ref_crc,
+                                  what=f"param push @update {step}")
+                if self.guard.validate_codes:
+                    guards.validate_cache(
+                        snap, what=f"param push @update {step}")
+            return snap
+
+        def on_retry(attempt, exc):
+            self._log("push_retry", step, f"{type(exc).__name__}: {exc}")
+
+        return guards.retry_call(
+            mint_verify, retries=self.guard.push_retries,
+            base_s=self.guard.backoff_base_s,
+            factor=self.guard.backoff_factor,
+            cap_s=self.guard.backoff_cap_s, seed=self.seed + step,
+            retry_on=guards.GuardError, on_retry=on_retry,
+            sleep=self._sleep)
+
+    def dropped_sync_na(self, step: int, topology: str) -> None:
+        """Record a dropped_sync that cannot fire (in-jit sync)."""
+        f = self._take("dropped_sync", step)
+        if f is not None:
+            self.injector.record_na(
+                "dropped_sync", step,
+                f"sync is compiled into the {topology} step; cannot be "
+                f"dropped from the host")
+
+    def checkpoint_committed(self, ckptr, step: int) -> None:
+        """Driver hook after ``ckptr.save_async(step, ...)``.
+
+        Cheap when no crash_commit is armed (one pending check, no
+        barrier); when one is due it drains the async writer so the
+        commit exists on disk, then tears it via ``after_checkpoint`` —
+        the crash lands *after* the rename, which is the case the
+        manifest checksum (not the commit protocol) must catch.
+        """
+        self.heartbeat("checkpoint", step)
+        if (self.injector is None
+                or self.injector.pending("crash_commit", step) is None):
+            return
+        ckptr.wait()
+        self.after_checkpoint(ckptr.manager.step_path(step), step)
+
+    def after_checkpoint(self, ckpt_path, step: int) -> None:
+        """Post-commit hook: crash_commit tears the just-saved step."""
+        self.heartbeat("checkpoint", step)
+        if ckpt_path is None:
+            return
+        f = self._take("crash_commit", step)
+        if f is None:
+            return
+        import os
+        leaves = os.path.join(ckpt_path, "leaves.msgpack")
+        if os.path.exists(leaves):
+            truncate_file(leaves)
+            self.injector.record_fired("crash_commit", step,
+                                       str(ckpt_path))
+            self._log("crash_commit", step, f"truncated {leaves}")
+
+    def serving_fault_hook(self):
+        """Batch-dispatch hook for ``PolicyServer(fault_hook=...)``.
+
+        Returns a callable fired per dispatched batch; an armed
+        ``actor_crash`` raises (the server's worker auto-restart
+        handles it), a ``straggler`` sleeps.  Steps here count
+        dispatched batches, tracked internally.
+        """
+        count = [0]
+
+        def hook(batch):
+            step = count[0]
+            count[0] += 1
+            f = self._take("straggler", step)
+            if f is not None:
+                self.injector.record_fired("straggler", step,
+                                           f"serving delay {f.delay_s}s")
+                self._sleep(f.delay_s)
+            f = self._take("actor_crash", step)
+            if f is not None:
+                self.injector.record_fired("actor_crash", step,
+                                           "serving worker")
+                raise ActorCrashError(
+                    f"serving worker crashed at batch {step} (injected)")
+
+        return hook

@@ -1,0 +1,292 @@
+"""Integrity and numerical guards for the self-healing ActorQ runtime.
+
+Three guard families, each raising a *typed* error instead of letting a
+fault corrupt training silently:
+
+* **Integrity** — ``tree_crc32`` checksums a packed actor cache (codes +
+  scales, every leaf in flatten order) so a param-push payload can be
+  verified at the consumer: ``verify_crc`` raises ``IntegrityError`` on
+  any bit difference.  The async sync-push and ``PolicyServer`` hot-swap
+  carry the CRC with the payload; the bulk-synchronous topology verifies
+  the carried cache against a repack of its fp32 source.
+* **Numerical** — ``all_finite`` is a jit-compatible all-leaves-finite
+  reduction over the float leaves of any pytree; the host-side
+  ``check_finite`` wrapper raises ``NonFiniteError`` naming every
+  offending leaf path (a NaN/Inf gradient that landed on the learner is
+  caught at the next guarded round instead of poisoning every update
+  after it).
+* **Structural** — ``validate_cache`` checks the quantizer invariants of
+  a packed int8/int4 cache (integer code dtype, bits in range, finite
+  strictly-positive scales, finite zero-points/epilogue columns) and
+  raises ``CodeRangeError``.  Scale corruption is caught here even
+  without a reference CRC; code bit-flips need the integrity guard
+  (every int8 byte is a valid code — that is *why* pushes carry a CRC).
+
+``GuardConfig`` bundles the knobs the training drivers and the
+supervisor consume (see ``repro.resilience.faults.ResilienceContext``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ptq import PackedTensor
+
+PyTree = Any
+
+
+class GuardError(RuntimeError):
+    """Base class for guard violations (typed, never a bare assert)."""
+
+
+class IntegrityError(GuardError):
+    """A packed payload's checksum does not match its content."""
+
+
+class NonFiniteError(GuardError):
+    """NaN/Inf found in params/updates that must be finite."""
+
+
+class CodeRangeError(GuardError):
+    """Packed int8/int4 cache violates the quantizer invariants."""
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Guard knobs threaded through the drivers and the supervisor.
+
+    ``check_finite`` — finite-params check on the learner after update
+    rounds; ``verify_pushes`` — CRC/repack verification of packed param
+    pushes; ``validate_codes`` — structural cache validation alongside
+    the push guard; ``check_every`` — host-sync cadence in driver rounds
+    (1 = every round; raise it to amortize the host sync on very small
+    nets); ``push_retries`` — bounded retries of a failed (corrupted)
+    param push before the typed error escalates; ``backoff_base_s`` /
+    ``backoff_factor`` / ``backoff_cap_s`` — exponential-backoff policy
+    for those retries (deterministic jitter, see ``backoff_delay``).
+    """
+
+    check_finite: bool = True
+    verify_pushes: bool = True
+    validate_codes: bool = True
+    check_every: int = 1
+    push_retries: int = 2
+    backoff_base_s: float = 0.01
+    backoff_factor: float = 2.0
+    backoff_cap_s: float = 0.5
+
+
+def deterministic_jitter(seed: int, attempt: int) -> float:
+    """Jitter fraction in [0, 1) as a pure function of (seed, attempt).
+
+    CRC32 over the pair's little-endian bytes — stable across runs and
+    platforms, so a chaos run's retry timing is reproducible (no
+    ``random`` module, no global state).
+    """
+    h = zlib.crc32(int(seed).to_bytes(8, "little", signed=True)
+                   + int(attempt).to_bytes(8, "little", signed=True))
+    return (h & 0xFFFFFFFF) / 2 ** 32
+
+
+def backoff_delay(attempt: int, *, base_s: float, factor: float,
+                  cap_s: float, seed: int = 0) -> float:
+    """Exponential backoff with deterministic jitter, capped.
+
+    ``base * factor**attempt * (1 + jitter)`` clipped to ``cap_s``;
+    ``jitter`` comes from ``deterministic_jitter(seed, attempt)`` so two
+    runs of the same fault plan sleep identically.
+    """
+    raw = base_s * (factor ** max(attempt, 0))
+    return min(raw * (1.0 + deterministic_jitter(seed, attempt)), cap_s)
+
+
+def tree_crc32(tree: PyTree) -> int:
+    """CRC32 over every leaf's bytes + dtype/shape, in flatten order.
+
+    The checksum that travels with a packed param push: any bit flip in
+    the codes, scales, zero-points or epilogue columns — or a silent
+    dtype/shape change — moves it.  Leaves are pulled to host
+    (``np.asarray``); call off the hot path (pushes, hot-swaps).
+    """
+    crc = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        arr = np.asarray(leaf)
+        crc = zlib.crc32(str((arr.dtype.str, arr.shape)).encode(), crc)
+        crc = zlib.crc32(np.ascontiguousarray(arr).tobytes(), crc)
+    return crc & 0xFFFFFFFF
+
+
+def verify_crc(tree: PyTree, expected: int, *, what: str = "payload"
+               ) -> None:
+    """Raise ``IntegrityError`` unless ``tree_crc32(tree) == expected``."""
+    got = tree_crc32(tree)
+    if got != int(expected):
+        raise IntegrityError(
+            f"{what}: checksum mismatch — expected {int(expected):#010x}, "
+            f"got {got:#010x} (corrupted packed payload; refusing to "
+            f"serve/sync it)")
+
+
+def _float_leaves(tree: PyTree) -> List[jnp.ndarray]:
+    return [x for x in jax.tree_util.tree_leaves(tree)
+            if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)]
+
+
+def all_finite(tree: PyTree):
+    """Jit-compatible scalar bool: every float leaf all-finite.
+
+    Builds a single fused reduction over the float leaves — usable
+    inside a jitted update (guard the gradient before applying it) or
+    eagerly from the host driver.  Non-float leaves (int codes,
+    counters) are skipped.
+    """
+    leaves = _float_leaves(tree)
+    if not leaves:
+        return jnp.asarray(True)
+    ok = jnp.asarray(True)
+    for x in leaves:
+        ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(x)))
+    return ok
+
+
+def nonfinite_paths(tree: PyTree, limit: int = 8) -> List[str]:
+    """Tree paths of leaves containing NaN/Inf (host-side diagnosis)."""
+    bad = []
+    paths_leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in paths_leaves:
+        arr = np.asarray(leaf)
+        if np.issubdtype(arr.dtype, np.floating) and \
+                not np.all(np.isfinite(arr)):
+            bad.append(jax.tree_util.keystr(path) or "<root>")
+            if len(bad) >= limit:
+                break
+    return bad
+
+
+def check_finite(tree: PyTree, *, what: str = "params") -> None:
+    """Host-side finite guard: raise ``NonFiniteError`` naming leaves.
+
+    The fast path is one fused ``all_finite`` reduction; the per-leaf
+    diagnosis only runs on failure.
+    """
+    if bool(np.asarray(all_finite(tree))):
+        return
+    bad = nonfinite_paths(tree)
+    raise NonFiniteError(
+        f"{what}: non-finite values in {len(bad)} leaf/leaves "
+        f"(NaN/Inf gradient or corrupted update): {', '.join(bad)}")
+
+
+def _packed_leaves(tree: PyTree):
+    return [x for x in jax.tree_util.tree_leaves(
+        tree, is_leaf=lambda y: isinstance(y, PackedTensor))
+        if isinstance(x, PackedTensor)]
+
+
+def validate_cache(cache: PyTree, *, what: str = "actor cache") -> None:
+    """Structural validation of a packed int8/int4 actor cache.
+
+    Checks, per ``PackedTensor``: integer code dtype; ``bits`` in
+    [1, 16]; finite strictly-positive quantizer scales (``delta``);
+    finite zero-points and hoisted per-column epilogue arrays; packed
+    int4 code payloads sized consistently with ``orig_shape``.  Float
+    side-entries (biases, static activation scales) must be finite.
+    Raises ``CodeRangeError`` with the first violation found.
+    """
+    packed = _packed_leaves(cache)
+    for i, p in enumerate(packed):
+        codes = np.asarray(p.codes)
+        if not np.issubdtype(codes.dtype, np.integer):
+            raise CodeRangeError(
+                f"{what}: packed leaf {i} codes dtype {codes.dtype} is "
+                f"not an integer type")
+        if not 1 <= int(p.bits) <= 16:
+            raise CodeRangeError(
+                f"{what}: packed leaf {i} bits={p.bits} outside [1, 16]")
+        if p.orig_shape is None and int(p.bits) < 16:
+            lo, hi = -(2 ** (p.bits - 1)), 2 ** (p.bits - 1) - 1
+            cmin, cmax = int(codes.min()), int(codes.max())
+            if cmin < lo or cmax > hi:
+                raise CodeRangeError(
+                    f"{what}: packed leaf {i} codes [{cmin}, {cmax}] "
+                    f"exceed the {p.bits}-bit range [{lo}, {hi}]")
+        if p.orig_shape is not None:
+            k = 1
+            for d in p.orig_shape[:-1]:
+                k *= d
+            want = ((k + 1) // 2) * p.orig_shape[-1]
+            if codes.size != want:
+                raise CodeRangeError(
+                    f"{what}: packed leaf {i} has {codes.size} packed "
+                    f"bytes, orig_shape {p.orig_shape} needs {want}")
+        for name, arr in (("delta", p.delta), ("zero_point", p.zero_point),
+                          ("col_scale", p.col_scale),
+                          ("col_zero", p.col_zero)):
+            if arr is None:
+                continue
+            a = np.asarray(arr)
+            if not np.all(np.isfinite(a)):
+                raise CodeRangeError(
+                    f"{what}: packed leaf {i} {name} contains NaN/Inf "
+                    f"(corrupted quantizer scales)")
+            if name == "delta" and not np.all(a > 0):
+                raise CodeRangeError(
+                    f"{what}: packed leaf {i} delta must be strictly "
+                    f"positive, min={float(a.min())}")
+    # non-packed float entries (biases, calibrated activation scales)
+    rest = jax.tree_util.tree_map(
+        lambda x: None if isinstance(x, PackedTensor) else x, cache,
+        is_leaf=lambda x: isinstance(x, PackedTensor))
+    bad = nonfinite_paths(rest)
+    if bad:
+        raise CodeRangeError(
+            f"{what}: non-finite float entries outside the packed "
+            f"weights: {', '.join(bad)}")
+
+
+def retry_call(fn, *, retries: int, base_s: float, factor: float,
+               cap_s: float, seed: int = 0, retry_on=Exception,
+               on_retry=None, sleep=None):
+    """Bounded retry with deterministic-jitter exponential backoff.
+
+    Calls ``fn()`` up to ``retries + 1`` times; on a ``retry_on``
+    exception sleeps ``backoff_delay(attempt, ...)`` and retries,
+    invoking ``on_retry(attempt, exc)`` first (event logging).  The last
+    failure is re-raised unchanged.  ``sleep`` is injectable for tests.
+    """
+    import time as _time
+    do_sleep = _time.sleep if sleep is None else sleep
+    attempt = 0
+    while True:
+        try:
+            return fn()
+        except retry_on as e:
+            if attempt >= retries:
+                raise
+            if on_retry is not None:
+                on_retry(attempt, e)
+            do_sleep(backoff_delay(attempt, base_s=base_s, factor=factor,
+                                   cap_s=cap_s, seed=seed))
+            attempt += 1
+
+
+def checksum_entry(cache: PyTree) -> int:
+    """CRC for a cache about to be published (push-site convenience).
+
+    Alias of ``tree_crc32`` named for the call sites — the value is what
+    ``serving.CacheEntry.crc32`` and the async sync-push carry alongside
+    the payload.
+    """
+    return tree_crc32(cache)
+
+
+def verify_or_none(cache: PyTree, crc: Optional[int], *,
+                   what: str) -> None:
+    """``verify_crc`` that tolerates a missing checksum (older caches)."""
+    if crc is not None:
+        verify_crc(cache, crc, what=what)

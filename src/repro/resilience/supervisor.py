@@ -1,0 +1,285 @@
+"""Supervised training driver: watchdog, retry, rollback, abort.
+
+``supervise(...)`` wraps ``loops.train`` in the escalation policy a
+long-lived ActorQ run needs (wasted retraining is the dominant
+emissions term — see PAPERS.md "Greener Deep RL"):
+
+1. **Retry** — a typed fault/guard/checkpoint error restarts the phase
+   by resuming from the newest *valid* checkpoint (``resume=True``; the
+   corrupted-step fallback lives in ``CheckpointManager.latest_step``),
+   up to ``max_retries`` times with deterministic-jitter exponential
+   backoff between attempts.  The PR-8 bitwise-resume contract makes a
+   successful retry indistinguishable from a run that never faulted.
+2. **Rollback** — when retries exhaust (the newest checkpoint itself
+   reproduces the failure — e.g. it already contains poisoned params),
+   the newest checkpoint step is deleted and the retry budget resets,
+   up to ``max_rollbacks`` times: training re-runs from the previous
+   good step, and — same contract — lands bitwise where a clean run
+   from that step would.
+3. **Abort** — when rollbacks exhaust too, ``SupervisorAbort`` raises
+   with a structured ``SupervisorReport`` (attempt log, faults fired /
+   not-applicable, quarantined shards, watchdog stalls) so the failure
+   is diagnosable instead of a stack trace at hour six.
+
+The per-phase **watchdog** consumes the heartbeats the resilience hooks
+emit from the drivers (round / push / checkpoint) on a monitor thread;
+a heartbeat gap beyond ``watchdog_timeout_s`` is recorded as a stall
+(an injected straggler shows up here).  It observes — it never kills a
+jitted computation mid-flight; stalls surface in the report.
+
+Quarantine semantics on the single-host vectorized actor axis: a
+crashed shard is recorded in ``report.quarantined`` and the run resumes
+with all shards live (resume re-initializes the vectorized env state
+from the checkpoint).  Under the planned multi-process topology
+(ROADMAP item 4) the same record maps to excluding the dead actor
+process from the mesh — degrade, don't die.
+"""
+from __future__ import annotations
+
+import dataclasses
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.resilience import faults, guards
+
+
+class SupervisorAbort(RuntimeError):
+    """Escalation exhausted; carries the structured ``report``."""
+
+    def __init__(self, message: str, report: "SupervisorReport"):
+        super().__init__(message)
+        self.report = report
+
+
+@dataclasses.dataclass(frozen=True)
+class SupervisorConfig:
+    """Escalation-policy knobs.
+
+    ``max_retries`` — resume-from-checkpoint attempts per rollback
+    level; ``max_rollbacks`` — newest-checkpoint deletions before
+    abort (0 disables rollback); ``watchdog_timeout_s`` — heartbeat gap
+    that counts as a stall; ``backoff_base_s``/``backoff_factor``/
+    ``backoff_cap_s`` — inter-attempt backoff (deterministic jitter
+    keyed on the fault-plan seed).
+    """
+
+    max_retries: int = 2
+    max_rollbacks: int = 1
+    watchdog_timeout_s: float = 60.0
+    backoff_base_s: float = 0.02
+    backoff_factor: float = 2.0
+    backoff_cap_s: float = 1.0
+
+
+@dataclasses.dataclass
+class SupervisorReport:
+    """Structured diagnostic record of one supervised run."""
+
+    status: str = "ok"                 # "ok" | "aborted"
+    attempts: int = 0
+    retries: int = 0
+    rollbacks: int = 0
+    attempt_log: List[Dict[str, Any]] = dataclasses.field(
+        default_factory=list)
+    faults_fired: List[Tuple[str, int, str]] = dataclasses.field(
+        default_factory=list)
+    faults_not_applicable: List[Tuple[str, int, str]] = dataclasses.field(
+        default_factory=list)
+    quarantined: List[int] = dataclasses.field(default_factory=list)
+    stalls: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    events: List[Tuple[str, int, str]] = dataclasses.field(
+        default_factory=list)
+    error: Optional[str] = None
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-ready form (bench artifacts, CLI dumps)."""
+        return dataclasses.asdict(self)
+
+    def summary(self) -> str:
+        """Human-readable one-paragraph digest for CLI output."""
+        lines = [f"supervisor: {self.status} after {self.attempts} "
+                 f"attempt(s) ({self.retries} retries, "
+                 f"{self.rollbacks} rollbacks)"]
+        if self.faults_fired:
+            lines.append("  faults fired: " + ", ".join(
+                f"{k}@{s}" + (f" [{d}]" if d else "")
+                for k, s, d in self.faults_fired))
+        if self.faults_not_applicable:
+            lines.append("  not applicable: " + ", ".join(
+                f"{k}@{s} ({w})" for k, s, w in
+                self.faults_not_applicable))
+        if self.quarantined:
+            lines.append(f"  quarantined shards: {self.quarantined}")
+        if self.stalls:
+            lines.append(f"  watchdog stalls: {len(self.stalls)}")
+        if self.error:
+            lines.append(f"  last error: {self.error}")
+        return "\n".join(lines)
+
+
+class Watchdog:
+    """Heartbeat monitor on a daemon thread.
+
+    ``beat(phase, step)`` is the producer side (wired as the
+    ``ResilienceContext`` heartbeat sink); the monitor records a stall
+    whenever the gap since the last beat exceeds ``timeout_s``, once
+    per stall episode (the next beat re-arms it).  Observation only —
+    a stalled jit computation cannot be safely interrupted from here.
+    """
+
+    def __init__(self, timeout_s: float = 60.0,
+                 poll_s: Optional[float] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout_s = float(timeout_s)
+        self._poll_s = poll_s if poll_s is not None \
+            else max(min(timeout_s / 4.0, 1.0), 0.01)
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._last = (clock(), "start", -1)
+        self._stalled = False
+        self.stalls: List[Dict[str, Any]] = []
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def beat(self, phase: str, step: int) -> None:
+        """Record liveness (called from the training thread's hooks)."""
+        with self._lock:
+            self._last = (self._clock(), phase, step)
+            self._stalled = False
+
+    def check(self) -> None:
+        """One monitor poll (exposed for deterministic tests)."""
+        with self._lock:
+            t, phase, step = self._last
+            gap = self._clock() - t
+            if gap > self.timeout_s and not self._stalled:
+                self._stalled = True
+                self.stalls.append({"phase": phase, "step": step,
+                                    "stalled_for_s": round(gap, 3)})
+
+    def _run(self) -> None:
+        while not self._stop.wait(self._poll_s):
+            self.check()
+
+    def start(self) -> "Watchdog":
+        """Start the monitor thread (idempotent)."""
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._run, name="resilience-watchdog", daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Stop and join the monitor thread."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+
+# exceptions that trigger the escalation ladder: injected faults, guard
+# violations, and checkpoint-layer ValueErrors (torn/corrupt restores).
+# Anything else (TypeError, jit tracer errors, ...) is a bug and raises
+# straight through — retrying a deterministic programming error burns
+# exactly the compute this subsystem exists to save.
+RECOVERABLE = (faults.FaultError, guards.GuardError, ValueError)
+
+
+def supervise(train_kwargs: Dict[str, Any], *,
+              plan: Optional[faults.FaultPlan] = None,
+              guard: Optional[guards.GuardConfig] = None,
+              config: Optional[SupervisorConfig] = None,
+              train_fn: Optional[Callable] = None,
+              sleep: Callable[[float], None] = time.sleep
+              ) -> Tuple[Any, SupervisorReport]:
+    """Run ``loops.train(**train_kwargs)`` under supervision.
+
+    ``train_kwargs`` are the exact ``loops.train`` kwargs (including
+    ``algo``/``env_name``); rollback and retry-by-resume need
+    ``checkpoint_dir`` + ``checkpoint_every`` in there — without them a
+    retry restarts from scratch (still bounded, still reported).
+
+    Returns ``(TrainResult, SupervisorReport)`` on success; raises
+    ``SupervisorAbort`` (carrying the report) when the escalation
+    ladder exhausts.  The ``FaultInjector`` built from ``plan`` is
+    shared across attempts: a fault that fired and crashed an attempt
+    does not re-fire in the recovery that replays its round.
+    """
+    if train_fn is None:
+        from repro.rl import loops
+        train_fn = loops.train
+    cfg = config if config is not None else SupervisorConfig()
+    injector = faults.FaultInjector(plan) if plan is not None else None
+    seed = plan.seed if plan is not None else 0
+    watchdog = Watchdog(timeout_s=cfg.watchdog_timeout_s).start()
+    ctx = faults.ResilienceContext(injector, guard,
+                                   on_heartbeat=watchdog.beat)
+    report = SupervisorReport()
+    kwargs = dict(train_kwargs)
+    ckpt_dir = kwargs.get("checkpoint_dir")
+    can_resume = bool(ckpt_dir) and kwargs.get("checkpoint_every", 0) > 0
+    retries = 0
+    try:
+        while True:
+            report.attempts += 1
+            watchdog.beat("attempt", report.attempts)
+            try:
+                result = train_fn(**kwargs, resilience=ctx)
+                report.status = "ok"
+                return result, report
+            except RECOVERABLE as e:
+                report.error = f"{type(e).__name__}: {e}"
+                report.attempt_log.append({
+                    "attempt": report.attempts,
+                    "error": report.error,
+                    "action": None,
+                })
+                if retries < cfg.max_retries:
+                    retries += 1
+                    report.retries += 1
+                    report.attempt_log[-1]["action"] = "retry"
+                    if can_resume:
+                        kwargs["resume"] = True
+                    sleep(guards.backoff_delay(
+                        retries - 1, base_s=cfg.backoff_base_s,
+                        factor=cfg.backoff_factor,
+                        cap_s=cfg.backoff_cap_s, seed=seed))
+                    continue
+                if report.rollbacks < cfg.max_rollbacks and can_resume:
+                    # the newest checkpoint keeps reproducing the
+                    # failure (e.g. poison was saved before the guard
+                    # tripped): discard it and re-run from the previous
+                    # good step with a fresh retry budget
+                    step = _rollback_newest(ckpt_dir)
+                    report.rollbacks += 1
+                    retries = 0
+                    report.attempt_log[-1]["action"] = \
+                        f"rollback (dropped step {step})"
+                    kwargs["resume"] = True
+                    continue
+                report.status = "aborted"
+                report.attempt_log[-1]["action"] = "abort"
+                raise SupervisorAbort(
+                    f"training failed after {report.attempts} attempt(s), "
+                    f"{report.retries} retries, {report.rollbacks} "
+                    f"rollbacks: {report.error}", report) from e
+    finally:
+        watchdog.stop()
+        report.stalls = list(watchdog.stalls)
+        report.events = list(ctx.events)
+        report.quarantined = list(ctx.quarantined)
+        if injector is not None:
+            report.faults_fired = list(injector.fired)
+            report.faults_not_applicable = list(injector.not_applicable)
+
+
+def _rollback_newest(ckpt_dir: str) -> Optional[int]:
+    """Delete the newest valid checkpoint step; returns its number."""
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(ckpt_dir)
+    step = mgr.latest_step()
+    if step is not None:
+        shutil.rmtree(mgr.step_path(step), ignore_errors=True)
+    return step

@@ -410,6 +410,37 @@ def swap_read_slot(learner: common.TrainState, wbuf):
     return learner, db.write
 
 
+def with_cache(state: ActorLearnerState, cache) -> ActorLearnerState:
+    """Swap the packed actor cache — the resilience corruption/repair seam.
+
+    ``repro.resilience`` targets the in-state cache for ``bitflip_push``
+    faults (and restores a verified re-mint after a guard trips) through
+    this helper rather than reaching into the NamedTuple, so the state
+    shape stays a private detail of this module.
+    """
+    return state._replace(actor_cache=cache)
+
+
+def remint_cache(state: ActorLearnerState, actor_backend: str, *,
+                 kernel_backend: str = "auto"):
+    """Deterministically re-mint the packed cache from the stale params.
+
+    The integrity reference for ``repro.resilience.guards``: under
+    ``calib_batch == 0`` the in-jit sync-point repack is a pure function
+    of ``state.actor_params``, so a host-side re-mint reproduces it
+    bitwise (the repo's standing eager-vs-jit CPU parity anchor) and a
+    CRC mismatch against the carried cache means corruption, not drift.
+    Returns ``()`` untouched for fp32 actors.  With calibration enabled
+    the repack consumes live rollout observations that no longer exist
+    host-side, so there is no deterministic reference — callers skip
+    verification in that regime (``loops._guard_round``).
+    """
+    if state.actor_cache == () or not actorq.is_quantized(actor_backend):
+        return ()
+    return actorq.make_actor_cache(state.actor_params, actor_backend,
+                                   backend=kernel_backend)
+
+
 def _state_specs(state: ActorLearnerState, axis: str):
     """Partition specs for the state pytree: replay + divergence live on the
     actor axis, everything else (learner params/opt, actor copy + cache)

@@ -211,7 +211,8 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
           replay: str = "uniform", priority_exponent: float = 0.6,
           is_beta: float = 0.4,
           checkpoint_dir: Optional[str] = None, checkpoint_every: int = 0,
-          resume: bool = False, checkpoint_keep: int = 3) -> TrainResult:
+          resume: bool = False, checkpoint_keep: int = 3,
+          resilience: Any = None) -> TrainResult:
     """Train ``algo`` on ``env_name``.
 
     ``steps_per_call > 1`` enables the scan-fused driver (see module
@@ -269,6 +270,16 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
     cadence never alters chunk boundaries or the PRNG chain; anchor
     tests in ``tests/test_resume.py``).  ``checkpoint_keep`` bounds
     retention; see ``docs/checkpointing.md``.
+
+    ``resilience`` (optional) is a duck-typed hook object — in practice
+    ``repro.resilience.ResilienceContext`` — giving the self-healing
+    runtime its host-side injection/guard points: ``round_start`` /
+    ``after_round`` around every dispatched chunk, ``on_eval_cache`` on
+    the quantized eval mint, ``push`` around async param pushes, and
+    ``checkpoint_committed`` after saves.  All hooks run on the host
+    between jitted chunks, so an un-faulted guarded run follows the
+    exact chunk/PRNG schedule of a bare one (the bitwise-recovery
+    contract; see docs/resilience.md).  None (default) = zero overhead.
     """
     actorq.validate_actor_backend(actor_backend)
     actor_learner.validate_topology(topology)
@@ -305,7 +316,7 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
             actor_backend=actor_backend, k_init=k_init, k_env=k_env,
             k_run=k_run, checkpoint_dir=checkpoint_dir,
             checkpoint_every=checkpoint_every, resume=resume,
-            checkpoint_keep=checkpoint_keep)
+            checkpoint_keep=checkpoint_keep, resilience=resilience)
     if async_barrier:
         raise ValueError("async_barrier is an async-topology knob — pass "
                          "topology='async'")
@@ -365,70 +376,97 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
             divergences = [list(d) for d in extra["divergences"]]
     last_saved = i
     t0 = time.time()
-    while i < iterations:
-        # clip chunks to record boundaries so the recorded metrics/rewards
-        # (and their PRNG draws) match the per-step driver exactly
-        next_stop = min((i // record_every + 1) * record_every, iterations)
-        n = min(max(steps_per_call, 1), next_stop - i)
-        if n not in chunks:
-            chunks[n] = make_scan_iteration(iteration, n)
-        state, env_state, obs, k_run, metrics = chunks[n](
-            state, env_state, obs, k_run)
-        i += n
-        if i % record_every == 0 or i == iterations:
-            last = jax.tree_util.tree_map(lambda m: m[-1], metrics)
-            # actor-learner states carry the fp32 learner inside
-            lview = state.learner \
-                if isinstance(state, actor_learner.ActorLearnerState) \
-                else state
-            k_run, k_eval = jax.random.split(k_run)
-            if int8_act is not None:
-                # evaluate the actor configuration that actually collects
-                # data / gets deployed: with calib_batch the eval cache is
-                # calibrated (from the live obs) and runs the fused kernel
-                cb = getattr(cfg, "calib_batch", 0)
-                obs_g = obs.reshape((-1,) + tuple(env.spec.obs_shape))
-                qparams = actorq.make_actor_cache(
-                    lview.params, actor_backend,
-                    calib_obs=actorq.calib_slice(obs_g, cb) if cb else None,
-                    backend=kernel_backend)
-                r = float(evaluate(env, int8_act, qparams, k_eval,
-                                   eval_episodes,
-                                   max_steps=env.spec.max_steps))
-            else:
-                r = float(evaluate(
-                    env, det_act,
-                    (lview.params, lview.observers, lview.step), k_eval,
-                    eval_episodes, max_steps=env.spec.max_steps))
-            rewards.append(r)
-            variances.append(float(last.get(
-                "action_dist_variance", last.get("mean_q_var", 0.0))))
-            # staleness contract: the first true push happens at iteration
-            # sync_every, so record points before it would only see the
-            # init-time zeros (t=0 is not a sync — the actors hold a fresh
-            # copy by construction) and are skipped
-            if "divergence" in last and i >= sync_every:
-                divergences.append(
-                    np.asarray(last["divergence"]).tolist())
-        if ckptr is not None and checkpoint_every > 0 and (
-                i - last_saved >= checkpoint_every or
-                (i == iterations and i > last_saved)):
-            # end of the loop body: the saved key and metric lists
-            # already include this boundary's eval draws, so a resumed
-            # run continues the PRNG chain bitwise.  Cadence never clips
-            # chunks — the chunk-boundary sequence is a function of i
-            # alone, identical with or without checkpointing.
-            ckptr.save_async(
-                i, {"state": state, "env_state": env_state, "obs": obs,
-                    "key": k_run},
-                extra={"iteration": i, "rewards": rewards,
-                       "action_variances": variances,
-                       "divergences": divergences})
-            last_saved = i
-    wall = time.time() - t0
-    if ckptr is not None:
-        ckptr.wait()
-        ckptr.close()
+    try:
+        while i < iterations:
+            if resilience is not None:
+                resilience.round_start(i)
+                resilience.dropped_sync_na(i, topology)
+            # clip chunks to record boundaries so the recorded
+            # metrics/rewards (and their PRNG draws) match the per-step
+            # driver exactly
+            next_stop = min((i // record_every + 1) * record_every,
+                            iterations)
+            n = min(max(steps_per_call, 1), next_stop - i)
+            if n not in chunks:
+                chunks[n] = make_scan_iteration(iteration, n)
+            state, env_state, obs, k_run, metrics = chunks[n](
+                state, env_state, obs, k_run)
+            i += n
+            if resilience is not None:
+                state = _guard_round(resilience, state, i, cfg,
+                                     actor_backend, kernel_backend)
+            if i % record_every == 0 or i == iterations:
+                last = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+                # actor-learner states carry the fp32 learner inside
+                lview = state.learner \
+                    if isinstance(state, actor_learner.ActorLearnerState) \
+                    else state
+                k_run, k_eval = jax.random.split(k_run)
+                if int8_act is not None:
+                    # evaluate the actor configuration that actually
+                    # collects data / gets deployed: with calib_batch the
+                    # eval cache is calibrated (from the live obs) and
+                    # runs the fused kernel
+                    cb = getattr(cfg, "calib_batch", 0)
+                    obs_g = obs.reshape((-1,) + tuple(env.spec.obs_shape))
+
+                    def mint_eval(p=lview.params, og=obs_g, cb=cb):
+                        return actorq.make_actor_cache(
+                            p, actor_backend,
+                            calib_obs=actorq.calib_slice(og, cb)
+                            if cb else None,
+                            backend=kernel_backend)
+
+                    qparams = mint_eval()
+                    if resilience is not None:
+                        qparams = resilience.on_eval_cache(qparams, i,
+                                                           mint_eval)
+                    r = float(evaluate(env, int8_act, qparams, k_eval,
+                                       eval_episodes,
+                                       max_steps=env.spec.max_steps))
+                else:
+                    r = float(evaluate(
+                        env, det_act,
+                        (lview.params, lview.observers, lview.step),
+                        k_eval, eval_episodes,
+                        max_steps=env.spec.max_steps))
+                rewards.append(r)
+                variances.append(float(last.get(
+                    "action_dist_variance", last.get("mean_q_var", 0.0))))
+                # staleness contract: the first true push happens at
+                # iteration sync_every, so record points before it would
+                # only see the init-time zeros (t=0 is not a sync — the
+                # actors hold a fresh copy by construction) and are
+                # skipped
+                if "divergence" in last and i >= sync_every:
+                    divergences.append(
+                        np.asarray(last["divergence"]).tolist())
+            if ckptr is not None and checkpoint_every > 0 and (
+                    i - last_saved >= checkpoint_every or
+                    (i == iterations and i > last_saved)):
+                # end of the loop body: the saved key and metric lists
+                # already include this boundary's eval draws, so a resumed
+                # run continues the PRNG chain bitwise.  Cadence never
+                # clips chunks — the chunk-boundary sequence is a function
+                # of i alone, identical with or without checkpointing.
+                ckptr.save_async(
+                    i, {"state": state, "env_state": env_state, "obs": obs,
+                        "key": k_run},
+                    extra={"iteration": i, "rewards": rewards,
+                           "action_variances": variances,
+                           "divergences": divergences})
+                last_saved = i
+                if resilience is not None:
+                    resilience.checkpoint_committed(ckptr, i)
+        wall = time.time() - t0
+        if ckptr is not None:
+            ckptr.wait()
+    finally:
+        # an escaping fault/guard error must not leak the writer thread:
+        # the supervisor's next attempt opens its own checkpointer on the
+        # same directory (single-writer discipline holds per attempt)
+        if ckptr is not None:
+            ckptr.close()
     if isinstance(state, actor_learner.ActorLearnerState):
         state = state.learner
     return TrainResult(state=state, act_fn=act_fn, env=env, rewards=rewards,
@@ -436,11 +474,51 @@ def train(algo: str, env_name: str, *, iterations: int = 200,
                        algo_cfg=cfg, net=net, divergences=divergences)
 
 
+def _guard_round(resilience, state, step, cfg, actor_backend,
+                 kernel_backend):
+    """Topology-aware ``after_round`` adapter for the sync drivers.
+
+    Maps the resilience hooks onto the state shape: the fused driver's
+    ``TrainState`` exposes its params directly; ``ActorLearnerState``
+    additionally carries the packed actor cache, which is both the
+    bitflip_push target and — when minting is deterministic
+    (``calib_batch == 0``) — verifiable against a fresh repack of the
+    stale actor params (the in-jit sync mint and the eager re-mint are
+    the same ops on the same buffers; CPU bitwise parity is the repo's
+    standing fused-vs-per-step anchor).  All host-side: corruption and
+    verification never touch the jitted chunk schedule.
+    """
+    is_al = isinstance(state, actor_learner.ActorLearnerState)
+    if is_al:
+        state = resilience.after_round(
+            state, step,
+            learner_view=lambda s: s.learner.params,
+            set_learner=lambda s, p: s._replace(
+                learner=s.learner._replace(params=p)),
+            repack=lambda s, fn: s if s.actor_cache == ()
+            else actor_learner.with_cache(s, fn(s.actor_cache)))
+        cb = getattr(cfg, "calib_batch", 0)
+        if (actorq.is_quantized(actor_backend) and cb == 0
+                and state.actor_cache != ()
+                and step % max(resilience.guard.check_every, 1) == 0):
+            resilience.verify_state_cache(
+                state.actor_cache,
+                functools.partial(actor_learner.remint_cache, state,
+                                  actor_backend,
+                                  kernel_backend=kernel_backend),
+                step)
+        return state
+    return resilience.after_round(
+        state, step,
+        learner_view=lambda s: s.params,
+        set_learner=lambda s, p: s._replace(params=p))
+
+
 def _train_async(algo, env, net, cfg, *, iterations, record_every,
                  eval_episodes, steps_per_call, num_actors, sync_every,
                  mesh, barrier, actor_backend, k_init, k_env, k_run,
                  checkpoint_dir=None, checkpoint_every=0, resume=False,
-                 checkpoint_keep=3) -> TrainResult:
+                 checkpoint_keep=3, resilience=None) -> TrainResult:
     """The ``topology="async"`` host driver: overlapped dispatch.
 
     Each round dispatches one actor chunk (``steps_per_call`` rollouts
@@ -509,88 +587,127 @@ def _train_async(algo, env, net, cfg, *, iterations, record_every,
             snap_minted_at = int(extra["snap_minted_at"])
     last_saved = i
     t0 = time.time()
-    while i < iterations:
-        # clip rounds to record boundaries so evals land at the same
-        # iteration counts whatever the chunk size.  NB unlike the
-        # scan-fused driver the PRNG chain here is per-ROUND (one split
-        # serves the whole chunk), so different steps_per_call values are
-        # different — equally valid — trajectories; only the barrier
-        # anchor mode at steps_per_call=1 is bitwise-pinned to the
-        # synchronous topology
-        next_stop = min((i // record_every + 1) * record_every, iterations)
-        c = min(max(steps_per_call, 1), next_stop - i)
-        k_run, k_it = jax.random.split(k_run)
-        k_roll, k_up = jax.random.split(k_it)
-        if barrier:
-            wbuf = learner.extras.replay
-        env_state, obs, wbuf, _ = progs.actor_chunk(
-            snap, env_state, obs, wbuf, k_roll, n_chunks=c)
-        if barrier:
-            learner = learner._replace(
-                extras=learner.extras._replace(replay=wbuf))
-        learner, _ = progs.learner_chunk(
-            learner, k_up, n_updates=c * cfg.updates_per_iter)
-        total_updates += c * cfg.updates_per_iter
-        updates_since_push += c * cfg.updates_per_iter
-        if updates_since_push >= sync_every:
-            if not barrier:
-                learner, wbuf = actor_learner.swap_read_slot(learner, wbuf)
-            actor_lags.append(total_updates - snap_minted_at)
-            snap = progs.make_snapshot(learner, obs)
-            snap_minted_at = total_updates
-            div_futs.append(progs.divergence(learner, snap, obs))
-            updates_since_push = 0
-        i += c
-        if i % record_every == 0 or i == iterations:
-            k_run, k_eval = jax.random.split(k_run)
-            if int8_act is not None:
-                # same contract as the sync driver: eval the calibrated
-                # (fused) cache whenever the rollout actors run one
-                cb = getattr(cfg, "calib_batch", 0)
-                qparams = actorq.make_actor_cache(
-                    learner.params, actor_backend,
-                    calib_obs=actorq.calib_slice(obs, cb) if cb else None,
-                    backend=kernel_backend)
-                r = float(evaluate(env, int8_act, qparams, k_eval,
-                                   eval_episodes,
-                                   max_steps=env.spec.max_steps))
-            else:
-                r = float(evaluate(
-                    env, det_act,
-                    (learner.params, learner.observers, learner.step),
-                    k_eval, eval_episodes, max_steps=env.spec.max_steps))
-            rewards.append(r)
-            # neither async program surfaces an action-variance metric
-            # (same zeros the synchronous actor-learner topology records)
-            variances.append(0.0)
-        if ckptr is not None and checkpoint_every > 0 and (
-                i - last_saved >= checkpoint_every or
-                (i == iterations and i > last_saved)):
-            # saves land at natural round boundaries only (cadence never
-            # clips a round), so the per-round PRNG chain — and with it
-            # the whole trajectory — is identical with or without
-            # checkpointing.  Host-copying here blocks this thread on
-            # the in-flight chunks, but never inserts a device barrier
-            # into the dispatch chain itself.
-            div_futs = [np.asarray(d) for d in div_futs]
-            ckptr.save_async(
-                i, {"learner": learner,
-                    "wbuf": None if barrier else wbuf,
-                    "env_state": env_state, "obs": obs, "snap": snap,
-                    "key": k_run},
-                extra={"iteration": i, "rewards": rewards,
-                       "action_variances": variances,
-                       "divergences": [d.tolist() for d in div_futs],
-                       "actor_lags": actor_lags,
-                       "updates_since_push": updates_since_push,
-                       "total_updates": total_updates,
-                       "snap_minted_at": snap_minted_at})
-            last_saved = i
-    wall = time.time() - t0
-    divergences = [np.asarray(d).tolist() for d in div_futs]
-    if ckptr is not None:
-        ckptr.wait()
-        ckptr.close()
+    try:
+        while i < iterations:
+            if resilience is not None:
+                resilience.round_start(i)
+            # clip rounds to record boundaries so evals land at the same
+            # iteration counts whatever the chunk size.  NB unlike the
+            # scan-fused driver the PRNG chain here is per-ROUND (one
+            # split serves the whole chunk), so different steps_per_call
+            # values are different — equally valid — trajectories; only
+            # the barrier anchor mode at steps_per_call=1 is
+            # bitwise-pinned to the synchronous topology
+            next_stop = min((i // record_every + 1) * record_every,
+                            iterations)
+            c = min(max(steps_per_call, 1), next_stop - i)
+            k_run, k_it = jax.random.split(k_run)
+            k_roll, k_up = jax.random.split(k_it)
+            if barrier:
+                wbuf = learner.extras.replay
+            env_state, obs, wbuf, _ = progs.actor_chunk(
+                snap, env_state, obs, wbuf, k_roll, n_chunks=c)
+            if barrier:
+                learner = learner._replace(
+                    extras=learner.extras._replace(replay=wbuf))
+            learner, _ = progs.learner_chunk(
+                learner, k_up, n_updates=c * cfg.updates_per_iter)
+            total_updates += c * cfg.updates_per_iter
+            updates_since_push += c * cfg.updates_per_iter
+            i += c
+            if resilience is not None:
+                # nan_grad target + finite guard on the learner (the
+                # one host sync a guarded async run adds per round)
+                learner = resilience.after_round(
+                    learner, i,
+                    learner_view=lambda s: s.params,
+                    set_learner=lambda s, p: s._replace(params=p))
+            if updates_since_push >= sync_every and (
+                    resilience is None or resilience.sync_due(i)):
+                if not barrier:
+                    learner, wbuf = actor_learner.swap_read_slot(learner,
+                                                                 wbuf)
+                actor_lags.append(total_updates - snap_minted_at)
+                if resilience is not None:
+                    # guarded push: bitflip_push lands here, the CRC +
+                    # structural verify catches it, and a corrupted
+                    # payload is re-minted (bounded backoff) before it
+                    # can reach the actors
+                    snap = resilience.push(
+                        functools.partial(progs.make_snapshot, learner,
+                                          obs), i)
+                else:
+                    snap = progs.make_snapshot(learner, obs)
+                snap_minted_at = total_updates
+                div_futs.append(progs.divergence(learner, snap, obs))
+                updates_since_push = 0
+            if i % record_every == 0 or i == iterations:
+                k_run, k_eval = jax.random.split(k_run)
+                if int8_act is not None:
+                    # same contract as the sync driver: eval the
+                    # calibrated (fused) cache whenever the rollout
+                    # actors run one
+                    cb = getattr(cfg, "calib_batch", 0)
+
+                    def mint_eval(p=learner.params, og=obs, cb=cb):
+                        return actorq.make_actor_cache(
+                            p, actor_backend,
+                            calib_obs=actorq.calib_slice(og, cb)
+                            if cb else None,
+                            backend=kernel_backend)
+
+                    qparams = mint_eval()
+                    if resilience is not None:
+                        qparams = resilience.on_eval_cache(qparams, i,
+                                                           mint_eval)
+                    r = float(evaluate(env, int8_act, qparams, k_eval,
+                                       eval_episodes,
+                                       max_steps=env.spec.max_steps))
+                else:
+                    r = float(evaluate(
+                        env, det_act,
+                        (learner.params, learner.observers, learner.step),
+                        k_eval, eval_episodes,
+                        max_steps=env.spec.max_steps))
+                rewards.append(r)
+                # neither async program surfaces an action-variance
+                # metric (same zeros the synchronous actor-learner
+                # topology records)
+                variances.append(0.0)
+            if ckptr is not None and checkpoint_every > 0 and (
+                    i - last_saved >= checkpoint_every or
+                    (i == iterations and i > last_saved)):
+                # saves land at natural round boundaries only (cadence
+                # never clips a round), so the per-round PRNG chain —
+                # and with it the whole trajectory — is identical with
+                # or without checkpointing.  Host-copying here blocks
+                # this thread on the in-flight chunks, but never inserts
+                # a device barrier into the dispatch chain itself.
+                div_futs = [np.asarray(d) for d in div_futs]
+                ckptr.save_async(
+                    i, {"learner": learner,
+                        "wbuf": None if barrier else wbuf,
+                        "env_state": env_state, "obs": obs, "snap": snap,
+                        "key": k_run},
+                    extra={"iteration": i, "rewards": rewards,
+                           "action_variances": variances,
+                           "divergences": [d.tolist() for d in div_futs],
+                           "actor_lags": actor_lags,
+                           "updates_since_push": updates_since_push,
+                           "total_updates": total_updates,
+                           "snap_minted_at": snap_minted_at})
+                last_saved = i
+                if resilience is not None:
+                    resilience.checkpoint_committed(ckptr, i)
+        wall = time.time() - t0
+        divergences = [np.asarray(d).tolist() for d in div_futs]
+        if ckptr is not None:
+            ckptr.wait()
+    finally:
+        # never leak the writer thread past a fault/guard error — the
+        # supervisor's next attempt opens a fresh checkpointer
+        if ckptr is not None:
+            ckptr.close()
     return TrainResult(state=learner, act_fn=progs.act_fn, env=env,
                        rewards=rewards, action_variances=variances,
                        wall_time_s=wall, algo_cfg=cfg, net=net,

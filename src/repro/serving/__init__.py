@@ -7,14 +7,17 @@ on every param push (``server``), with per-session lifecycle accounting
 (``session``).  See ``docs/serving.md`` for the operator's view and
 ``docs/architecture.md`` for where this sits in the module map.
 """
-from repro.serving.batcher import (Batcher, Request, ServeResult,
+from repro.serving.batcher import (Batcher, DeadlineExceededError,
+                                   QueueFullError, Request, ServeResult,
                                    pad_rows, remove_padding, select_bucket)
 from repro.serving.server import (CacheEntry, PolicyServer,
-                                  greedy_calib_obs, make_fp32_act_fn)
+                                  WorkerCrashError, greedy_calib_obs,
+                                  make_fp32_act_fn)
 from repro.serving.session import Session, SessionTable, StepCounter
 
 __all__ = [
-    "Batcher", "Request", "ServeResult", "pad_rows", "remove_padding",
-    "select_bucket", "CacheEntry", "PolicyServer", "greedy_calib_obs",
+    "Batcher", "DeadlineExceededError", "QueueFullError", "Request",
+    "ServeResult", "pad_rows", "remove_padding", "select_bucket",
+    "CacheEntry", "PolicyServer", "WorkerCrashError", "greedy_calib_obs",
     "make_fp32_act_fn", "Session", "SessionTable", "StepCounter",
 ]

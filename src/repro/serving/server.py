@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -34,12 +35,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ptq
+from repro.resilience import guards as _guards
 from repro.rl import actorq
-from repro.serving.batcher import (Batcher, Request, pad_rows,
-                                   remove_padding, select_bucket)
+from repro.serving.batcher import (Batcher, DeadlineExceededError,
+                                   Request, pad_rows, remove_padding,
+                                   select_bucket)
 from repro.serving.session import SessionTable, StepCounter
 
 DEFAULT_BUCKETS = (8, 32, 128, 512)
+
+
+class WorkerCrashError(RuntimeError):
+    """Raised (by a fault hook or dispatch internals) to crash the
+    worker thread deliberately; the outer worker loop counts the crash
+    and auto-restarts the dispatch body (``stats()['worker']``)."""
 
 
 def make_fp32_act_fn(env_spec) -> Callable:
@@ -88,9 +97,11 @@ class CacheEntry:
     int4 — calibrated when the server has ``calib_batch > 0`` and the
     policy is an MLP — or the fp32 params), ``version`` the monotone push
     counter, ``nbytes`` its parameter-memory footprint, ``pushed_at`` a
-    ``perf_counter`` stamp.  Frozen: hot-swap publishes a new entry rather
-    than mutating, so concurrent dispatches can never observe a
-    half-updated cache.
+    ``perf_counter`` stamp, ``crc32`` the push-time payload checksum
+    (``resilience.guards.tree_crc32`` over every leaf; ``verify_current``
+    re-checks the live cache against it).  Frozen: hot-swap publishes a
+    new entry rather than mutating, so concurrent dispatches can never
+    observe a half-updated cache.
     """
 
     cache: Any
@@ -98,6 +109,7 @@ class CacheEntry:
     actor_backend: str
     nbytes: int
     pushed_at: float
+    crc32: int = 0
 
 
 def greedy_calib_obs(env, qparams, calib_batch: int, seed: int = 0, *,
@@ -146,12 +158,31 @@ class PolicyServer:
             push from the observations handed to ``push_params`` (MLP
             caches then serve through the single-pass fused kernel);
             0 keeps the dynamic per-layer path.
+        max_queue: admission-queue bound; a ``submit`` against a full
+            queue raises the typed ``batcher.QueueFullError`` (load
+            shedding) instead of growing the queue without bound.
+            0 (default) = unbounded.
+        request_deadline_s: per-request deadline; a request still
+            undispatched past it fails with ``DeadlineExceededError``
+            at dispatch time instead of being served stale.  0 = none.
+        verify_pushes: validate every pushed quantized cache's
+            structural invariants (``resilience.guards.validate_cache``)
+            before publishing; the push-time CRC is always recorded in
+            the entry (``verify_current`` re-checks it on demand).
+        fault_hook: optional callable ``hook(batch)`` run before each
+            worker dispatch — the fault-injection seam
+            (``resilience.ResilienceContext.serving_fault_hook``).  An
+            exception from it crashes the worker, which the outer loop
+            auto-restarts (counted in ``stats()['worker']``).
     """
 
     def __init__(self, env_spec, *, actor_backend: str = "int8",
                  kernel_backend: str = "auto",
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
-                 max_wait_us: int = 2000, calib_batch: int = 0):
+                 max_wait_us: int = 2000, calib_batch: int = 0,
+                 max_queue: int = 0, request_deadline_s: float = 0.0,
+                 verify_pushes: bool = True,
+                 fault_hook: Optional[Callable] = None):
         """See class docstring."""
         actorq.validate_actor_backend(actor_backend)
         if not buckets or list(buckets) != sorted(set(int(b) for b in
@@ -164,6 +195,10 @@ class PolicyServer:
         self.buckets = tuple(int(b) for b in buckets)
         self.max_wait_us = int(max_wait_us)
         self.calib_batch = int(calib_batch)
+        self.max_queue = int(max_queue)
+        self.request_deadline_s = float(request_deadline_s)
+        self.verify_pushes = bool(verify_pushes)
+        self._fault_hook = fault_hook
         if actorq.is_quantized(actor_backend):
             act = actorq.make_act_fn(env_spec, backend=kernel_backend)
         else:
@@ -173,8 +208,7 @@ class PolicyServer:
         self._calib_obs = None              # last calibration batch seen
         self._push_mu = threading.Lock()
         self._versions = StepCounter()
-        self.batcher = Batcher(max_batch=self.buckets[-1],
-                               max_wait_us=max_wait_us)
+        self.batcher = self._make_batcher()
         self.sessions = SessionTable()
         self.steps = StepCounter()          # dispatch (batch) tickets
         self._served = 0                    # requests answered
@@ -182,6 +216,19 @@ class PolicyServer:
         self._bucket_counts: Dict[int, int] = {b: 0 for b in self.buckets}
         self._worker: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        # failure observability (satellite: no silent continue/leak)
+        self._deadline_expired = 0
+        self._dispatch_failures = 0
+        self._consecutive_failures = 0
+        self._last_error: Optional[str] = None
+        self._worker_crashes = 0
+        self._worker_restarts = 0
+        self._wedged = 0
+
+    def _make_batcher(self) -> Batcher:
+        return Batcher(max_batch=self.buckets[-1],
+                       max_wait_us=self.max_wait_us,
+                       max_queue=self.max_queue)
 
     # -- cache registry / hot-swap -----------------------------------------
 
@@ -211,12 +258,32 @@ class PolicyServer:
                 backend=self.kernel_backend)
         else:
             cache = params
+        if self.verify_pushes and actorq.is_quantized(self.actor_backend):
+            # integrity gate at the swap boundary: a structurally
+            # corrupt pack (NaN scales, bad code widths) raises its
+            # typed error HERE and the live entry keeps serving
+            _guards.validate_cache(cache, what="pushed serving cache")
+        crc = _guards.tree_crc32(cache)
         with self._push_mu:
             entry = CacheEntry(cache=cache, version=self._versions.next(),
                                actor_backend=self.actor_backend,
                                nbytes=ptq.tree_nbytes(cache),
-                               pushed_at=time.perf_counter())
+                               pushed_at=time.perf_counter(), crc32=crc)
             self._entry = entry              # the atomic hot-swap
+        return entry
+
+    def verify_current(self) -> CacheEntry:
+        """Re-checksum the live cache against its push-time CRC.
+
+        Raises ``resilience.guards.IntegrityError`` on any bit
+        difference (in-memory corruption of a published payload);
+        returns the verified entry otherwise.
+        """
+        entry = self._entry
+        if entry is None:
+            raise RuntimeError("no actor cache: call push_params first")
+        _guards.verify_crc(entry.cache, entry.crc32,
+                           what=f"serving cache v{entry.version}")
         return entry
 
     @property
@@ -242,14 +309,19 @@ class PolicyServer:
 
         ``obs`` is a single observation (no batch axis) of
         ``env_spec.obs_shape``; raises ``KeyError`` for unknown/closed
-        sessions and ``ValueError`` on a shape mismatch.
+        sessions, ``ValueError`` on a shape mismatch, and
+        ``batcher.QueueFullError`` when ``max_queue`` is set and the
+        admission queue is at capacity (typed load shedding — the
+        caller's backpressure signal).
         """
         self.sessions.checkout(sid)
         obs = np.asarray(obs, dtype=np.float32)
         if obs.shape != tuple(self.env_spec.obs_shape):
             raise ValueError(f"obs shape {obs.shape} != spec "
                              f"{tuple(self.env_spec.obs_shape)}")
-        req = Request(sid, obs)
+        deadline = (time.perf_counter() + self.request_deadline_s
+                    if self.request_deadline_s > 0 else None)
+        req = Request(sid, obs, deadline=deadline)
         self.batcher.put(req)
         return req
 
@@ -265,10 +337,27 @@ class PolicyServer:
         entry = self._entry   # single snapshot read — hot-swap safety
         if entry is None:
             raise RuntimeError("no actor cache: call push_params first")
+        # expire dead requests before paying for their compute: a waiter
+        # past its deadline gets the typed error now instead of a stale
+        # action later
+        live = requests
+        if any(r.deadline is not None for r in requests):
+            now = time.perf_counter()
+            live = []
+            for r in requests:
+                if r.expired(now):
+                    self._deadline_expired += 1
+                    r.fail(DeadlineExceededError(
+                        f"request for session {r.sid} expired "
+                        f"{now - r.deadline:.4f}s before dispatch"))
+                else:
+                    live.append(r)
+            if not live:
+                return
         try:
-            n = len(requests)
+            n = len(live)
             bucket = select_bucket(n, self.buckets)
-            obs = pad_rows(np.stack([r.obs for r in requests]), bucket)
+            obs = pad_rows(np.stack([r.obs for r in live]), bucket)
             out = self._step_fn(entry.cache, jnp.asarray(obs))
             # unpad on the HOST: slicing the jax array would compile one
             # slice program per distinct live batch size (a fresh ~50ms
@@ -279,11 +368,11 @@ class PolicyServer:
             self._served += n
             self._padded += bucket - n
             self._bucket_counts[bucket] += 1
-            for r, a in zip(requests, actions):
+            for r, a in zip(live, actions):
                 self.sessions.on_step(r.sid, entry.version)
                 r.complete(a, entry.version, step, t_done)
         except Exception as e:              # fail waiters, don't hang them
-            for r in requests:
+            for r in live:
                 r.fail(e)
             raise
 
@@ -315,15 +404,59 @@ class PolicyServer:
     # -- dispatch loop -----------------------------------------------------
 
     def _run(self) -> None:
-        """Worker body: drain the admission queue until stopped."""
+        """Worker body: drain the admission queue until stopped.
+
+        A failed dispatch has already failed its own requests
+        individually, so the loop keeps serving — but never silently:
+        every failure increments ``dispatch_failures``, stamps
+        ``last_error``, and consecutive failures back off exponentially
+        (capped at 100ms) so a persistently broken dispatch path cannot
+        spin the CPU at full speed failing the whole queue.  An
+        exception from the fault hook crashes the worker deliberately;
+        the outer ``_worker_main`` loop counts it and restarts.
+        """
+        consecutive = 0
         while not self._stop.is_set():
             batch = self.batcher.get_batch(timeout=0.05)
-            if batch:
+            if not batch:
+                continue
+            if self._fault_hook is not None:
                 try:
-                    self.serve_batch(batch)
-                except Exception:
-                    # requests already failed individually; keep serving
-                    continue
+                    self._fault_hook(batch)
+                except BaseException as e:
+                    for r in batch:     # never leave waiters hanging
+                        r.fail(e)
+                    raise
+            try:
+                self.serve_batch(batch)
+                consecutive = 0
+                self._consecutive_failures = 0
+            except Exception as e:
+                self._dispatch_failures += 1
+                consecutive += 1
+                self._consecutive_failures = consecutive
+                self._last_error = f"{type(e).__name__}: {e}"
+                self._stop.wait(
+                    min(0.001 * (2 ** min(consecutive, 7)), 0.1))
+
+    def _worker_main(self) -> None:
+        """Outer worker loop: auto-restart a crashed dispatch body.
+
+        Crash/restart counters surface in ``stats()['worker']`` — an
+        injected ``WorkerCrashError`` (or any fault-hook exception)
+        lands here, is counted, and the dispatch loop comes back up
+        without dropping the server.
+        """
+        while not self._stop.is_set():
+            try:
+                self._run()
+                return                     # clean stop
+            except BaseException as e:
+                self._worker_crashes += 1
+                self._last_error = f"{type(e).__name__}: {e}"
+                if self._stop.is_set():
+                    return
+                self._worker_restarts += 1
 
     def start(self) -> "PolicyServer":
         """Start the background dispatch thread (idempotent).
@@ -334,26 +467,40 @@ class PolicyServer:
         """
         if self._worker is None or not self._worker.is_alive():
             if self.batcher.closed:
-                self.batcher = Batcher(max_batch=self.buckets[-1],
-                                       max_wait_us=self.max_wait_us)
+                self.batcher = self._make_batcher()
             self._stop.clear()
-            self._worker = threading.Thread(target=self._run,
+            self._worker = threading.Thread(target=self._worker_main,
                                             name="policy-server",
                                             daemon=True)
             self._worker.start()
         return self
 
-    def stop(self) -> None:
+    def stop(self, join_timeout: float = 5.0) -> None:
         """Stop dispatching; queued-but-unserved requests fail fast.
-        ``start`` brings the server back up afterwards."""
+
+        A worker that fails to join within ``join_timeout`` is wedged
+        (stuck inside a dispatch): it is REPORTED — ``stats()`` shows
+        ``worker.wedged`` and a ``RuntimeWarning`` fires — instead of
+        silently leaked.  The reference is kept so a later ``stop`` can
+        observe it finally exiting.  ``start`` brings the server back
+        up afterwards.
+        """
         self._stop.set()
         drained = self.batcher.close()
         err = RuntimeError("server stopped")
         for r in drained:
             r.fail(err)
         if self._worker is not None:
-            self._worker.join(timeout=5.0)
-            self._worker = None
+            self._worker.join(timeout=join_timeout)
+            if self._worker.is_alive():
+                self._wedged += 1
+                warnings.warn(
+                    f"policy-server worker failed to stop within "
+                    f"{join_timeout}s (wedged in dispatch) — thread "
+                    f"leaked, see stats()['worker']", RuntimeWarning,
+                    stacklevel=2)
+            else:
+                self._worker = None
 
     def __enter__(self) -> "PolicyServer":
         return self.start()
@@ -380,8 +527,12 @@ class PolicyServer:
         Keys: ``served`` (requests answered), ``dispatches`` (batches),
         ``padding_rows`` (total padded rows — the bucketing overhead),
         ``bucket_counts`` (dispatches per bucket), ``version`` (live cache
-        version or -1), ``cache_nbytes``, plus the ``sessions`` table
-        counters.
+        version or -1), ``cache_nbytes``, ``rejected`` (requests shed by
+        the ``max_queue`` bound), ``deadline_expired``, ``last_error``
+        (most recent dispatch/worker failure, or None), the ``worker``
+        health sub-dict (``dispatch_failures``, ``consecutive_failures``,
+        ``crashes``, ``restarts``, ``wedged``, ``alive``), plus the
+        ``sessions`` table counters.
         """
         entry = self._entry
         return {
@@ -391,5 +542,17 @@ class PolicyServer:
             "bucket_counts": dict(self._bucket_counts),
             "version": -1 if entry is None else entry.version,
             "cache_nbytes": 0 if entry is None else entry.nbytes,
+            "rejected": self.batcher.rejected,
+            "deadline_expired": self._deadline_expired,
+            "last_error": self._last_error,
+            "worker": {
+                "dispatch_failures": self._dispatch_failures,
+                "consecutive_failures": self._consecutive_failures,
+                "crashes": self._worker_crashes,
+                "restarts": self._worker_restarts,
+                "wedged": self._wedged,
+                "alive": (self._worker is not None
+                          and self._worker.is_alive()),
+            },
             "sessions": self.sessions.stats(),
         }

@@ -11,7 +11,7 @@ import check_doc_links  # noqa: E402
 
 def test_docs_tree_exists():
     for name in ("architecture.md", "serving.md", "contracts.md",
-                 "checkpointing.md"):
+                 "checkpointing.md", "resilience.md"):
         assert (ROOT / "docs" / name).is_file(), f"docs/{name} missing"
 
 

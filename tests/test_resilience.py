@@ -1,0 +1,499 @@
+"""Chaos suite for the self-healing ActorQ runtime (ISSUE 10).
+
+Layers, bottom up:
+
+* guard units — CRC sensitivity, finite checks with leaf-path diagnosis,
+  structural cache validation, deterministic-jitter backoff, bounded
+  retry.
+* fault units — plan parsing round-trip, deterministic bit flips,
+  poisoning, the injector's fire-once-across-attempts contract.
+* checkpoint integrity — a torn ``leaves.msgpack`` is rejected by the
+  manifest checksum on restore and skipped by ``latest_step``.
+* serving hardening — bounded-queue shedding, request deadlines, worker
+  crash auto-restart, hot-swap integrity.
+* the chaos matrix — one supervised run per topology under a plan
+  covering every applicable fault kind; every fault fires and the run
+  recovers (``dropped_sync`` records not-applicable under in-jit syncs).
+* the acceptance regression — a supervised run that retries, *and* one
+  that rolls back a poisoned checkpoint, each finishing with params
+  bitwise identical to the clean never-faulted run (the host-side
+  injection + PR-8 bitwise-resume contract make recovery invisible).
+"""
+import dataclasses
+import os
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import resilience as rz
+from repro.checkpoint import CheckpointManager
+from repro.resilience import faults, guards, supervisor
+from repro.rl import loops
+from repro.rl.networks import make_network
+
+SMALL = dict(n_envs=2, rollout_steps=2, updates_per_iter=2,
+             buffer_size=64, batch_size=8, warmup=8)
+
+
+def _leaves(tree):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+
+
+def _kwargs(topo, *, iterations=6, ckpt_dir=None, ckpt_every=3, **kw):
+    multi = topo != "fused"
+    out = dict(algo="dqn", env_name="cartpole", iterations=iterations,
+               seed=3, record_every=3, eval_episodes=2,
+               actor_backend="int8", algo_overrides=dict(SMALL),
+               net_kwargs=dict(hidden=(16,)), topology=topo,
+               num_actors=2 if multi else 1,
+               sync_every=2 if multi else 1,
+               checkpoint_dir=ckpt_dir,
+               checkpoint_every=ckpt_every if ckpt_dir else 0)
+    out.update(kw)
+    return out
+
+
+def _mlp_cache(backend="int8"):
+    from repro.rl import actorq
+    params = make_network((4,), 2, hidden=(8,)).init(jax.random.PRNGKey(0))
+    return params, actorq.make_actor_cache(params, backend)
+
+
+# ---------------------------------------------------------------------------
+# guards
+# ---------------------------------------------------------------------------
+
+def test_crc_detects_single_bitflip():
+    _, cache = _mlp_cache()
+    crc = guards.tree_crc32(cache)
+    flipped = faults.bitflip_tree(cache, seed=7, nbits=1)
+    assert guards.tree_crc32(flipped) != crc
+    guards.verify_crc(cache, crc, what="cache")
+    with pytest.raises(guards.IntegrityError, match="checksum mismatch"):
+        guards.verify_crc(flipped, crc, what="cache")
+
+
+def test_crc_covers_dtype_and_shape():
+    a = {"x": np.zeros(4, np.float32)}
+    b = {"x": np.zeros(4, np.int32)}      # same bytes, different dtype
+    c = {"x": np.zeros((2, 2), np.float32)}
+    crcs = {guards.tree_crc32(t) for t in (a, b, c)}
+    assert len(crcs) == 3
+
+
+def test_check_finite_names_offending_leaf():
+    tree = {"w": np.ones(3, np.float32),
+            "b": np.array([1.0, np.nan], np.float32)}
+    with pytest.raises(guards.NonFiniteError, match=r"\['b'\]"):
+        guards.check_finite(tree, what="params")
+    guards.check_finite({"w": np.ones(3, np.float32)})
+    # int leaves are not finite-checked
+    guards.check_finite({"codes": np.array([1, 2], np.int8)})
+
+
+def test_all_finite_is_jittable():
+    tree = {"w": np.ones(3, np.float32)}
+    assert bool(jax.jit(guards.all_finite)(tree))
+    tree["w"] = np.array([1.0, np.inf], np.float32)
+    assert not bool(jax.jit(guards.all_finite)(tree))
+
+
+def test_validate_cache_catches_scale_corruption():
+    _, cache = _mlp_cache()
+    guards.validate_cache(cache)
+
+    def poison_delta(x):
+        if isinstance(x, guards.PackedTensor):
+            return x._replace(delta=np.full_like(np.asarray(x.delta),
+                                                 np.nan))
+        return x
+
+    bad = jax.tree_util.tree_map(
+        poison_delta, cache,
+        is_leaf=lambda x: isinstance(x, guards.PackedTensor))
+    with pytest.raises(guards.CodeRangeError, match="delta"):
+        guards.validate_cache(bad)
+
+
+def test_validate_cache_catches_packed_size_mismatch():
+    _, cache = _mlp_cache("int4")
+    guards.validate_cache(cache)
+
+    def truncate(x):
+        if isinstance(x, guards.PackedTensor) and x.orig_shape is not None:
+            codes = np.asarray(x.codes)
+            return x._replace(codes=codes.reshape(-1)[:-1])
+        return x
+
+    bad = jax.tree_util.tree_map(
+        truncate, cache,
+        is_leaf=lambda x: isinstance(x, guards.PackedTensor))
+    with pytest.raises(guards.CodeRangeError, match="packed"):
+        guards.validate_cache(bad)
+
+
+def test_backoff_deterministic_and_capped():
+    a = guards.backoff_delay(2, base_s=0.01, factor=2.0, cap_s=1.0, seed=7)
+    b = guards.backoff_delay(2, base_s=0.01, factor=2.0, cap_s=1.0, seed=7)
+    assert a == b
+    assert a >= 0.04                        # base * factor**2, plus jitter
+    assert guards.backoff_delay(50, base_s=0.01, factor=2.0, cap_s=0.3,
+                                seed=7) == 0.3
+    assert guards.deterministic_jitter(1, 2) != \
+        guards.deterministic_jitter(1, 3)
+
+
+def test_retry_call_bounded():
+    calls, slept = [], []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise guards.IntegrityError("transient")
+        return "ok"
+
+    out = guards.retry_call(flaky, retries=2, base_s=0.01, factor=2.0,
+                            cap_s=0.1, retry_on=guards.GuardError,
+                            sleep=slept.append)
+    assert out == "ok" and len(calls) == 3 and len(slept) == 2
+
+    calls.clear()
+    with pytest.raises(guards.IntegrityError):
+        guards.retry_call(lambda: (calls.append(1),
+                                   (_ for _ in ()).throw(
+                                       guards.IntegrityError("always")))[1],
+                          retries=1, base_s=0.01, factor=2.0, cap_s=0.1,
+                          retry_on=guards.GuardError, sleep=lambda s: None)
+    assert len(calls) == 2                  # 1 + retries
+
+
+# ---------------------------------------------------------------------------
+# faults
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_parse_roundtrip():
+    spec = "7:nan_grad@3,bitflip_push@5:nbits=3,actor_crash@8:shard=1"
+    plan = faults.FaultPlan.parse(spec)
+    assert plan.seed == 7 and len(plan.faults) == 3
+    assert plan.faults[1].nbits == 3 and plan.faults[2].shard == 1
+    assert faults.FaultPlan.parse(plan.spec_string()) == plan
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        faults.FaultPlan.parse("1:meteor@3")
+    with pytest.raises(ValueError, match="SEED"):
+        faults.FaultPlan.parse("nan_grad@3")
+    with pytest.raises(ValueError, match="nan|inf"):
+        faults.FaultSpec(kind="nan_grad", step=1, mode="zero")
+
+
+def test_bitflip_tree_deterministic_and_minimal():
+    _, cache = _mlp_cache()
+    a = faults.bitflip_tree(cache, seed=11, nbits=2)
+    b = faults.bitflip_tree(cache, seed=11, nbits=2)
+    assert guards.tree_crc32(a) == guards.tree_crc32(b)
+    assert guards.tree_crc32(a) != guards.tree_crc32(cache)
+    # structure, dtypes and shapes survive the corruption
+    la, lc = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(cache)
+    assert [(np.asarray(x).dtype, np.asarray(x).shape) for x in la] == \
+        [(np.asarray(x).dtype, np.asarray(x).shape) for x in lc]
+    # at most nbits bytes differ across the flattened payload
+    diff = sum(int(np.sum(np.asarray(x).reshape(-1).view(np.uint8)
+                          != np.asarray(y).reshape(-1).view(np.uint8)))
+               for x, y in zip(la, lc))
+    assert 1 <= diff <= 2
+
+
+def test_poison_params_modes():
+    params = {"w": np.ones((2, 2), np.float32),
+              "codes": np.ones(4, np.int8)}
+    assert np.isnan(np.asarray(
+        faults.poison_params(params, "nan")["w"]).reshape(-1)[0])
+    assert np.isinf(np.asarray(
+        faults.poison_params(params, "inf")["w"]).reshape(-1)[0])
+    # int leaves are never poisoned
+    np.testing.assert_array_equal(
+        faults.poison_params(params, "nan")["codes"], params["codes"])
+
+
+def test_injector_fires_once_across_attempts():
+    plan = faults.FaultPlan.parse("3:nan_grad@4")
+    inj = faults.FaultInjector(plan)
+    assert inj.pending("nan_grad", 3) is None
+    # chunked drivers overshoot the target round: first opportunity wins
+    assert inj.take("nan_grad", 6) is not None
+    assert inj.take("nan_grad", 6) is None   # consumed; never re-fires
+    inj.record_fired("nan_grad", 6)
+    assert inj.injected_count == 1
+
+
+def test_injector_repeat_budget():
+    plan = faults.FaultPlan.parse("3:straggler@2:repeat=2")
+    inj = faults.FaultInjector(plan)
+    assert inj.take("straggler", 2) is not None
+    assert inj.take("straggler", 3) is not None
+    assert inj.take("straggler", 4) is None
+
+
+def test_watchdog_stall_episodes():
+    t = [0.0]
+    wd = supervisor.Watchdog(timeout_s=1.0, clock=lambda: t[0])
+    wd.beat("round", 1)
+    t[0] = 2.5
+    wd.check()
+    wd.check()                  # same episode: recorded once
+    assert len(wd.stalls) == 1 and wd.stalls[0]["phase"] == "round"
+    wd.beat("push", 2)          # re-arms
+    t[0] = 5.0
+    wd.check()
+    assert len(wd.stalls) == 2 and wd.stalls[1]["phase"] == "push"
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity (satellite b)
+# ---------------------------------------------------------------------------
+
+def test_torn_checkpoint_rejected_and_skipped(tmp_path):
+    d = str(tmp_path)
+    loops.train(**_kwargs("fused", ckpt_dir=d, ckpt_every=3))
+    mgr = CheckpointManager(d)
+    assert mgr.steps() == [3, 6]
+    faults.truncate_file(os.path.join(mgr.step_path(6), "leaves.msgpack"))
+    assert not mgr.step_valid(6)
+    assert mgr.step_valid(3)
+    assert mgr.latest_step() == 3           # the torn step is skipped
+    tmpl = [np.zeros(tuple(s["shape"]), np.dtype(s["dtype"]))
+            for s in mgr.manifest(6)["leaves"]]
+    with pytest.raises(ValueError, match="checksum mismatch"):
+        mgr.restore(6, tmpl)
+    mgr.restore(3, tmpl)                    # the valid one still loads
+
+
+def test_resume_skips_torn_newest_checkpoint(tmp_path):
+    d = str(tmp_path)
+    ref = loops.train(**_kwargs("fused", iterations=9))
+    loops.train(**_kwargs("fused", iterations=6, ckpt_dir=d, ckpt_every=3))
+    mgr = CheckpointManager(d)
+    faults.truncate_file(os.path.join(mgr.step_path(6), "leaves.msgpack"))
+    res = loops.train(**_kwargs("fused", iterations=9, ckpt_dir=d,
+                                ckpt_every=3, resume=True))
+    # resumed from step 3 (the newest *valid* step) and still lands
+    # bitwise on the uninterrupted trajectory
+    for a, b in zip(_leaves(ref.state.params), _leaves(res.state.params)):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# serving hardening (satellite a)
+# ---------------------------------------------------------------------------
+
+def _serve_setup(**srv_kw):
+    from repro.rl.env import EnvSpec
+    from repro.serving import PolicyServer
+
+    spec = EnvSpec(name="resilience-test", obs_shape=(4,), n_actions=2)
+    params = make_network(spec.obs_shape, 2, hidden=(8,)).init(
+        jax.random.PRNGKey(0))
+    srv = PolicyServer(spec, actor_backend="int8", buckets=(4, 8),
+                       max_wait_us=200, **srv_kw)
+    srv.push_params(params)
+    return srv, params
+
+
+def test_bounded_queue_sheds_with_typed_error():
+    from repro.serving import QueueFullError
+
+    srv, _ = _serve_setup(max_queue=2)
+    obs = np.zeros(4, np.float32)
+    sid = srv.open_session()
+    srv.submit(sid, obs), srv.submit(sid, obs)   # fill the bound
+    with pytest.raises(QueueFullError, match="admission queue full"):
+        srv.submit(sid, obs)
+    assert srv.stats()["rejected"] == 1
+    # draining the queue re-opens admission
+    batch = srv.batcher.get_batch(timeout=1.0)
+    srv.serve_batch(batch)
+    srv.submit(sid, obs)
+
+
+def test_request_deadline_expires_with_typed_error():
+    from repro.serving import DeadlineExceededError
+
+    srv, _ = _serve_setup(request_deadline_s=0.005)
+    sid = srv.open_session()
+    r = srv.submit(sid, np.zeros(4, np.float32))
+    time.sleep(0.02)                        # worker not running: it waits
+    batch = srv.batcher.get_batch(timeout=1.0)
+    srv.serve_batch(batch)                  # pre-filters the expired one
+    with pytest.raises(DeadlineExceededError):
+        r.result(timeout=1.0)
+    assert srv.stats()["deadline_expired"] == 1
+    assert srv.stats()["served"] == 0
+
+
+def test_worker_crash_restarts_and_counts():
+    plan = faults.FaultPlan.parse("5:actor_crash@1")
+    ctx = faults.ResilienceContext(faults.FaultInjector(plan))
+    srv, _ = _serve_setup(fault_hook=ctx.serving_fault_hook())
+    obs = np.zeros(4, np.float32)
+    sid = srv.open_session()
+    with srv:
+        assert srv.submit(sid, obs).result(timeout=30) is not None
+        # second dispatched batch crashes the worker; it auto-restarts
+        crashed = srv.submit(sid, obs)
+        with pytest.raises(faults.ActorCrashError):
+            crashed.result(timeout=30)
+        assert srv.submit(sid, obs).result(timeout=30) is not None
+    stats = srv.stats()
+    assert stats["worker"]["crashes"] >= 1
+    assert stats["worker"]["restarts"] >= 1
+    assert stats["last_error"] and "ActorCrashError" in stats["last_error"]
+    assert stats["worker"]["wedged"] == 0
+
+
+def test_hot_swap_integrity_verified():
+    srv, params = _serve_setup()
+    entry = srv.current
+    assert entry.crc32 == guards.tree_crc32(entry.cache)
+    srv.verify_current()
+    srv._entry = dataclasses.replace(
+        entry, cache=faults.bitflip_tree(entry.cache, seed=3))
+    with pytest.raises(guards.IntegrityError, match="checksum"):
+        srv.verify_current()
+
+
+# ---------------------------------------------------------------------------
+# the chaos matrix: every fault kind, all three topologies
+# ---------------------------------------------------------------------------
+
+# per topology: a plan covering every kind that can fire there, plus
+# dropped_sync everywhere (recorded not-applicable under in-jit syncs)
+MATRIX = (
+    ("fused",
+     "5:actor_crash@2,straggler@3:delay_s=0.01,nan_grad@4,"
+     "bitflip_push@4,crash_commit@3,dropped_sync@2",
+     {"actor_crash", "straggler", "nan_grad", "bitflip_push",
+      "crash_commit"}, {"dropped_sync"}),
+    ("actor-learner",
+     "7:actor_crash@2,straggler@3:delay_s=0.01,nan_grad@5:mode=inf,"
+     "bitflip_push@4,crash_commit@3,dropped_sync@2",
+     {"actor_crash", "straggler", "nan_grad", "bitflip_push",
+      "crash_commit"}, {"dropped_sync"}),
+    ("async",
+     "9:actor_crash@2,straggler@3:delay_s=0.01,nan_grad@5,"
+     "bitflip_push@4,crash_commit@3,dropped_sync@6",
+     {"actor_crash", "straggler", "nan_grad", "bitflip_push",
+      "crash_commit", "dropped_sync"}, set()),
+)
+
+
+@pytest.mark.parametrize("topo,spec,expect_fired,expect_na",
+                         [m for m in MATRIX],
+                         ids=[m[0] for m in MATRIX])
+def test_chaos_matrix_recovers(tmp_path, topo, spec, expect_fired,
+                               expect_na):
+    plan = rz.FaultPlan.parse(spec)
+    kw = _kwargs(topo, iterations=8, ckpt_dir=str(tmp_path), ckpt_every=2)
+    res, rep = rz.supervise(kw, plan=plan,
+                            config=rz.SupervisorConfig(max_retries=4))
+    assert rep.status == "ok"
+    assert {k for k, _, _ in rep.faults_fired} == expect_fired
+    assert {k for k, _, _ in rep.faults_not_applicable} == expect_na
+    assert len(rep.faults_fired) + len(rep.faults_not_applicable) \
+        == len(plan.faults)
+    assert rep.retries >= 1                 # at least the actor_crash
+    if "actor_crash" in expect_fired:
+        assert rep.quarantined == [0]
+    assert all(np.isfinite(r) for r in res.rewards)
+
+
+def test_supervisor_abort_carries_report(tmp_path):
+    # a fault that re-fires on every attempt exhausts the ladder
+    plan = rz.FaultPlan.parse("3:actor_crash@2:repeat=99")
+    kw = _kwargs("fused", iterations=4, ckpt_dir=str(tmp_path),
+                 ckpt_every=2)
+    cfg = rz.SupervisorConfig(max_retries=1, max_rollbacks=1,
+                              backoff_base_s=0.001, backoff_cap_s=0.002)
+    with pytest.raises(rz.SupervisorAbort) as ei:
+        rz.supervise(kw, plan=plan, config=cfg)
+    rep = ei.value.report
+    assert rep.status == "aborted"
+    # initial + retry, then the rollback resets the retry budget:
+    # initial-from-rolled-back-step + retry again = 4 attempts
+    assert rep.attempts == 4
+    assert rep.retries == 2 and rep.rollbacks == 1
+    assert rep.attempt_log[-1]["action"] == "abort"
+    assert "ActorCrashError" in rep.error
+    assert "aborted" in rep.summary()
+    assert rep.to_dict()["retries"] == 2
+
+
+def test_unrecoverable_errors_raise_through():
+    def broken(**kw):
+        raise TypeError("a programming error, not a fault")
+
+    with pytest.raises(TypeError):
+        rz.supervise(dict(algo="dqn", env_name="cartpole"),
+                     train_fn=broken)
+
+
+# ---------------------------------------------------------------------------
+# acceptance regression: recovery is bitwise-invisible
+# ---------------------------------------------------------------------------
+
+def test_retry_recovery_bitwise_identical(tmp_path):
+    """A retried run lands bitwise on the clean trajectory (fused)."""
+    ref = loops.train(**_kwargs("fused", iterations=6))
+    plan = rz.FaultPlan.parse("5:nan_grad@4")
+    res, rep = rz.supervise(
+        _kwargs("fused", iterations=6, ckpt_dir=str(tmp_path),
+                ckpt_every=3), plan=plan)
+    assert rep.retries == 1 and rep.rollbacks == 0
+    for a, b in zip(_leaves(ref.state.params), _leaves(res.state.params)):
+        np.testing.assert_array_equal(a, b)
+    assert ref.rewards == res.rewards
+
+
+def test_rollback_recovery_bitwise_identical(tmp_path):
+    """Poison saved into a checkpoint forces a rollback; the re-run from
+    the previous good step still lands bitwise on the clean trajectory.
+
+    ``check_every=2`` delays detection past the round-3 checkpoint
+    (``record_every=6`` keeps the eval-cache guard out of round 3 too),
+    so the poisoned params are committed at step 3 and every resume from
+    it re-trips the guard at round 4 — only discarding step 3 (the
+    rollback) recovers, exactly the escalation the supervisor exists
+    for."""
+    ref = loops.train(**_kwargs("actor-learner", iterations=6,
+                                record_every=6))
+    plan = rz.FaultPlan.parse("5:nan_grad@3")
+    guard = rz.GuardConfig(check_every=2)
+    cfg = rz.SupervisorConfig(max_retries=1, max_rollbacks=1,
+                              backoff_base_s=0.001, backoff_cap_s=0.002)
+    res, rep = rz.supervise(
+        _kwargs("actor-learner", iterations=6, record_every=6,
+                ckpt_dir=str(tmp_path), ckpt_every=1),
+        plan=plan, guard=guard, config=cfg)
+    assert rep.rollbacks == 1
+    for a, b in zip(_leaves(ref.state.params), _leaves(res.state.params)):
+        np.testing.assert_array_equal(a, b)
+    assert ref.rewards == res.rewards
+
+
+@pytest.mark.slow
+def test_supervised_run_still_converges(tmp_path):
+    """Chaos must not cost convergence: a supervised DQN run under a
+    multi-fault plan reaches the same reward regime as the clean run."""
+    plan = rz.FaultPlan.parse(
+        "11:actor_crash@5,nan_grad@10,bitflip_push@15,crash_commit@12")
+    kw = dict(algo="dqn", env_name="cartpole", iterations=60, seed=0,
+              record_every=20, eval_episodes=4, actor_backend="int8",
+              topology="actor-learner", num_actors=2, sync_every=2,
+              checkpoint_dir=str(tmp_path), checkpoint_every=5)
+    ref = loops.train(**{k: v for k, v in kw.items()
+                         if not k.startswith("checkpoint")})
+    res, rep = rz.supervise(kw, plan=plan)
+    assert rep.status == "ok" and len(rep.faults_fired) == 4
+    for a, b in zip(_leaves(ref.state.params), _leaves(res.state.params)):
+        np.testing.assert_array_equal(a, b)
+    assert res.rewards[-1] == ref.rewards[-1]
